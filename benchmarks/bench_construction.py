@@ -1,0 +1,39 @@
+"""Paper table: initial-construction quality (guide §2.2 / [15]).
+
+Columns: graph, construction, J(C,D,Π), seconds.  Reproduces the paper's
+claim ordering: hierarchytopdown ≤ hierarchybottomup < growing < identity
+< random on structured communication graphs.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import Hierarchy, grid3d, qap_objective, random_geometric
+from repro.core.construction import CONSTRUCTIONS, construct
+
+BENCH_GRAPHS = {
+    "grid3d_8x8x8": (lambda: grid3d(8, 8, 8),
+                     Hierarchy((16, 8, 4), (1.0, 10.0, 100.0))),
+    "torus_8x8x8": (lambda: grid3d(8, 8, 8, torus=True),
+                    Hierarchy((16, 8, 4), (1.0, 10.0, 100.0))),
+    "rgg_512": (lambda: random_geometric(512, 0.08, seed=7),
+                Hierarchy((16, 8, 4), (1.0, 10.0, 100.0))),
+}
+
+
+def run(report):
+    for gname, (make, h) in BENCH_GRAPHS.items():
+        g = make()
+        for name in sorted(CONSTRUCTIONS):
+            t0 = time.perf_counter()
+            perm = construct(name, g, h, seed=0, preconfiguration="eco")
+            dt = time.perf_counter() - t0
+            j = qap_objective(g, h, perm)
+            report(f"construction/{gname}/{name}", dt * 1e6, f"J={j:.0f}")
+
+
+if __name__ == "__main__":
+    run(lambda n, us, d: print(f"{n},{us:.0f},{d}"))

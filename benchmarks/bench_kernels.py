@@ -1,0 +1,57 @@
+"""Kernel-path benchmarks: Pallas (interpret) correctness-scale runs +
+the jnp reference timings that stand in for device timings on CPU."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.core import Hierarchy, grid3d
+from repro.core.objective import dense_gain_matrix
+from repro.kernels import ops
+
+
+def run(report):
+    rng = np.random.default_rng(0)
+    n = 256
+    C = rng.random((n, n)) * (rng.random((n, n)) < 0.1)
+    C = np.triu(C, 1) + np.triu(C, 1).T
+    D = np.triu(rng.random((n, n)), 1)
+    D = D + D.T
+    perm = rng.permutation(n)
+
+    t0 = time.perf_counter()
+    G_np = dense_gain_matrix(C, D, perm)
+    t_np = time.perf_counter() - t0
+    report("swap_gain/numpy_n256", t_np * 1e6, "host spec")
+
+    gm = jax.jit(lambda c, d, p: ops.gain_matrix_ref(c, d, p))
+    out = gm(C, D, perm)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    jax.block_until_ready(gm(C, D, perm))
+    t_ref = time.perf_counter() - t0
+    err = float(np.max(np.abs(np.asarray(out) - G_np)))
+    report("swap_gain/jnp_ref_n256", t_ref * 1e6, f"err={err:.1e}")
+
+    t0 = time.perf_counter()
+    G_k = ops.gain_matrix(C, D, perm, tile=128, interpret=True)
+    jax.block_until_ready(G_k)
+    t_k = time.perf_counter() - t0
+    err = float(np.max(np.abs(np.asarray(G_k) - G_np)))
+    report("swap_gain/pallas_interpret_n256", t_k * 1e6,
+           f"err={err:.1e};interpret-mode(no TPU)")
+
+    g = grid3d(8, 8, 8)
+    h = Hierarchy((16, 8, 4), (1.0, 10.0, 100.0))
+    perm = rng.permutation(512)
+    t0 = time.perf_counter()
+    j = ops.objective(g, h, perm, interpret=True)
+    t_o = time.perf_counter() - t0
+    report("qap_objective/pallas_interpret_512", t_o * 1e6, f"J={j:.0f}")
+
+
+if __name__ == "__main__":
+    run(lambda n, us, d: print(f"{n},{us:.0f},{d}"))

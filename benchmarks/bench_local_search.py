@@ -1,0 +1,79 @@
+"""Paper table: local-search neighborhoods (guide §2.1 / [15]).
+
+Time vs quality for N², N² pruned, N_C, N_C^d (d = 2, 10) from a random
+construction — the paper's claim: communication-graph neighborhoods reach
+N²-class quality at a fraction of the evaluations.  Also benchmarks the
+sparse O(deg) gain vs the dense O(n) update it replaces.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import Hierarchy, grid3d, qap_objective
+from repro.core.construction import construct
+from repro.core.local_search import local_search, parallel_sweep_search, \
+    communication_pairs
+from repro.core.objective import batched_swap_gains, swap_gain
+
+H = Hierarchy((16, 8, 4), (1.0, 10.0, 100.0))
+
+VARIANTS = [
+    ("nsquare", {}),
+    ("nsquarepruned", {}),
+    ("communication_d1", {"neighborhood": "communication",
+                          "communication_neighborhood_dist": 1}),
+    ("communication_d2", {"neighborhood": "communication",
+                          "communication_neighborhood_dist": 2}),
+    ("communication_d10", {"neighborhood": "communication",
+                           "communication_neighborhood_dist": 10}),
+]
+
+
+def run(report):
+    g = grid3d(8, 8, 8)
+    j0 = qap_objective(g, H, construct("random", g, H, seed=0))
+    for name, kw in VARIANTS:
+        perm = construct("random", g, H, seed=0)
+        nbhd = kw.get("neighborhood", name)
+        t0 = time.perf_counter()
+        stats = local_search(
+            g, H, perm, neighborhood=nbhd,
+            communication_neighborhood_dist=kw.get(
+                "communication_neighborhood_dist", 10), seed=0)
+        dt = time.perf_counter() - t0
+        report(f"local_search/grid512/{name}", dt * 1e6,
+               f"J={stats.final_objective:.0f};evals={stats.evaluated};"
+               f"J0={j0:.0f}")
+
+    # TPU-adapted batched sweep
+    perm = construct("random", g, H, seed=0)
+    t0 = time.perf_counter()
+    stats = parallel_sweep_search(g, H, perm, communication_pairs(g, 2))
+    dt = time.perf_counter() - t0
+    report("local_search/grid512/parallel_sweep_d2", dt * 1e6,
+           f"J={stats.final_objective:.0f};evals={stats.evaluated}")
+
+    # sparse vs dense gain evaluation cost (the guide's O(deg) vs O(n))
+    perm = construct("random", g, H, seed=0)
+    pairs = communication_pairs(g, 1)[:512]
+    t0 = time.perf_counter()
+    for u, v in pairs:
+        swap_gain(g, H, perm, int(u), int(v))
+    t_sparse = time.perf_counter() - t0
+    C, D = g.to_dense(), H.distance_matrix()
+    t0 = time.perf_counter()
+    for u, v in pairs:
+        # dense O(n) update á la Brandfass: two full row recomputations
+        du = (C[u] * D[perm[u]][perm]).sum() - (C[u] * D[perm[v]][perm]).sum()
+        dv = (C[v] * D[perm[v]][perm]).sum() - (C[v] * D[perm[u]][perm]).sum()
+        _ = du + dv
+    t_dense = time.perf_counter() - t0
+    report("gain_eval/sparse_per_512", t_sparse * 1e6, "O(deg) oracle")
+    report("gain_eval/dense_per_512", t_dense * 1e6, "O(n) rows")
+
+
+if __name__ == "__main__":
+    run(lambda n, us, d: print(f"{n},{us:.0f},{d}"))

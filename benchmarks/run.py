@@ -1,0 +1,24 @@
+"""Benchmark harness — one module per paper table.  Prints
+``name,us_per_call,derived`` CSV rows (harness contract)."""
+
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    from . import (bench_construction, bench_kernels, bench_local_search,
+                   bench_mesh_mapping)
+
+    def report(name: str, us: float, derived: str = ""):
+        print(f"{name},{us:.0f},{derived}", flush=True)
+
+    print("name,us_per_call,derived")
+    bench_construction.run(report)
+    bench_local_search.run(report)
+    bench_kernels.run(report)
+    bench_mesh_mapping.run(report)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,13 @@
+"""Serving example: batched prefill + KV/SSM-cache decode across three
+model families (attention, SSM, hybrid-MoE).
+
+Run:  PYTHONPATH=src python examples/serve_lm.py
+"""
+
+from repro.launch.serve import serve
+
+for arch in ("granite-3-2b", "rwkv6-3b", "jamba-v0.1-52b"):
+    out = serve(arch, batch=2, prompt_len=24, gen=8, smoke=True)
+    print(f"{arch:18s} prefill={out['prefill_s']:.2f}s "
+          f"decode={out['decode_tok_per_s']:.1f} tok/s "
+          f"sample={out['tokens'][0, :6].tolist()}")

@@ -1,0 +1,34 @@
+"""End-to-end driver: train a reduced granite-family model for a few
+hundred steps on synthetic data, with checkpointing and restart.
+
+Run:  PYTHONPATH=src python examples/train_lm.py [--steps 300]
+
+Loss must drop well below ln(vocab) — the data has causal structure.
+"""
+
+import argparse
+import tempfile
+
+from repro.launch.train import train
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--arch", default="granite-3-2b")
+    args = ap.parse_args()
+
+    with tempfile.TemporaryDirectory() as ckpt:
+        out = train(args.arch, steps=args.steps, global_batch=8,
+                    seq_len=128, smoke=True, ckpt_dir=ckpt,
+                    ckpt_every=50, log_every=20)
+        print(f"final loss: {out['final_loss']:.4f}")
+        # simulate a failure + restart from the latest checkpoint
+        out2 = train(args.arch, steps=args.steps + 20, global_batch=8,
+                     seq_len=128, smoke=True, ckpt_dir=ckpt,
+                     ckpt_every=50, log_every=20)
+        print(f"after restart+20 steps: {out2['final_loss']:.4f}")
+
+
+if __name__ == "__main__":
+    main()

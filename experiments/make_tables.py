@@ -1,0 +1,56 @@
+"""Build EXPERIMENTS.md §Dry-run/§Roofline tables from dry-run JSONs."""
+
+import json
+from pathlib import Path
+
+DIR = Path(__file__).parent / "dryrun"
+
+
+def load():
+    rows = []
+    for f in sorted(DIR.glob("*.json")):
+        rows.append(json.loads(f.read_text()))
+    return rows
+
+
+def fmt_s(x):
+    if x == 0:
+        return "0"
+    if x < 1e-3:
+        return f"{x*1e6:.0f}µs"
+    if x < 1:
+        return f"{x*1e3:.1f}ms"
+    return f"{x:.2f}s"
+
+
+def roofline_table(rows, mesh="single"):
+    out = ["| arch | shape | step | mem/dev | fits | compute | memory | "
+           "ICI | DCN | bound | roofline frac | model/HLO flops | "
+           "MFU bound |",
+           "|---|---|---|---|---|---|---|---|---|---|---|---|---|"]
+    order = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2,
+             "long_500k": 3}
+    rows = [r for r in rows if r.get("mesh") == mesh]
+    rows.sort(key=lambda r: (r["arch"], order.get(r["shape"], 9)))
+    for r in rows:
+        if r["status"] == "skipped":
+            out.append(f"| {r['arch']} | {r['shape']} | — | — | — | — | — "
+                       f"| — | — | skipped | — | — | — |")
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['kind']} "
+            f"| {r['per_device_bytes']/2**30:.1f}G "
+            f"| {'✓' if r['fits_16g'] else '✗'} "
+            f"| {fmt_s(r['compute_s'])} | {fmt_s(r['memory_s'])} "
+            f"| {fmt_s(r['ici_s'])} | {fmt_s(r['dcn_s'])} "
+            f"| {r['bound']} | {r['roofline_fraction']:.3f} "
+            f"| {r['model_flops_ratio']:.2f} | {r['mfu_bound']:.3f} |")
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    rows = load()
+    print("## single-pod (16×16 = 256 chips)\n")
+    print(roofline_table(rows, "single"))
+    print("\n## multi-pod (2×16×16 = 512 chips)\n")
+    print(roofline_table(rows, "multi"))

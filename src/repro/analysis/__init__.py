@@ -1,0 +1,7 @@
+"""Dry-run analysis: HLO cost extraction + roofline model."""
+
+from .hlo import HloCost, analyze, parse_module
+from .roofline import Roofline, roofline_from_cost
+
+__all__ = ["HloCost", "analyze", "parse_module", "Roofline",
+           "roofline_from_cost"]

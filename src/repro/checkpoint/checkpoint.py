@@ -1,0 +1,148 @@
+"""Sharded, async, elastic checkpointing.
+
+Layout (one directory per step):
+    step_000100/
+      manifest.json      — pytree structure, shapes, dtypes, mesh shape
+      shard_<host>.npz   — this host's param/opt shards (here: 1 host)
+
+Properties required at fleet scale (DESIGN §7):
+  * async — `save_async` snapshots to host RAM on the training thread and
+    writes in a background thread; the device step continues immediately,
+  * atomic — writes go to ``<dir>.tmp`` then rename, so a host failure
+    mid-save never corrupts the latest checkpoint,
+  * elastic — `restore` reshapes/reshards to a *different* mesh: the
+    manifest stores logical shapes, so a survivor fleet with fewer data
+    shards just re-slices (parameters are logically replicated across DP;
+    FSDP shards re-partition along the stored logical axes),
+  * self-describing — restore needs no model code, only the manifest.
+"""
+
+from __future__ import annotations
+
+import json
+import shutil
+import threading
+from pathlib import Path
+
+import jax
+import ml_dtypes
+import numpy as np
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree.flatten(tree)
+    return leaves, treedef
+
+
+def _savable(arr: np.ndarray) -> np.ndarray:
+    """npz can't store ml_dtypes (bf16 → void '|V2'); view as uint16 and
+    record the true dtype in the manifest."""
+    if arr.dtype == ml_dtypes.bfloat16:
+        return arr.view(np.uint16)
+    return arr
+
+
+def _restore_dtype(arr: np.ndarray, dtype_str: str) -> np.ndarray:
+    if dtype_str == "bfloat16" and arr.dtype != ml_dtypes.bfloat16:
+        return arr.view(ml_dtypes.bfloat16)
+    return arr
+
+
+def tree_paths(tree) -> list[str]:
+    paths = []
+    jax.tree.map_with_path(
+        lambda p, _: paths.append(jax.tree_util.keystr(p)), tree)
+    return paths
+
+
+class CheckpointManager:
+    def __init__(self, directory, keep: int = 3):
+        self.dir = Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+        self._thread: threading.Thread | None = None
+
+    # ----------------------------------------------------------------- save
+    def save(self, step: int, state, mesh_shape=None) -> Path:
+        """Synchronous atomic save."""
+        leaves, _ = _flatten(state)
+        leaves = [np.asarray(x) for x in leaves]
+        host = {f"leaf_{i}": _savable(x) for i, x in enumerate(leaves)}
+        paths = tree_paths(state)
+        final = self.dir / f"step_{step:08d}"
+        tmp = self.dir / f"step_{step:08d}.tmp"
+        if tmp.exists():
+            shutil.rmtree(tmp)
+        tmp.mkdir(parents=True)
+        np.savez(tmp / "shard_0.npz", **host)
+        manifest = {
+            "step": step,
+            "paths": paths,
+            "shapes": [list(x.shape) for x in leaves],
+            "dtypes": [str(x.dtype) for x in leaves],
+            "mesh_shape": list(mesh_shape) if mesh_shape else None,
+            "n_hosts": 1,
+        }
+        (tmp / "manifest.json").write_text(json.dumps(manifest))
+        if final.exists():
+            shutil.rmtree(final)
+        tmp.rename(final)
+        self._gc()
+        return final
+
+    def save_async(self, step: int, state, mesh_shape=None):
+        """Snapshot on the caller thread (device→host copy), write in the
+        background.  Joins any in-flight save first (ordering)."""
+        self.wait()
+        snapshot = jax.tree.map(lambda x: np.asarray(x), state)
+        self._thread = threading.Thread(
+            target=self.save, args=(step, snapshot, mesh_shape),
+            daemon=True)
+        self._thread.start()
+
+    def wait(self):
+        if self._thread is not None and self._thread.is_alive():
+            self._thread.join()
+        self._thread = None
+
+    def _gc(self):
+        steps = sorted(self.all_steps())
+        for s in steps[:-self.keep]:
+            shutil.rmtree(self.dir / f"step_{s:08d}", ignore_errors=True)
+
+    # -------------------------------------------------------------- restore
+    def all_steps(self) -> list[int]:
+        return sorted(int(p.name.split("_")[1]) for p in self.dir.glob(
+            "step_*") if p.is_dir() and not p.name.endswith(".tmp"))
+
+    def latest_step(self) -> int | None:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, step: int, target_tree, mesh=None, shardings=None):
+        """Restore into the structure of ``target_tree``; if ``mesh`` and
+        ``shardings`` are given, place shards directly onto the (possibly
+        different-size) target mesh — the elastic-restart path."""
+        d = self.dir / f"step_{step:08d}"
+        manifest = json.loads((d / "manifest.json").read_text())
+        data = np.load(d / "shard_0.npz")
+        leaves = [_restore_dtype(data[f"leaf_{i}"], dt)
+                  for i, dt in enumerate(manifest["dtypes"])]
+        _, treedef = _flatten(target_tree)
+        t_leaves = jax.tree.leaves(target_tree)
+        if len(t_leaves) != len(leaves):
+            raise ValueError(
+                f"checkpoint has {len(leaves)} leaves, target expects "
+                f"{len(t_leaves)} — structure changed since save")
+        for saved, tgt, path in zip(leaves, t_leaves, manifest["paths"]):
+            if tuple(saved.shape) != tuple(tgt.shape):
+                raise ValueError(f"shape mismatch at {path}: "
+                                 f"{saved.shape} vs {tgt.shape}")
+        if mesh is not None and shardings is not None:
+            s_leaves = jax.tree.leaves(
+                shardings, is_leaf=lambda x: hasattr(x, "spec"))
+            leaves = [jax.device_put(x, s)
+                      for x, s in zip(leaves, s_leaves)]
+        else:
+            leaves = [jax.numpy.asarray(x) for x in leaves]
+        return jax.tree.unflatten(treedef, leaves)

@@ -1,0 +1,35 @@
+"""`evaluator` — compute the QAP objective of a given mapping (guide §4.4)."""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+import numpy as np
+
+from ..core import Hierarchy, qap_objective, read_metis
+from ..core.comm_model import logical_traffic_summary
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(prog="evaluator", description=__doc__)
+    ap.add_argument("file", help="Path to file (graph/model).")
+    ap.add_argument("--input_mapping", required=True)
+    ap.add_argument("--hierarchy_parameter_string", required=True)
+    ap.add_argument("--distance_parameter_string", required=True)
+    args = ap.parse_args(argv)
+
+    g = read_metis(args.file)
+    h = Hierarchy.from_strings(args.hierarchy_parameter_string,
+                               args.distance_parameter_string)
+    perm = np.loadtxt(args.input_mapping, dtype=np.int64)
+    if sorted(perm) != list(range(g.n)):
+        sys.exit("evaluator: mapping is not a permutation of 0..n-1")
+    j = qap_objective(g, h, perm)
+    print(f"objective J(C,D,Pi) = {j:.6g}")
+    for k, v in logical_traffic_summary(g, h, perm).items():
+        print(f"  {k} = {v:.6g}")
+
+
+if __name__ == "__main__":
+    main()

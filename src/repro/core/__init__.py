@@ -1,0 +1,28 @@
+"""VieM core: sparse quadratic assignment process mapping (the paper's
+contribution), reimplemented as a composable library.
+
+Public surface:
+  graph        — CSR communication graphs, Metis IO, generators
+  hierarchy    — hierarchical topologies + online distance oracle
+  objective    — sparse QAP objective, O(deg) swap gains, dense gain matrix
+  partition    — multilevel perfectly-balanced partitioner (KaHIP stand-in)
+  construction — identity/random/growing/hierarchybottomup/hierarchytopdown
+  local_search — N², N² pruned, N_C^d neighborhoods
+  mapping      — map_processes() top-level API
+  comm_model   — communication-graph extraction from compiled XLA programs
+"""
+
+from .graph import CommGraph, GraphFormatError, from_dense, from_edges, \
+    grid3d, random_geometric, read_metis, validate, write_metis
+from .hierarchy import Hierarchy, supermuc_like, tpu_v5e_fleet
+from .mapping import MappingResult, map_processes
+from .objective import dense_gain_matrix, qap_objective, \
+    qap_objective_dense, swap_gain
+
+__all__ = [
+    "CommGraph", "GraphFormatError", "from_dense", "from_edges", "grid3d",
+    "random_geometric", "read_metis", "validate", "write_metis",
+    "Hierarchy", "supermuc_like", "tpu_v5e_fleet",
+    "MappingResult", "map_processes",
+    "dense_gain_matrix", "qap_objective", "qap_objective_dense", "swap_gain",
+]

@@ -1,0 +1,145 @@
+"""Initial mapping construction algorithms (guide §2.2, §4.1).
+
+``--construction_algorithm=`` one of
+  identity, random, growing, hierarchybottomup, hierarchytopdown (default).
+
+All return ``perm`` with perm[u] = PE assigned to process u (a bijection on
+[0, n)).  n must equal the hierarchy's PE count.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from .graph import CommGraph, from_edges
+from .hierarchy import Hierarchy
+from .partition import PartitionConfig, partition
+
+
+def quotient(g: CommGraph, labels: np.ndarray, k: int) -> CommGraph:
+    """Cluster quotient graph: vertices = blocks, edge weights = summed
+    inter-block communication (the guide's `generate_model` semantics)."""
+    u, v, w = g.edge_list()
+    cu, cv = labels[u], labels[v]
+    keep = cu != cv
+    cu, cv, w = cu[keep], cv[keep], w[keep]
+    lo, hi = np.minimum(cu, cv), np.maximum(cu, cv)
+    vw = np.bincount(labels, weights=g.vwgt, minlength=k)
+    if len(lo) == 0:
+        return CommGraph(np.zeros(k + 1, np.int64), np.zeros(0, np.int64),
+                         np.zeros(0), vw)
+    return from_edges(k, lo, hi, w, vwgt=vw)
+
+
+# ------------------------------------------------------------ constructions
+def identity_construction(g: CommGraph, h: Hierarchy, **_) -> np.ndarray:
+    return np.arange(g.n, dtype=np.int64)
+
+
+def random_construction(g: CommGraph, h: Hierarchy, seed: int = 0,
+                        **_) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    return rng.permutation(g.n).astype(np.int64)
+
+
+def growing_construction(g: CommGraph, h: Hierarchy, seed: int = 0,
+                         **_) -> np.ndarray:
+    """Greedy graph growing: repeatedly take the unassigned process with the
+    strongest communication to the already-assigned set and give it the next
+    PE — consecutive PEs are hierarchy-close, so strongly-communicating
+    processes land close."""
+    rng = np.random.default_rng(seed)
+    n = g.n
+    perm = np.full(n, -1, dtype=np.int64)
+    attraction = np.full(n, -np.inf)
+    start = int(rng.integers(n))
+    attraction[start] = 0.0
+    for rank in range(n):
+        u = int(np.argmax(attraction))
+        if attraction[u] == -np.inf:   # disconnected component: restart
+            u = int(np.nonzero(perm < 0)[0][0])
+        perm[u] = rank
+        attraction[u] = -np.inf
+        nb, wt = g.neighbors(u), g.weights(u)
+        una = perm[nb] < 0
+        upd = nb[una]
+        a = attraction[upd]
+        attraction[upd] = np.where(a == -np.inf, wt[una], a + wt[una])
+    return perm
+
+
+def hierarchy_top_down(g: CommGraph, h: Hierarchy, seed: int = 0,
+                       cfg: PartitionConfig | None = None, **_) -> np.ndarray:
+    """The guide's most successful strategy: recursively partition G_C into
+    a_k perfectly balanced blocks, assign each block to one level-k subtree,
+    recurse; base case (a_1 processes per processor) assigns ranks
+    arbitrarily (all intra-processor distances are equal)."""
+    if g.n != h.n_pe:
+        raise ValueError(f"n processes ({g.n}) != n PEs ({h.n_pe})")
+    cfg = cfg or PartitionConfig()
+    perm = np.full(g.n, -1, dtype=np.int64)
+    factors = h.factors
+
+    def rec(nodes: np.ndarray, lvl: int, base: int, seed_: int):
+        if lvl <= 1 or len(nodes) <= factors[0]:
+            perm[nodes] = base + np.arange(len(nodes))
+            return
+        a = factors[lvl - 1]
+        sub, back = g.subgraph(nodes)
+        labels = partition(sub, a, cfg, seed=seed_)
+        stride = len(nodes) // a
+        for b in range(a):
+            rec(back[labels == b], lvl - 1, base + b * stride, seed_ * a + b + 1)
+
+    rec(np.arange(g.n, dtype=np.int64), h.k, 0, seed)
+    return perm
+
+
+def hierarchy_bottom_up(g: CommGraph, h: Hierarchy, seed: int = 0,
+                        cfg: PartitionConfig | None = None, **_) -> np.ndarray:
+    """Bottom-up: cluster processes into processors (blocks of a_1), build
+    the quotient graph, cluster processors into nodes (blocks of a_2), …
+    PE index = mixed-radix digits collected along the way."""
+    if g.n != h.n_pe:
+        raise ValueError(f"n processes ({g.n}) != n PEs ({h.n_pe})")
+    cfg = cfg or PartitionConfig()
+    strides = h.strides
+    offset = np.zeros(g.n, dtype=np.int64)      # accumulated PE offset
+    cluster = np.arange(g.n, dtype=np.int64)    # current cluster of process
+    cur = g
+    for lvl, a in enumerate(h.factors):
+        n_blocks = cur.n // a
+        if n_blocks <= 1:
+            labels = np.zeros(cur.n, dtype=np.int64)
+        else:
+            labels = partition(cur, n_blocks, cfg, seed=seed + lvl)
+        # digit = position of each cluster within its block (stable order)
+        digit = np.zeros(cur.n, dtype=np.int64)
+        for b in range(max(1, n_blocks)):
+            members = np.nonzero(labels == b)[0]
+            digit[members] = np.arange(len(members))
+        offset += digit[cluster] * strides[lvl]
+        cluster = labels[cluster]
+        cur = quotient(cur, labels, max(1, n_blocks))
+        # clusters are equal-sized by construction — balance currency for
+        # the next level is cluster cardinality, so weights reset to 1.
+        cur.vwgt = np.ones(cur.n)
+    return offset
+
+
+CONSTRUCTIONS = {
+    "identity": identity_construction,
+    "random": random_construction,
+    "growing": growing_construction,
+    "hierarchybottomup": hierarchy_bottom_up,
+    "hierarchytopdown": hierarchy_top_down,
+}
+
+
+def construct(name: str, g: CommGraph, h: Hierarchy, seed: int = 0,
+              preconfiguration: str = "eco") -> np.ndarray:
+    if name not in CONSTRUCTIONS:
+        raise ValueError(f"unknown construction_algorithm {name!r}; "
+                         f"choose from {sorted(CONSTRUCTIONS)}")
+    cfg = PartitionConfig.preconfiguration(preconfiguration)
+    return CONSTRUCTIONS[name](g, h, seed=seed, cfg=cfg)

@@ -1,0 +1,297 @@
+"""Sparse communication graphs in CSR form + Metis/Chaco/DIMACS file format.
+
+This is the substrate of the paper: the communication matrix C is *always*
+handled as a graph G_C = ({1..n}, E[C]) with E[C] = {(u,v) | C_uv != 0}
+(guide §2.2).  We keep forward and backward edges explicitly (symmetric CSR),
+exactly like the Metis format the guide mandates (§3.1).
+"""
+
+from __future__ import annotations
+
+import io
+from dataclasses import dataclass
+
+import numpy as np
+
+
+class GraphFormatError(ValueError):
+    """Raised when an input file violates the guide's format rules (§3.3)."""
+
+
+@dataclass
+class CommGraph:
+    """Undirected weighted graph in CSR form.
+
+    Attributes:
+      xadj:    (n+1,) int64 — CSR row pointers.
+      adjncy:  (2m,)  int64 — neighbor ids, both directions stored.
+      adjwgt:  (2m,)  float64 — edge weights, mirrored on both directions.
+      vwgt:    (n,)   float64 — vertex weights (ignored for one-to-one
+               mappings per guide §3.1, but kept for the partitioner).
+    """
+
+    xadj: np.ndarray
+    adjncy: np.ndarray
+    adjwgt: np.ndarray
+    vwgt: np.ndarray
+
+    # ------------------------------------------------------------------ basic
+    @property
+    def n(self) -> int:
+        return len(self.xadj) - 1
+
+    @property
+    def num_edges(self) -> int:
+        """Number of undirected edges m (each stored twice in CSR)."""
+        return len(self.adjncy) // 2
+
+    def degree(self, u: int) -> int:
+        return int(self.xadj[u + 1] - self.xadj[u])
+
+    def neighbors(self, u: int) -> np.ndarray:
+        return self.adjncy[self.xadj[u]:self.xadj[u + 1]]
+
+    def weights(self, u: int) -> np.ndarray:
+        return self.adjwgt[self.xadj[u]:self.xadj[u + 1]]
+
+    def edge_list(self) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """(u, v, w) arrays with u < v — each undirected edge once."""
+        src = np.repeat(np.arange(self.n, dtype=np.int64),
+                        np.diff(self.xadj))
+        mask = src < self.adjncy
+        return src[mask], self.adjncy[mask], self.adjwgt[mask]
+
+    def total_edge_weight(self) -> float:
+        return float(self.adjwgt.sum()) / 2.0
+
+    def to_dense(self) -> np.ndarray:
+        """Dense symmetric communication matrix C (test/small-n use only)."""
+        C = np.zeros((self.n, self.n))
+        src = np.repeat(np.arange(self.n), np.diff(self.xadj))
+        C[src, self.adjncy] = self.adjwgt
+        return C
+
+    def subgraph(self, nodes: np.ndarray) -> tuple["CommGraph", np.ndarray]:
+        """Induced subgraph; returns (graph, mapping local->global)."""
+        nodes = np.asarray(nodes, dtype=np.int64)
+        glob2loc = -np.ones(self.n, dtype=np.int64)
+        glob2loc[nodes] = np.arange(len(nodes))
+        xadj = [0]
+        adjncy: list[np.ndarray] = []
+        adjwgt: list[np.ndarray] = []
+        for u in nodes:
+            nb = self.neighbors(u)
+            wt = self.weights(u)
+            loc = glob2loc[nb]
+            keep = loc >= 0
+            adjncy.append(loc[keep])
+            adjwgt.append(wt[keep])
+            xadj.append(xadj[-1] + int(keep.sum()))
+        return (
+            CommGraph(
+                xadj=np.asarray(xadj, dtype=np.int64),
+                adjncy=(np.concatenate(adjncy) if adjncy else
+                        np.zeros(0, np.int64)).astype(np.int64),
+                adjwgt=(np.concatenate(adjwgt) if adjwgt else
+                        np.zeros(0)).astype(np.float64),
+                vwgt=self.vwgt[nodes].copy(),
+            ),
+            nodes,
+        )
+
+
+# --------------------------------------------------------------------- build
+def from_edges(n: int, u: np.ndarray, v: np.ndarray, w: np.ndarray,
+               vwgt: np.ndarray | None = None) -> CommGraph:
+    """Build a symmetric CSR graph from one-directional edge lists.
+
+    Parallel edges are merged by summing weights; self loops are rejected
+    (the guide's format forbids both, §3.3 — `from_edges` is the programmatic
+    entry so we merge rather than crash, but loops are a caller bug).
+    """
+    u = np.asarray(u, dtype=np.int64)
+    v = np.asarray(v, dtype=np.int64)
+    w = np.asarray(w, dtype=np.float64)
+    if np.any(u == v):
+        raise GraphFormatError("self-loops are not allowed")
+    # mirror
+    src = np.concatenate([u, v])
+    dst = np.concatenate([v, u])
+    wt = np.concatenate([w, w])
+    # merge parallel edges: sort by (src, dst) and sum runs
+    key = src * n + dst
+    order = np.argsort(key, kind="stable")
+    key, src, dst, wt = key[order], src[order], dst[order], wt[order]
+    uniq, start = np.unique(key, return_index=True)
+    wsum = np.add.reduceat(wt, start) if len(wt) else wt
+    src = src[start]
+    dst = dst[start]
+    xadj = np.zeros(n + 1, dtype=np.int64)
+    np.add.at(xadj, src + 1, 1)
+    xadj = np.cumsum(xadj)
+    return CommGraph(
+        xadj=xadj,
+        adjncy=dst.astype(np.int64),
+        adjwgt=wsum.astype(np.float64),
+        vwgt=(np.ones(n) if vwgt is None else
+              np.asarray(vwgt, dtype=np.float64)),
+    )
+
+
+def from_dense(C: np.ndarray) -> CommGraph:
+    """Graph view of a dense symmetric communication matrix."""
+    C = np.asarray(C, dtype=np.float64)
+    if C.shape[0] != C.shape[1]:
+        raise GraphFormatError("C must be square")
+    if not np.allclose(C, C.T):
+        raise GraphFormatError("C must be symmetric (guide §1)")
+    iu, iv = np.nonzero(np.triu(C, k=1))
+    return from_edges(C.shape[0], iu, iv, C[iu, iv])
+
+
+# ----------------------------------------------------------------- Metis IO
+def read_metis(path_or_file) -> CommGraph:
+    """Read the Metis/Chaco/DIMACS format described in guide §3.1.
+
+    First line: ``n m [f]`` with f in {<absent>, 1, 10, 11}.  Comment lines
+    start with %.  Vertices are 1-indexed in the file, 0-indexed in memory.
+    Violations raise GraphFormatError with the same checks the guide's
+    `graphchecker` performs (§3.3, §4.3).
+    """
+    if hasattr(path_or_file, "read"):
+        lines = path_or_file.read().splitlines()
+    else:
+        with open(path_or_file, "r") as fh:
+            lines = fh.read().splitlines()
+    body = [ln for ln in lines if ln.strip() and not ln.lstrip().startswith("%")]
+    if not body:
+        raise GraphFormatError("empty graph file")
+    header = body[0].split()
+    if len(header) not in (2, 3):
+        raise GraphFormatError(f"header must be 'n m [f]', got {body[0]!r}")
+    n, m = int(header[0]), int(header[1])
+    fmt = header[2] if len(header) == 3 else "0"
+    if fmt not in ("0", "1", "10", "11", "00", "01"):
+        raise GraphFormatError(f"unknown format flag {fmt!r}")
+    has_ew = fmt.endswith("1")
+    has_vw = len(fmt) == 2 and fmt[0] == "1"
+    if len(body) - 1 != n:
+        raise GraphFormatError(
+            f"file declares n={n} vertices but has {len(body)-1} vertex lines")
+    xadj = [0]
+    adjncy: list[int] = []
+    adjwgt: list[float] = []
+    vwgt = np.ones(n)
+    for i, ln in enumerate(body[1:]):
+        tok = ln.split()
+        pos = 0
+        if has_vw:
+            if not tok:
+                raise GraphFormatError(f"vertex {i+1}: missing vertex weight")
+            cw = float(tok[0])
+            if cw < 0:
+                raise GraphFormatError(f"vertex {i+1}: vertex weight < 0")
+            vwgt[i] = cw
+            pos = 1
+        step = 2 if has_ew else 1
+        rest = tok[pos:]
+        if len(rest) % step:
+            raise GraphFormatError(
+                f"vertex {i+1}: dangling token (edge weight missing?)")
+        for j in range(0, len(rest), step):
+            v = int(rest[j]) - 1
+            if v == i:
+                raise GraphFormatError(f"vertex {i+1}: self-loop")
+            if not (0 <= v < n):
+                raise GraphFormatError(f"vertex {i+1}: neighbor {v+1} out of range")
+            w = float(rest[j + 1]) if has_ew else 1.0
+            if w <= 0:
+                raise GraphFormatError(f"vertex {i+1}: edge weight <= 0")
+            adjncy.append(v)
+            adjwgt.append(w)
+        xadj.append(len(adjncy))
+    g = CommGraph(np.asarray(xadj, np.int64), np.asarray(adjncy, np.int64),
+                  np.asarray(adjwgt, np.float64), vwgt)
+    validate(g, declared_m=m)
+    return g
+
+
+def validate(g: CommGraph, declared_m: int | None = None) -> None:
+    """The `graphchecker` checks (guide §3.3): edge count, symmetry,
+    matching forward/backward weights, no parallel edges."""
+    if declared_m is not None and len(g.adjncy) != 2 * declared_m:
+        raise GraphFormatError(
+            f"header says m={declared_m} but file stores "
+            f"{len(g.adjncy)} directed edges (expected {2*declared_m})")
+    for u in range(g.n):
+        nb = g.neighbors(u)
+        if len(np.unique(nb)) != len(nb):
+            raise GraphFormatError(f"vertex {u+1}: parallel edges")
+    # symmetry + weight match via sorted key comparison
+    src = np.repeat(np.arange(g.n, dtype=np.int64), np.diff(g.xadj))
+    fwd = np.lexsort((g.adjncy, src))
+    bwd = np.lexsort((src, g.adjncy))
+    if not (np.array_equal(src[fwd], g.adjncy[bwd])
+            and np.array_equal(g.adjncy[fwd], src[bwd])):
+        raise GraphFormatError("missing backward edge")
+    if not np.allclose(g.adjwgt[fwd], g.adjwgt[bwd]):
+        raise GraphFormatError("forward/backward edge weights differ")
+
+
+def write_metis(g: CommGraph, path_or_file, edge_weights: bool = True) -> None:
+    out = io.StringIO()
+    fmt = " 1" if edge_weights else ""
+    out.write(f"{g.n} {g.num_edges}{fmt}\n")
+    for u in range(g.n):
+        toks: list[str] = []
+        for v, w in zip(g.neighbors(u), g.weights(u)):
+            toks.append(str(int(v) + 1))
+            if edge_weights:
+                toks.append(f"{int(w) if float(w).is_integer() else w}")
+        out.write(" ".join(toks) + "\n")
+    if hasattr(path_or_file, "write"):
+        path_or_file.write(out.getvalue())
+    else:
+        with open(path_or_file, "w") as fh:
+            fh.write(out.getvalue())
+
+
+# ------------------------------------------------------------- generators
+def grid3d(nx: int, ny: int, nz: int, torus: bool = False,
+           weight: float = 1.0) -> CommGraph:
+    """3D stencil communication graph — the canonical sparse HPC pattern."""
+    def vid(x, y, z):
+        return (x * ny + y) * nz + z
+    us, vs = [], []
+    for x in range(nx):
+        for y in range(ny):
+            for z in range(nz):
+                for dx, dy, dz in ((1, 0, 0), (0, 1, 0), (0, 0, 1)):
+                    X, Y, Z = x + dx, y + dy, z + dz
+                    if torus:
+                        if (dx and nx > 2 or dy and ny > 2 or dz and nz > 2):
+                            X, Y, Z = X % nx, Y % ny, Z % nz
+                        elif X >= nx or Y >= ny or Z >= nz:
+                            continue
+                    elif X >= nx or Y >= ny or Z >= nz:
+                        continue
+                    a, b = vid(x, y, z), vid(X, Y, Z)
+                    if a != b:
+                        us.append(a)
+                        vs.append(b)
+    us, vs = np.asarray(us), np.asarray(vs)
+    return from_edges(nx * ny * nz, us, vs, np.full(len(us), weight))
+
+
+def random_geometric(n: int, radius: float, seed: int = 0) -> CommGraph:
+    """Random geometric graph in the unit square (sparse, community-like)."""
+    rng = np.random.default_rng(seed)
+    pts = rng.random((n, 2))
+    d2 = ((pts[:, None, :] - pts[None, :, :]) ** 2).sum(-1)
+    iu, iv = np.nonzero(np.triu(d2 < radius * radius, k=1))
+    w = rng.integers(1, 10, size=len(iu)).astype(np.float64)
+    if len(iu) == 0:  # guarantee connectivity fallback: a path
+        iu = np.arange(n - 1)
+        iv = iu + 1
+        w = np.ones(n - 1)
+    return from_edges(n, iu, iv, w)

@@ -1,0 +1,87 @@
+"""Top-level mapping API — the `viem` program as a library (guide §4.1).
+
+    result = map_processes(g, hierarchy=..., distance=...)
+    result.perm        # process -> PE
+    result.stats       # construction + search statistics
+
+Defaults mirror the guide: hierarchytopdown construction, communication
+neighborhood with distance 10, eco preconfiguration, hierarchyonline
+distances (we never materialize D unless explicitly requested).
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+
+import numpy as np
+
+from .construction import construct
+from .graph import CommGraph
+from .hierarchy import Hierarchy
+from .local_search import SearchStats, communication_pairs, local_search, \
+    parallel_sweep_search
+from .objective import qap_objective
+
+
+@dataclass
+class MappingResult:
+    perm: np.ndarray
+    initial_objective: float
+    final_objective: float
+    construction_seconds: float
+    search_seconds: float
+    search_stats: SearchStats | None
+
+    @property
+    def improvement(self) -> float:
+        if self.initial_objective == 0:
+            return 0.0
+        return 1.0 - self.final_objective / self.initial_objective
+
+
+def map_processes(g: CommGraph, h: Hierarchy,
+                  construction_algorithm: str = "hierarchytopdown",
+                  local_search_neighborhood: str | None = "communication",
+                  communication_neighborhood_dist: int = 10,
+                  preconfiguration_mapping: str = "eco",
+                  parallel_sweeps: bool = False,
+                  seed: int = 0) -> MappingResult:
+    """Compute a process→PE mapping.  ``local_search_neighborhood=None``
+    skips local search (construction only).  ``parallel_sweeps=True`` uses
+    the TPU-adapted batched sweep instead of the paper's sequential search
+    (same candidate neighborhood)."""
+    if g.n != h.n_pe:
+        raise ValueError(f"graph has {g.n} processes but hierarchy has "
+                         f"{h.n_pe} PEs — they must match (guide §4.1)")
+    t0 = time.perf_counter()
+    perm = construct(construction_algorithm, g, h, seed=seed,
+                     preconfiguration=preconfiguration_mapping)
+    t_cons = time.perf_counter() - t0
+    j0 = qap_objective(g, h, perm)
+
+    stats = None
+    t1 = time.perf_counter()
+    if local_search_neighborhood is not None:
+        if parallel_sweeps:
+            if local_search_neighborhood == "communication":
+                pairs = communication_pairs(
+                    g, communication_neighborhood_dist, seed=seed)
+            elif local_search_neighborhood == "nsquare":
+                from .local_search import nsquare_pairs
+                pairs = nsquare_pairs(g.n)
+            else:
+                from .local_search import pruned_pairs
+                pairs = pruned_pairs(g)
+            stats = parallel_sweep_search(g, h, perm, pairs, seed=seed)
+        else:
+            stats = local_search(
+                g, h, perm,
+                neighborhood=local_search_neighborhood,
+                communication_neighborhood_dist=communication_neighborhood_dist,
+                seed=seed)
+    t_search = time.perf_counter() - t1
+    jf = stats.final_objective if stats is not None else j0
+    return MappingResult(perm=perm, initial_objective=j0, final_objective=jf,
+                         construction_seconds=t_cons,
+                         search_seconds=t_search, search_stats=stats)

@@ -1,0 +1,36 @@
+"""Pure-jnp oracles for the Pallas kernels (the ground truth in tests)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def swap_gain_matrix_ref(C: jax.Array, B: jax.Array) -> jax.Array:
+    """Dense gain matrix: G[u,v] = M[u,u]+M[v,v]−M[u,v]−M[v,u]−2·C[u,v]·B[u,v],
+    M = C @ Bᵀ; diagonal zeroed.  Mirrors objective.dense_gain_matrix."""
+    C = C.astype(jnp.float32)
+    B = B.astype(jnp.float32)
+    M = C @ B.T
+    d = jnp.diagonal(M)
+    G = d[:, None] + d[None, :] - M - M.T - 2.0 * C * B
+    n = C.shape[0]
+    return G * (1.0 - jnp.eye(n, dtype=jnp.float32))
+
+
+def hier_distance_ref(pu: jax.Array, pv: jax.Array,
+                      strides: tuple, dists: tuple) -> jax.Array:
+    """Online hierarchical distance oracle, jnp version."""
+    out = jnp.zeros(jnp.broadcast_shapes(pu.shape, pv.shape), jnp.float32)
+    k = len(dists)
+    out = jnp.where(pu != pv, jnp.float32(dists[k - 1]), out)
+    for lvl in range(k - 1, 0, -1):
+        same = (pu // strides[lvl]) == (pv // strides[lvl])
+        out = jnp.where(same & (pu != pv), jnp.float32(dists[lvl - 1]), out)
+    return out
+
+
+def qap_objective_edges_ref(pu: jax.Array, pv: jax.Array, w: jax.Array,
+                            strides: tuple, dists: tuple) -> jax.Array:
+    return jnp.sum(w.astype(jnp.float32)
+                   * hier_distance_ref(pu, pv, strides, dists))

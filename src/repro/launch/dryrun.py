@@ -1,0 +1,200 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", ""))
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell this proves the sharding plan is coherent at production
+scale (compile succeeds, memory fits) and extracts the roofline terms
+(repro.analysis) from the optimized HLO.  Results land in
+``experiments/dryrun/<arch>__<shape>__<mesh>.json`` and a summary row is
+printed per cell.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch granite-3-8b \
+        --shape train_4k --mesh single          # one cell
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--mesh both]
+"""
+
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+
+from ..analysis import analyze, roofline_from_cost
+from ..configs import ARCHS, SHAPES, get_config, supports_shape
+from .mesh import make_production_mesh
+from . import specs as sp
+
+OUT_DIR = Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+
+def lower_cell(cfg, shape_name: str, mesh):
+    """Returns (lowered, kind)."""
+    from ..train.steps import (build_prefill_step, build_serve_step,
+                               build_train_step)
+    shape = SHAPES[shape_name]
+    if shape.kind == "train":
+        import jax.numpy as _jnp
+        gsd = _jnp.bfloat16 if os.environ.get("DRYRUN_GRAD_BF16") else None
+        jit_fn, _, _ = build_train_step(cfg, mesh, donate=True,
+                                        global_batch=shape.global_batch,
+                                        grad_sync_dtype=gsd)
+        state, batch = sp.train_input_specs(cfg, shape_name)
+        return jit_fn.lower(state, batch), "train_step"
+    if shape.kind == "prefill":
+        jit_fn, _, _ = build_prefill_step(cfg, mesh,
+                                          global_batch=shape.global_batch)
+        params, batch = sp.prefill_input_specs(cfg, shape_name)
+        return jit_fn.lower(params, batch), "prefill_step"
+    jit_fn, *_ = build_serve_step(cfg, mesh, shape.global_batch,
+                                  shape.seq_len, donate=True)
+    params, token, caches, step = sp.serve_input_specs(cfg, shape_name)
+    return jit_fn.lower(params, token, caches, step), "serve_step"
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             save: bool = True, hlo_dir: Path | None = None,
+             overrides: dict | None = None, tag: str = "") -> dict:
+    import dataclasses
+    cfg = get_config(arch)
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    mesh_name = ("multi" if multi_pod else "single") + (
+        f"+{tag}" if tag else "")
+    ok, why = supports_shape(cfg, shape_name)
+    row = {"arch": arch, "shape": shape_name, "mesh": mesh_name}
+    if not ok:
+        row["status"] = "skipped"
+        row["reason"] = why
+        if save:
+            OUT_DIR.mkdir(parents=True, exist_ok=True)
+            (OUT_DIR / f"{arch}__{shape_name}__{mesh_name}.json"
+             ).write_text(json.dumps(row, indent=1))
+        return row
+    shape = SHAPES[shape_name]
+    n_chips = 512 if multi_pod else 256
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    try:
+        lowered, kind = lower_cell(cfg, shape_name, mesh)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+    except Exception as e:  # sharding bug — fail loudly with context
+        row["status"] = "FAILED"
+        row["error"] = f"{type(e).__name__}: {e}"
+        row["traceback"] = traceback.format_exc()[-2000:]
+        return row
+
+    mem = compiled.memory_analysis()
+    hlo = compiled.as_text()
+    cost = analyze(hlo, pod_size=256)
+    # analytic model flops (per device): tokens/step × flops/token / chips
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        mf = tokens * cfg.model_flops_per_token("train")
+    elif shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        mf = tokens * cfg.model_flops_per_token("infer")
+    else:
+        tokens = shape.global_batch
+        mf = tokens * cfg.model_flops_per_token("infer")
+    rl = roofline_from_cost(cost, model_flops_per_device=mf / n_chips)
+
+    per_dev_bytes = (mem.argument_size_in_bytes + mem.temp_size_in_bytes
+                     + mem.output_size_in_bytes - mem.alias_size_in_bytes)
+    row.update({
+        "status": "ok", "kind": kind,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "arg_bytes": mem.argument_size_in_bytes,
+        "temp_bytes": mem.temp_size_in_bytes,
+        "out_bytes": mem.output_size_in_bytes,
+        "alias_bytes": mem.alias_size_in_bytes,
+        "per_device_bytes": per_dev_bytes,
+        "fits_16g": bool(per_dev_bytes < 16 * 1024 ** 3),
+        "collectives_by_type": cost.by_type(),
+        "trip_counts": cost.trip_counts,
+        **{k: (round(v, 6) if isinstance(v, float) else v)
+           for k, v in rl.row().items()},
+    })
+    if hlo_dir is not None:
+        hlo_dir.mkdir(parents=True, exist_ok=True)
+        (hlo_dir / f"{arch}__{shape_name}__{mesh_name}.hlo.txt"
+         ).write_text(hlo)
+    if save:
+        OUT_DIR.mkdir(parents=True, exist_ok=True)
+        (OUT_DIR / f"{arch}__{shape_name}__{mesh_name}.json").write_text(
+            json.dumps(row, indent=1, default=str))
+    return row
+
+
+def fmt_row(r: dict) -> str:
+    if r["status"] == "skipped":
+        return (f"{r['arch']:18s} {r['shape']:12s} {r['mesh']:6s} SKIP "
+                f"({r['reason'][:60]})")
+    if r["status"] != "ok":
+        return (f"{r['arch']:18s} {r['shape']:12s} {r['mesh']:6s} FAIL "
+                f"{r['error'][:90]}")
+    return (f"{r['arch']:18s} {r['shape']:12s} {r['mesh']:6s} ok "
+            f"mem={r['per_device_bytes']/2**30:5.1f}G "
+            f"c={r['compute_s']*1e3:8.2f}ms m={r['memory_s']*1e3:8.2f}ms "
+            f"i={r['ici_s']*1e3:7.2f}ms d={r['dcn_s']*1e3:7.2f}ms "
+            f"{r['bound'][:4]:4s} rf={r['roofline_fraction']:.2f} "
+            f"(compile {r['compile_s']}s)")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="both")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--save-hlo", action="store_true")
+    ap.add_argument("--pad-heads", type=int, default=0,
+                    help="§Perf A2: pad attention heads to this multiple")
+    ap.add_argument("--flash", action="store_true",
+                    help="§Perf A3: Pallas fused-attention kernel")
+    ap.add_argument("--remat", default=None)
+    ap.add_argument("--microbatches", type=int, default=0)
+    ap.add_argument("--capacity", type=float, default=0.0)
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+    overrides = {}
+    if args.pad_heads:
+        overrides["pad_heads_to"] = args.pad_heads
+    if args.flash:
+        overrides["use_flash_kernel"] = True
+    if args.remat:
+        overrides["remat"] = args.remat
+    if args.microbatches:
+        overrides["train_microbatches"] = args.microbatches
+    if args.capacity:
+        overrides["capacity_factor"] = args.capacity
+
+    archs = ARCHS if args.all or not args.arch else [args.arch]
+    shapes = list(SHAPES) if args.all or not args.shape else [args.shape]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    hlo_dir = (OUT_DIR / "hlo") if args.save_hlo else None
+
+    failures = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                r = run_cell(arch, shape, mp, hlo_dir=hlo_dir,
+                             overrides=overrides or None, tag=args.tag)
+                print(fmt_row(r), flush=True)
+                failures += r["status"] == "FAILED"
+    if failures:
+        raise SystemExit(f"{failures} dry-run cells FAILED")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,60 @@
+"""ShapeDtypeStruct input stand-ins for every (arch × shape) dry-run cell.
+
+No device allocation: shapes come from ``jax.eval_shape`` over the real
+init functions, so the dry-run lowers exactly what the launcher would run.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import SHAPES
+from ..models.transformer import init_caches, init_params
+from ..train.steps import init_train_state
+
+
+def _sds(tree):
+    return jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+
+
+def train_input_specs(cfg, shape_name: str):
+    shape = SHAPES[shape_name]
+    b, t = shape.global_batch, shape.seq_len
+    t_tok = t - cfg.frontend_tokens
+    state = _sds(jax.eval_shape(
+        lambda k: init_train_state(k, cfg), jax.random.PRNGKey(0)))
+    batch = {
+        "tokens": jax.ShapeDtypeStruct((b, t_tok), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((b, t_tok), jnp.int32),
+    }
+    if cfg.frontend_tokens:
+        batch["frontend"] = jax.ShapeDtypeStruct(
+            (b, cfg.frontend_tokens, cfg.d_model), cfg.jnp_dtype)
+    return state, batch
+
+
+def prefill_input_specs(cfg, shape_name: str):
+    shape = SHAPES[shape_name]
+    b, t = shape.global_batch, shape.seq_len
+    t_tok = t - cfg.frontend_tokens
+    params = _sds(jax.eval_shape(
+        lambda k: init_params(k, cfg), jax.random.PRNGKey(0)))
+    batch = {"tokens": jax.ShapeDtypeStruct((b, t_tok), jnp.int32)}
+    if cfg.frontend_tokens:
+        batch["frontend"] = jax.ShapeDtypeStruct(
+            (b, cfg.frontend_tokens, cfg.d_model), cfg.jnp_dtype)
+    return params, batch
+
+
+def serve_input_specs(cfg, shape_name: str):
+    shape = SHAPES[shape_name]
+    b, s = shape.global_batch, shape.seq_len
+    params = _sds(jax.eval_shape(
+        lambda k: init_params(k, cfg), jax.random.PRNGKey(0)))
+    caches = _sds(jax.eval_shape(
+        lambda: init_caches(b, cfg, max_len=s)))
+    token = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+    step = jax.ShapeDtypeStruct((), jnp.int32)
+    return params, token, caches, step

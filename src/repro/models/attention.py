@@ -1,0 +1,227 @@
+"""GQA attention: blocked-flash for train/prefill, cached decode step.
+
+Design (DESIGN §5):
+  * query/output projections TP-sharded over `model` (heads dim); K/V
+    projections replicated over `model` when n_kv_heads doesn't divide the
+    axis (GQA with few KV heads — Megatron-style KV replication),
+  * train/prefill uses a pure-JAX flash formulation: outer scan over query
+    blocks, inner scan over KV blocks with an online softmax — activation
+    memory O(q_block · kv_block) instead of O(T²),
+  * sliding-window attention slices a static (window + q_block) KV span
+    per query block, so SWA prefill FLOPs are O(T · window), not O(T²),
+  * decode attends a (B, 1) query against the cache in one einsum; with
+    B=1 long-context shapes the cache is sequence-sharded and GSPMD turns
+    the softmax/PV reductions into cheap scalar all-reduces (flash-decode).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import apply_rope
+
+NEG_INF = -1e30
+
+
+def init_attention(key, cfg):
+    d, kv, hd = cfg.d_model, cfg.n_kv_heads, cfg.head_dim_
+    h = cfg.n_heads_eff
+    ks = jax.random.split(key, 4)
+    s = d ** -0.5
+    so = (cfg.n_heads * hd) ** -0.5 / (2 * cfg.n_layers) ** 0.5
+    dt = cfg.jnp_dtype
+    wq = (jax.random.normal(ks[0], (d, h, hd)) * s).astype(dt)
+    wo = (jax.random.normal(ks[3], (h, hd, d)) * so).astype(dt)
+    if h != cfg.n_heads:
+        # padded heads sit at the tail of each KV group (head layout is
+        # (kv, g)-major); zero wo rows make them exactly inert (§Perf A2)
+        g_eff = h // kv
+        g_real = cfg.n_heads // kv
+        inert = (jnp.arange(h) % g_eff) >= g_real
+        wo = jnp.where(inert[:, None, None], 0.0, wo)
+    return {
+        "wq": wq,
+        "wk": (jax.random.normal(ks[1], (d, kv, hd)) * s).astype(dt),
+        "wv": (jax.random.normal(ks[2], (d, kv, hd)) * s).astype(dt),
+        "wo": wo,
+    }
+
+
+def _qkv(params, x, positions, cfg):
+    q = jnp.einsum("btd,dhk->bthk", x, params["wq"])
+    k = jnp.einsum("btd,dhk->bthk", x, params["wk"])
+    v = jnp.einsum("btd,dhk->bthk", x, params["wv"])
+    if cfg.use_rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _online_block(q, k, v, mask, m, l, acc, scale):
+    """One online-softmax step.  q: (B,KV,G,qb,hd); k/v: (B,KV,kb,hd);
+    mask: (qb,kb) or broadcastable; m/l: (B,KV,G,qb); acc like q."""
+    s = jnp.einsum("bkgqh,bkth->bkgqt", q, k).astype(jnp.float32) * scale
+    s = jnp.where(mask, s, NEG_INF)
+    m_new = jnp.maximum(m, s.max(-1))
+    p = jnp.exp(s - m_new[..., None])
+    corr = jnp.exp(m - m_new)
+    l_new = l * corr + p.sum(-1)
+    acc_new = acc * corr[..., None] + jnp.einsum(
+        "bkgqt,bkth->bkgqh", p.astype(v.dtype), v).astype(jnp.float32)
+    return m_new, l_new, acc_new
+
+
+def flash_attention(q, k, v, cfg, q_offset: int = 0):
+    """Causal (optionally sliding-window) blocked attention.
+
+    q: (B, T, H, hd); k, v: (B, S, KV, hd).  q_offset: absolute position of
+    q[0] within the kv sequence (prefill continuation).  Returns (B,T,H,hd).
+    """
+    b, t, h, hd = q.shape
+    s_len = k.shape[1]
+    kvh = k.shape[2]
+    g = h // kvh
+    scale = hd ** -0.5
+    qb = min(cfg.q_block, t)
+    while t % qb:
+        qb //= 2
+    n_qb = t // qb
+    window = cfg.sliding_window
+
+    # (B, KV, G, T, hd) grouped layout
+    qg = q.reshape(b, t, kvh, g, hd).transpose(0, 2, 3, 1, 4)
+    kg = k.transpose(0, 2, 1, 3)    # (B, KV, S, hd)
+    vg = v.transpose(0, 2, 1, 3)
+
+    if window and window < s_len:
+        span = window + qb            # static KV span per query block
+        kb = min(cfg.kv_block, span)
+        while span % kb:
+            kb //= 2
+        n_kb = span // kb
+    else:
+        window = 0
+        kb = min(cfg.kv_block, s_len)
+        while s_len % kb:
+            kb //= 2
+        n_kb = s_len // kb
+
+    def q_block_fn(qi):
+        qblk = jax.lax.dynamic_slice_in_dim(qg, qi * qb, qb, axis=3)
+        q_pos = q_offset + qi * qb + jnp.arange(qb)
+        if window:
+            # static-size span ending at the block's last query
+            start = jnp.maximum(0, q_offset + (qi + 1) * qb - span)
+        else:
+            start = 0
+
+        def kv_step(carry, ki):
+            m, l, acc = carry
+            k_start = start + ki * kb
+            kblk = jax.lax.dynamic_slice_in_dim(kg, k_start, kb, axis=2)
+            vblk = jax.lax.dynamic_slice_in_dim(vg, k_start, kb, axis=2)
+            k_pos = k_start + jnp.arange(kb)
+            mask = q_pos[:, None] >= k_pos[None, :]
+            if window:
+                mask &= (q_pos[:, None] - k_pos[None, :]) < window
+            m, l, acc = _online_block(qblk, kblk, vblk, mask, m, l, acc,
+                                      scale)
+            return (m, l, acc), None
+
+        m0 = jnp.full((b, kvh, g, qb), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, kvh, g, qb), jnp.float32)
+        a0 = jnp.zeros((b, kvh, g, qb, hd), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0),
+                                      jnp.arange(n_kb))
+        return (acc / jnp.maximum(l, 1e-30)[..., None]).astype(q.dtype)
+
+    out = jax.lax.map(q_block_fn, jnp.arange(n_qb))   # (n_qb,B,KV,G,qb,hd)
+    out = out.transpose(1, 2, 3, 0, 4, 5).reshape(b, kvh, g, t, hd)
+    return out.transpose(0, 3, 1, 2, 4).reshape(b, t, h, hd)
+
+
+def _flash_kernel_sharded(q, k, v, cfg):
+    """Pallas flash kernel under shard_map: heads@model, batch@batch-axes;
+    each device expands its local heads' KV (GQA) and runs the fused
+    kernel on its shard (§Perf A3)."""
+    import jax as _jax
+    from jax.sharding import PartitionSpec as P
+    from ..models import sharding as shd
+    from ..kernels.flash_attention import flash_attention_kernel
+
+    mesh = shd.FLASH_MESH
+    ba = shd.batch_axes(mesh)
+    n_b = 1
+    for a in ba:
+        n_b *= mesh.shape[a]
+    if q.shape[0] % n_b:
+        ba, n_b = (), 1          # small batch: replicate
+    h_ok = cfg.n_heads_eff % mesh.shape["model"] == 0
+    ha = "model" if h_ok else None
+    qspec = P(ba if ba else None, None, ha, None)
+    kvspec = P(ba if ba else None, None, None, None)
+    g = cfg.n_heads_eff // cfg.n_kv_heads
+
+    def local(qv, kv, vv):
+        hl = qv.shape[2]
+        base = _jax.lax.axis_index("model") * hl if ha else 0
+        kv_ids = (base + jnp.arange(hl)) // g
+        kl = jnp.take(kv, kv_ids, axis=2)
+        vl = jnp.take(vv, kv_ids, axis=2)
+        return flash_attention_kernel(qv, kl, vl,
+                                      window=cfg.sliding_window,
+                                      q_block=cfg.q_block,
+                                      kv_block=cfg.kv_block)
+
+    return _jax.shard_map(local, mesh=mesh,
+                          in_specs=(qspec, kvspec, kvspec),
+                          out_specs=qspec, check_vma=False)(q, k, v)
+
+
+def attention_block(params, x, positions, cfg):
+    """Full attention sub-layer for train/prefill: qkv → flash → out proj."""
+    from ..models import sharding as shd
+    q, k, v = _qkv(params, x, positions, cfg)
+    if cfg.use_flash_kernel and shd.FLASH_MESH is not None:
+        o = _flash_kernel_sharded(q, k, v, cfg)
+    else:
+        o = flash_attention(q, k, v, cfg)
+    return jnp.einsum("bthk,hkd->btd", o, params["wo"])
+
+
+# ------------------------------------------------------------------ decode
+def init_kv_cache(batch: int, cfg, max_len: int, dtype):
+    """Cache length: SWA models only keep the window (ring buffer)."""
+    s = min(max_len, cfg.sliding_window) if cfg.sliding_window else max_len
+    kv, hd = cfg.n_kv_heads, cfg.head_dim_
+    return {
+        "k": jnp.zeros((batch, s, kv, hd), dtype),
+        "v": jnp.zeros((batch, s, kv, hd), dtype),
+    }
+
+
+def decode_attention_block(params, x, cache, step, cfg):
+    """One-token decode.  x: (B, 1, D); step: scalar int32 (tokens already
+    in cache).  Returns (out (B,1,D), new_cache)."""
+    b = x.shape[0]
+    s_cache = cache["k"].shape[1]
+    q, k, v = _qkv(params, x, jnp.full((b, 1), step), cfg)
+    slot = step % s_cache if cfg.sliding_window else step
+    ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, slot, axis=1)
+    cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, slot, axis=1)
+
+    h, kvh, hd = q.shape[2], cfg.n_kv_heads, cfg.head_dim_
+    g = h // kvh
+    qg = q.reshape(b, 1, kvh, g, hd).transpose(0, 2, 3, 1, 4)
+    s = jnp.einsum("bkgqh,bskh->bkgqs", qg, ck).astype(jnp.float32)
+    s *= hd ** -0.5
+    idx = jnp.arange(s_cache)
+    valid = idx <= slot if not cfg.sliding_window else (
+        (idx <= slot) | (step >= s_cache))
+    s = jnp.where(valid, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bskh->bkgqh", p.astype(cv.dtype), cv)
+    o = o.transpose(0, 3, 1, 2, 4).reshape(b, 1, h, hd)
+    out = jnp.einsum("bthk,hkd->btd", o, params["wo"])
+    return out, {"k": ck, "v": cv}

@@ -1,0 +1,80 @@
+"""Shared model layers: norms, MLPs, rotary embeddings, embeddings."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rms_norm(x, scale, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return ((x * jax.lax.rsqrt(var + eps)) * scale.astype(jnp.float32)
+            ).astype(dt)
+
+
+def init_mlp(key, d_model: int, d_ff: int, mlp_type: str, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    s_in = d_model ** -0.5
+    s_out = d_ff ** -0.5
+    p = {
+        "w1": (jax.random.normal(k1, (d_model, d_ff)) * s_in).astype(dtype),
+        "w2": (jax.random.normal(k2, (d_ff, d_model)) * s_out).astype(dtype),
+    }
+    if mlp_type == "swiglu":
+        p["w3"] = (jax.random.normal(k3, (d_model, d_ff)) * s_in).astype(dtype)
+    return p
+
+
+def mlp(params, x, mlp_type: str):
+    if mlp_type == "swiglu":
+        h = jax.nn.silu(x @ params["w1"]) * (x @ params["w3"])
+    else:  # gelu
+        h = jax.nn.gelu(x @ params["w1"])
+    return h @ params["w2"]
+
+
+# -------------------------------------------------------------------- RoPE
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2,
+                                       dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., T, H, hd); positions: broadcastable to (..., T)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # (hd/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs   # (..., T, hd/2)
+    cos = jnp.cos(ang)[..., None, :]                    # (..., T, 1, hd/2)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)
+
+
+# -------------------------------------------------------------- embeddings
+def init_embeddings(key, padded_vocab: int, d_model: int, dtype):
+    k1, k2 = jax.random.split(key)
+    return {
+        "embed": (jax.random.normal(k1, (padded_vocab, d_model))
+                  * 0.02).astype(dtype),
+        "lm_head": (jax.random.normal(k2, (padded_vocab, d_model))
+                    * d_model ** -0.5).astype(dtype),
+        "final_norm": jnp.ones((d_model,), dtype),
+    }
+
+
+def embed_tokens(params, tokens):
+    return params["embed"][tokens]
+
+
+def lm_logits(params, h, vocab_size: int):
+    """Final norm + projection; padded vocab tail masked to -inf."""
+    h = rms_norm(h, params["final_norm"])
+    logits = jnp.einsum("btd,vd->btv", h, params["lm_head"])
+    padded = logits.shape[-1]
+    if padded > vocab_size:
+        mask = jnp.arange(padded) < vocab_size
+        logits = jnp.where(mask, logits, jnp.finfo(logits.dtype).min)
+    return logits

@@ -1,0 +1,133 @@
+"""Top-k routed mixture-of-experts FFN with virtual-expert EP.
+
+Expert parallelism on a fixed (data=16, model=16) mesh (DESIGN §5):
+expert weights live sharded E@data — but E (8 or 16) must equal the axis
+size.  For E < data we split each expert's FFN dim into s = data/E
+*virtual experts* (w1: (E, D, F) → (E·s, D, F/s)); a token routed to
+expert e is dispatched to all s of its halves.  SwiGLU splits cleanly over
+F (silu(x@W1)∘(x@W3) is elementwise in F) and w2's contraction sums over
+halves via the combine-add, so the math is exact and zero extra FLOPs.
+
+Dataflow per layer (the classic EP all-to-all, expressed via GSPMD
+sharding constraints rather than manual collectives):
+
+  tokens (B@data, T, D)
+    → route (vmapped per row: the sort stays device-local)
+    → scatter into buf (B, E_v, cap, D)   constrained E_v@data   [a2a]
+    → expert einsums (E_v@data, F/s@model local)
+    → y constrained B@data                                       [a2a back]
+    → gather + weighted combine (vmapped per row)
+
+Overflow tokens beyond capacity drop (combine weight 0) — the standard
+production trade-off.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ep_split(cfg, n_data: int) -> int:
+    """Virtual-expert split factor: E·s == data axis when possible."""
+    e = cfg.moe_experts
+    if e >= n_data:
+        return 1
+    if n_data % e == 0:
+        return n_data // e
+    return 1
+
+
+def init_moe(key, cfg, split: int = 1):
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.moe_experts
+    ks = jax.random.split(key, 4)
+    dt = cfg.jnp_dtype
+    ev, fs = e * split, f // split
+    return {
+        "router": (jax.random.normal(ks[0], (d, e)) * d ** -0.5
+                   ).astype(jnp.float32),
+        "w1": (jax.random.normal(ks[1], (ev, d, fs)) * d ** -0.5
+               ).astype(dt),
+        "w2": (jax.random.normal(ks[2], (ev, fs, d)) * f ** -0.5
+               ).astype(dt),
+        "w3": (jax.random.normal(ks[3], (ev, d, fs)) * d ** -0.5
+               ).astype(dt),
+    }
+
+
+def _route_row(x, router, e: int, k: int, cap: int, split: int):
+    """Per batch-row dispatch plan over *virtual* experts.  x: (T, D)."""
+    t = x.shape[0]
+    logits = x.astype(jnp.float32) @ router            # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    topw, topi = jax.lax.top_k(probs, k)               # (T, k)
+    topw = topw / jnp.maximum(topw.sum(-1, keepdims=True), 1e-9)
+    # expand to virtual experts: assignment (token, e) → s × (token, e·s+j)
+    flat_e = (topi[..., None] * split
+              + jnp.arange(split)).reshape(-1)         # (T·k·s,)
+    flat_w = jnp.repeat(topw.reshape(-1), split)
+    flat_t = jnp.repeat(jnp.arange(t), k * split)
+    order = jnp.argsort(flat_e, stable=True)
+    se = flat_e[order]
+    st = flat_t[order]
+    sw = flat_w[order]
+    first = jnp.searchsorted(se, se, side="left")
+    pos = jnp.arange(len(se)) - first                  # position in expert
+    keep = pos < cap
+    aux = _load_balance_loss(probs, topi, e)
+    return se, st, sw, pos, keep, aux
+
+
+def _load_balance_loss(probs, topi, e: int):
+    """Switch-style auxiliary loss: E · Σ_e f_e · P_e."""
+    counts = jnp.zeros((e,), jnp.float32).at[topi.reshape(-1)].add(1.0)
+    f = counts / jnp.maximum(counts.sum(), 1.0)
+    p = probs.mean(0)
+    return e * jnp.sum(f * p)
+
+
+def moe_ffn(params, x, cfg, ep_constrain=None, batch_constrain=None):
+    """x: (B, T, D) → (B, T, D), aux_loss scalar.
+
+    ``ep_constrain``  pins (B, E_v, cap, D) buffers to E_v@data (the a2a);
+    ``batch_constrain`` pins them back to B@data after expert compute."""
+    b, t, d = x.shape
+    e, k = cfg.moe_experts, cfg.moe_top_k
+    ev = params["w1"].shape[0]
+    split = ev // e
+    cap = int(cfg.capacity_factor * k * t / e + 0.999)
+    cap = max(8, -(-cap // 8) * 8)
+    cap = min(cap, t * k)
+    ep_constrain = ep_constrain or (lambda z: z)
+    batch_constrain = batch_constrain or (lambda z: z)
+
+    def plan(xr):
+        return _route_row(xr, params["router"], e, k, cap, split)
+
+    se, st, sw, pos, keep, aux = jax.vmap(plan)(x)
+    pos_c = jnp.where(keep, pos, cap)                  # cap → dropped
+
+    def scatter_row(xr, se_r, st_r, pos_r):
+        buf = jnp.zeros((ev, cap, d), xr.dtype)
+        return buf.at[se_r, pos_r].set(xr[st_r], mode="drop")
+
+    buf = jax.vmap(scatter_row)(x, se, st, pos_c)      # (B, E_v, cap, D)
+    buf = ep_constrain(buf)                            # → E_v@data  [a2a]
+    h = jnp.einsum("becd,edf->becf", buf, params["w1"])
+    h = jax.nn.silu(h) * jnp.einsum("becd,edf->becf", buf, params["w3"])
+    # constraint on h pins the backward cotangent to the EP layout too —
+    # without it GSPMD recomputes the expert backward with E_v and B both
+    # replicated (the 29.9 GB jamba dry-run finding)
+    h = ep_constrain(h)
+    y = jnp.einsum("becf,efd->becd", h, params["w2"])
+    y = ep_constrain(y)
+    y = batch_constrain(y)                             # → B@data  [a2a back]
+
+    def combine_row(y_r, se_r, st_r, sw_r, pos_r):
+        gathered = y_r.at[se_r, pos_r].get(mode="fill",
+                                           fill_value=0)   # (T·k·s, D)
+        return jnp.zeros((t, d), y_r.dtype).at[st_r].add(
+            sw_r[:, None].astype(y_r.dtype) * gathered)
+
+    out = jax.vmap(combine_row)(y, se, st, sw, pos_c)
+    return out, aux.mean()

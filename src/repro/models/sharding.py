@@ -1,0 +1,272 @@
+"""Sharding plans: parameter / cache / batch PartitionSpecs per DESIGN §5.
+
+Axes: `model` = tensor parallel, `data` = FSDP (params) + batch,
+`pod` = pure DP across DCN.  Rules are divisibility-aware: dims that don't
+divide the axis (e.g. 8 KV heads on a 16-way model axis, RWKV's 40 heads)
+fall back to replication on that axis — Megatron-style KV replication —
+rather than relying on GSPMD's padded sharding.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def batch_axes(mesh: Mesh) -> tuple:
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+# Mesh handle for kernel paths (set by the step builders before tracing;
+# shard_map needs the concrete mesh, which cfg/functions don't carry).
+FLASH_MESH: Mesh | None = None
+
+
+def set_flash_mesh(mesh: Mesh | None):
+    global FLASH_MESH
+    FLASH_MESH = mesh
+
+
+def _div(n: int, mesh: Mesh, axis: str) -> bool:
+    return n % mesh.shape[axis] == 0
+
+
+def param_specs(cfg, mesh: Mesh):
+    """PartitionSpec pytree mirroring transformer.init_params output.
+
+    Layout rule (dry-run finding, DESIGN §5): the FSDP (`data`) shard goes
+    on a **non-contracting** dim of every forward matmul, so GSPMD's only
+    strategy is to all-gather the (small) weight shards at use — ZeRO-3.
+    Sharding the contracting dim makes GSPMD partial-sum the (huge, f32)
+    activations over `data` instead, and in the vmapped MoE it replicated
+    the batch outright.  TP (`model`) stays on the conventional Megatron
+    dims (heads / d_ff / d_inner), whose activation all-reduce is the
+    intrinsic TP cost."""
+    dm_ok = _div(cfg.d_model, mesh, "data")
+    da = "data" if dm_ok else None     # FSDP axis (storage only)
+    hd_ok = _div(cfg.head_dim_, mesh, "data")
+    hda = "data" if hd_ok else None
+
+    def _dm(n: int):
+        """(data, model) two-axis storage sharding for an output dim."""
+        both = n % (mesh.shape["data"] * mesh.shape["model"]) == 0
+        if both:
+            return ("data", "model")
+        return "model" if _div(n, mesh, "model") else None
+
+    def attn_specs():
+        kv_ok = _div(cfg.n_kv_heads, mesh, "model")
+        h_ok = _div(cfg.n_heads_eff, mesh, "model")
+        return {
+            "wq": P(None, "model" if h_ok else None, hda),
+            "wk": P(None, "model" if kv_ok else None, hda),
+            "wv": P(None, "model" if kv_ok else None, hda),
+            "wo": P("model" if h_ok else None, None, da),
+        }
+
+    def mlp_specs():
+        fa_use = "model" if _div(cfg.d_ff, mesh, "model") else None
+        s = {"w1": P(None, _dm(cfg.d_ff)), "w2": P(fa_use, da)}
+        if cfg.mlp_type == "swiglu":
+            s["w3"] = P(None, _dm(cfg.d_ff))
+        return s
+
+    def moe_specs():
+        # virtual-expert EP: weights (E_v, D, F/s) live E_v@data (true
+        # expert parallelism — dispatch travels, weights don't)
+        ev = cfg.moe_experts * cfg.moe_ep_split
+        fs = cfg.d_ff // cfg.moe_ep_split
+        ea = "data" if _div(ev, mesh, "data") else None
+        fa = "model" if fs % mesh.shape["model"] == 0 else None
+        return {
+            "router": P(None, None),
+            "w1": P(ea, None, fa),
+            "w2": P(ea, fa, None),
+            "w3": P(ea, None, fa),
+        }
+
+    def mamba_specs():
+        di_ok = _div(cfg.d_inner, mesh, "model")
+        ma = "model" if di_ok else None
+        return {
+            "w_in": P(None, _dm(2 * cfg.d_inner)),
+            "conv_w": P(None, ma), "conv_b": P(ma),
+            "w_x": P(ma, "data" if _div(cfg.dt_rank_
+                                        + 2 * cfg.mamba_d_state,
+                                        mesh, "data") else None),
+            "w_dt": P(None, _dm(cfg.d_inner)), "b_dt": P(ma),
+            "a_log": P(ma, None), "d_skip": P(ma),
+            "w_out": P(ma, da),
+        }
+
+    def rwkv_tm_specs():
+        # heads rarely divide the model axis → FSDP-only projections
+        return {
+            "mu_r": P(None), "mu_k": P(None), "mu_v": P(None),
+            "mu_g": P(None), "mu_w": P(None),
+            "wr": P(None, da), "wk": P(None, da), "wv": P(None, da),
+            "wg": P(None, da), "wo": P(None, da),
+            "w0": P(None), "w_lora_a": P(None, None),
+            "w_lora_b": P(None, da),
+            "u": P(None, None), "ln_g": P(None), "ln_b": P(None),
+        }
+
+    def cmix_specs():
+        fa_use = "model" if _div(cfg.d_ff, mesh, "model") else None
+        return {"mu_k": P(None), "mu_r": P(None),
+                "wk": P(None, _dm(cfg.d_ff)), "wv": P(fa_use, da),
+                "wr": P(None, da)}
+
+    periods = []
+    for kind in cfg.period_kinds():
+        mixer, ffn = kind
+        spec = {"norm1": P(None), "norm2": P(None)}
+        if mixer == "attn":
+            spec["mixer"] = attn_specs()
+        elif mixer == "mamba":
+            spec["mixer"] = mamba_specs()
+        elif mixer == "rwkv":
+            spec["mixer"] = rwkv_tm_specs()
+        if ffn == "mlp":
+            spec["ffn"] = mlp_specs()
+        elif ffn == "moe":
+            spec["ffn"] = moe_specs()
+        elif ffn == "channelmix":
+            spec["ffn"] = cmix_specs()
+        # stacked period axis in front
+        periods.append(jax.tree.map(
+            lambda p: P(None, *p), spec,
+            is_leaf=lambda x: isinstance(x, P)))
+
+    return {
+        "embeddings": {
+            # embed: vocab over `data` (FSDP) with d_model replicated — a
+            # vocab+d_model doubly-sharded table makes the token gather
+            # unshardable and GSPMD replicates the batch (dry-run finding).
+            "embed": P("data" if _div(cfg.padded_vocab, mesh, "data")
+                       else None, None),
+            # lm_head contracts d_model — keep d_model replicated, store
+            # vocab over both axes, compute with vocab@model.
+            "lm_head": P(_dm(cfg.padded_vocab), None),
+            "final_norm": P(None),
+        },
+        "periods": periods,
+    }
+
+
+def cache_specs(cfg, mesh: Mesh, batch: int, seq_shard: bool = False):
+    """Decode-cache PartitionSpecs.
+
+    KV heads rarely divide the model axis, so the cache's *sequence* dim is
+    sharded over `model` instead (flash-decode: GSPMD turns the masked
+    softmax/PV reductions into cheap per-head all-reduces).  With
+    ``seq_shard=True`` (long-context B=1 — batch can't shard) the sequence
+    is sharded over both (`data`, `model`)."""
+    ba = batch_axes(mesh)
+    n_b = 1
+    for a in ba:
+        n_b *= mesh.shape[a]
+    b_ok = batch % n_b == 0 and not seq_shard
+    bsp = ba if b_ok else None
+    kv_ok = _div(cfg.n_kv_heads, mesh, "model")
+    kva = "model" if kv_ok else None
+    seq = None
+    if seq_shard:
+        seq = ("data", "model") if kva is None else ("data",)
+    elif kva is None:
+        seq = "model"           # heads can't shard → shard the sequence
+    di_ok = _div(cfg.d_inner, mesh, "model")
+    ma = "model" if di_ok else None
+
+    caches = []
+    for kind in cfg.period_kinds():
+        mixer, ffn = kind
+        c = {}
+        if mixer == "attn":
+            c["attn"] = {"k": P(None, bsp, seq, kva, None),
+                         "v": P(None, bsp, seq, kva, None)}
+        elif mixer == "mamba":
+            c["mamba"] = {"conv": P(None, bsp, None, ma),
+                          "ssm": P(None, bsp, ma, None)}
+        elif mixer == "rwkv":
+            c["rwkv"] = {"x": P(None, bsp, None),
+                         "s": P(None, bsp, None, None, None)}
+        if ffn == "channelmix":
+            c["cmix"] = {"x": P(None, bsp, None)}
+        caches.append(c)
+    return caches
+
+
+def train_batch_specs(mesh: Mesh, has_frontend: bool = False):
+    ba = batch_axes(mesh)
+    spec = {"tokens": P(ba, None), "labels": P(ba, None)}
+    if has_frontend:
+        spec["frontend"] = P(ba, None, None)
+    return spec
+
+
+def named(mesh: Mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def moe_constrainers(cfg, mesh: Mesh, batch: int):
+    """(ep_constrain, batch_constrain) for (B, E_v, cap, D) MoE buffers.
+
+    ep_constrain reshards to E_v@data (the EP all-to-all: tokens travel to
+    the experts).  batch_constrain brings the result back to B@batch-axes.
+    With a `pod` axis, B stays pod-sharded throughout (EP never crosses
+    DCN)."""
+    if not cfg.moe_experts:
+        return None
+    ev = cfg.moe_experts * cfg.moe_ep_split
+    if ev % mesh.shape["data"] != 0:
+        return None
+    ba = batch_axes(mesh)
+    n_b = 1
+    for a in ba:
+        n_b *= mesh.shape[a]
+    pod = ("pod",) if "pod" in mesh.axis_names and batch % mesh.shape[
+        "pod"] == 0 else None
+    fs = cfg.d_ff // cfg.moe_ep_split
+    fa = "model" if fs % mesh.shape["model"] == 0 else None
+
+    def ep_c(z):
+        # last dim is d_model (buf/y) or the expert hidden F/s (h) — pin
+        # F/s to `model` or the constraint would silently replicate it
+        # (16× expert FLOPs, the mixtral dry-run regression)
+        last = fa if z.shape[-1] == fs else None
+        return jax.lax.with_sharding_constraint(
+            z, NamedSharding(mesh, P(pod, "data", None, last)))
+
+    if batch % n_b == 0:
+        def bt_c(z):
+            return jax.lax.with_sharding_constraint(
+                z, NamedSharding(mesh, P(ba, None, None, None)))
+    else:
+        bt_c = ep_c          # keep EP layout; combine handles it
+
+    return ep_c, bt_c
+
+
+def activation_constrainer(mesh: Mesh, batch: int):
+    """Pin (B, T, D) / (B, T) activations to batch-over-(pod,data).
+
+    Without this, the FSDP embedding layout would re-shard activations onto
+    d_model and replicate the batch — the 500×-memory failure mode the
+    first granite dry-run exposed.  Batch sizes that don't divide the batch
+    axes (long-context B=1) stay replicated on batch but keep other dims
+    unsharded as well (returns identity)."""
+    ba = batch_axes(mesh)
+    n_b = 1
+    for a in ba:
+        n_b *= mesh.shape[a]
+    if batch % n_b != 0:
+        return lambda x: x
+
+    def constrain(x):
+        spec = P(ba, *([None] * (x.ndim - 1)))
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+    return constrain

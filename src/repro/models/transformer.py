@@ -1,0 +1,291 @@
+"""Composable decoder: embeddings + scanned layer periods + LM head.
+
+A model is a repeating *period* of layers (period = 1 for homogeneous
+models; 8 for Jamba's [6×mamba, attn, mamba] × MoE-every-2 interleave).
+Parameters for each period position are stacked over n_periods and the
+forward pass is a single `lax.scan` — HLO size and compile time stay flat
+in depth, which is what makes 70+ multi-pod dry-run compiles tractable.
+
+Decode carries a cache pytree with the same period structure:
+  attn  → {k, v} ring/linear KV cache
+  mamba → {conv, ssm}
+  rwkv  → {tm_x, tm_s, cm_x}
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .attention import (attention_block, decode_attention_block,
+                        init_attention, init_kv_cache, _qkv)
+from .layers import (embed_tokens, init_embeddings, init_mlp, lm_logits,
+                     mlp, rms_norm)
+from .mamba import (decode_mamba_block, init_mamba, init_mamba_cache,
+                    mamba_block)
+from .moe import init_moe, moe_ffn
+from .rwkv import (decode_rwkv_channel_mix, decode_rwkv_time_mix,
+                   init_rwkv_channel_mix, init_rwkv_time_mix,
+                   rwkv_channel_mix, rwkv_time_mix)
+
+
+# ---------------------------------------------------------------- params
+def init_layer(key, cfg, kind):
+    mixer, ffn = kind
+    k1, k2 = jax.random.split(key)
+    dt = cfg.jnp_dtype
+    p = {"norm1": jnp.ones((cfg.d_model,), dt),
+         "norm2": jnp.ones((cfg.d_model,), dt)}
+    if mixer == "attn":
+        p["mixer"] = init_attention(k1, cfg)
+    elif mixer == "mamba":
+        p["mixer"] = init_mamba(k1, cfg)
+    elif mixer == "rwkv":
+        p["mixer"] = init_rwkv_time_mix(k1, cfg)
+    if ffn == "mlp":
+        p["ffn"] = init_mlp(k2, cfg.d_model, cfg.d_ff, cfg.mlp_type, dt)
+    elif ffn == "moe":
+        p["ffn"] = init_moe(k2, cfg, split=cfg.moe_ep_split)
+    elif ffn == "channelmix":
+        p["ffn"] = init_rwkv_channel_mix(k2, cfg)
+    return p
+
+
+def init_params(key, cfg):
+    ke, kl = jax.random.split(key)
+    kinds = cfg.period_kinds()
+    periods = []
+    for pos, kind in enumerate(kinds):
+        keys = jax.random.split(jax.random.fold_in(kl, pos), cfg.n_periods)
+        periods.append(jax.vmap(lambda k: init_layer(k, cfg, kind))(keys))
+    return {
+        "embeddings": init_embeddings(ke, cfg.padded_vocab, cfg.d_model,
+                                      cfg.jnp_dtype),
+        "periods": periods,
+    }
+
+
+# --------------------------------------------------------------- forward
+def _layer_apply(p, h, positions, cfg, kind, moe_c=None):
+    mixer, ffn = kind
+    ep_c, bt_c = moe_c if moe_c else (None, None)
+    aux = jnp.zeros((), jnp.float32)
+    if mixer == "attn":
+        h = h + attention_block(p["mixer"], rms_norm(h, p["norm1"]),
+                                positions, cfg)
+    elif mixer == "mamba":
+        h = h + mamba_block(p["mixer"], rms_norm(h, p["norm1"]), cfg)
+    elif mixer == "rwkv":
+        out, _ = rwkv_time_mix(p["mixer"], rms_norm(h, p["norm1"]), cfg)
+        h = h + out
+    if ffn == "mlp":
+        h = h + mlp(p["ffn"], rms_norm(h, p["norm2"]), cfg.mlp_type)
+    elif ffn == "moe":
+        out, aux = moe_ffn(p["ffn"], rms_norm(h, p["norm2"]), cfg,
+                           ep_constrain=ep_c, batch_constrain=bt_c)
+        h = h + out
+    elif ffn == "channelmix":
+        out, _ = rwkv_channel_mix(p["ffn"], rms_norm(h, p["norm2"]))
+        h = h + out
+    return h, aux
+
+
+def forward(params, tokens, cfg, frontend=None, constrain=None,
+            moe_c=None, logits_last_only: bool = False):
+    """Train/prefill forward.  tokens: (B, T_tok) int32; frontend: optional
+    (B, F, D) precomputed modality embeddings prepended to the sequence.
+    ``constrain``: optional fn pinning (B, T, D) activation sharding —
+    without it GSPMD lets the embedding's FSDP layout unshard the batch.
+    ``logits_last_only``: serving prefill needs only the last position —
+    skipping the (B, T, V) projection saves the largest single tensor of
+    the 32k prefill cells (§Perf A1).
+    Returns (logits (B, T, V_padded), aux_loss)."""
+    constrain = constrain or (lambda x: x)
+    h = embed_tokens(params["embeddings"], tokens)
+    if frontend is not None:
+        h = jnp.concatenate([frontend.astype(h.dtype), h], axis=1)
+    h = constrain(h)
+    b, t, _ = h.shape
+    positions = jnp.broadcast_to(jnp.arange(t), (b, t))
+    kinds = cfg.period_kinds()
+
+    def period_body(h, period_params):
+        aux = jnp.zeros((), jnp.float32)
+        h = constrain(h)
+        for pos, kind in enumerate(kinds):
+            h, a = _layer_apply(period_params[pos], h, positions, cfg,
+                                kind, moe_c=moe_c)
+            aux += a
+        return constrain(h), aux
+
+    if cfg.remat == "full":
+        period_body = jax.checkpoint(period_body,
+                                     prevent_cse=False)
+    elif cfg.remat == "dots":
+        period_body = jax.checkpoint(
+            period_body, prevent_cse=False,
+            policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+
+    h, auxs = jax.lax.scan(period_body, h, params["periods"])
+    if logits_last_only:
+        h = h[:, -1:]
+    logits = lm_logits(params["embeddings"], h, cfg.vocab_size)
+    return logits, auxs.sum()
+
+
+# ---------------------------------------------------------------- decode
+def init_caches(batch: int, cfg, max_len: int):
+    dt = cfg.jnp_dtype
+    caches = []
+    for kind in cfg.period_kinds():
+        mixer, ffn = kind
+        c = {}
+        if mixer == "attn":
+            c["attn"] = init_kv_cache(batch, cfg, max_len, dt)
+        elif mixer == "mamba":
+            c["mamba"] = init_mamba_cache(batch, cfg, dt)
+        elif mixer == "rwkv":
+            d = cfg.d_model
+            h = d // cfg.rwkv_head_size
+            c["rwkv"] = {
+                "x": jnp.zeros((batch, d), dt),
+                "s": jnp.zeros((batch, h, cfg.rwkv_head_size,
+                                cfg.rwkv_head_size), jnp.float32),
+            }
+        if ffn == "channelmix":
+            c["cmix"] = {"x": jnp.zeros((batch, cfg.d_model), dt)}
+        # stack over periods
+        caches.append(jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (cfg.n_periods,) + x.shape), c))
+    return caches
+
+
+def decode_step(params, token, caches, step, cfg, constrain=None,
+                moe_c=None):
+    """One decode step.  token: (B, 1) int32; step: scalar int32 count of
+    tokens already in the caches.  Returns (logits (B,1,V), new caches)."""
+    constrain = constrain or (lambda x: x)
+    h = constrain(embed_tokens(params["embeddings"], token))
+    kinds = cfg.period_kinds()
+
+    def period_body(h, xs):
+        period_params, cache = xs
+        new_cache = []
+        h = constrain(h)
+        for pos, kind in enumerate(kinds):
+            mixer, ffn = kind
+            p = period_params[pos]
+            c = cache[pos]
+            nc = {}
+            if mixer == "attn":
+                out, nc["attn"] = decode_attention_block(
+                    p["mixer"], rms_norm(h, p["norm1"]), c["attn"], step,
+                    cfg)
+                h = h + out
+            elif mixer == "mamba":
+                out, nc["mamba"] = decode_mamba_block(
+                    p["mixer"], rms_norm(h, p["norm1"]), c["mamba"], cfg)
+                h = h + out
+            elif mixer == "rwkv":
+                out, nc["rwkv"] = decode_rwkv_time_mix(
+                    p["mixer"], rms_norm(h, p["norm1"]), c["rwkv"], cfg)
+                h = h + out
+            if ffn == "mlp":
+                h = h + mlp(p["ffn"], rms_norm(h, p["norm2"]), cfg.mlp_type)
+            elif ffn == "moe":
+                ep_c, bt_c = moe_c if moe_c else (None, None)
+                out, _ = moe_ffn(p["ffn"], rms_norm(h, p["norm2"]), cfg,
+                                 ep_constrain=ep_c, batch_constrain=bt_c)
+                h = h + out
+            elif ffn == "channelmix":
+                out, nc["cmix"] = decode_rwkv_channel_mix(
+                    p["ffn"], rms_norm(h, p["norm2"]), c["cmix"])
+                h = h + out
+            new_cache.append(nc)
+        return h, new_cache
+
+    h, new_caches = jax.lax.scan(period_body, h,
+                                 (params["periods"], caches))
+    logits = lm_logits(params["embeddings"], h, cfg.vocab_size)
+    return logits, new_caches
+
+
+# -------------------------------------------------- prefill with cache
+def prefill_with_cache(params, tokens, cfg, max_len: int):
+    """Forward pass that also fills decode caches (serving path).  Uses the
+    state-returning layer variants; intended for the runnable examples and
+    integration tests (small models) — the 32k dry-run prefill lowers
+    :func:`forward`."""
+    b, t = tokens.shape
+    h = embed_tokens(params["embeddings"], tokens)
+    positions = jnp.broadcast_to(jnp.arange(t), (b, t))
+    kinds = cfg.period_kinds()
+    caches = init_caches(b, cfg, max_len)
+
+    def period_body(h, xs):
+        period_params, cache = xs
+        new_cache = []
+        for pos, kind in enumerate(kinds):
+            mixer, ffn = kind
+            p = period_params[pos]
+            nc = {}
+            if mixer == "attn":
+                x = rms_norm(h, p["norm1"])
+                q, k, v = _qkv(p["mixer"], x, positions, cfg)
+                c = cache[pos]["attn"]
+                s_cache = c["k"].shape[1]
+                if cfg.sliding_window and t > s_cache:
+                    ck = c["k"].at[:, :].set(k[:, -s_cache:])
+                    cv = c["v"].at[:, :].set(v[:, -s_cache:])
+                else:
+                    ck = jax.lax.dynamic_update_slice_in_dim(
+                        c["k"], k, 0, axis=1)
+                    cv = jax.lax.dynamic_update_slice_in_dim(
+                        c["v"], v, 0, axis=1)
+                nc["attn"] = {"k": ck, "v": cv}
+                from .attention import flash_attention
+                o = flash_attention(q, k, v, cfg)
+                h = h + jnp.einsum("bthk,hkd->btd", o, p["mixer"]["wo"])
+            elif mixer == "mamba":
+                from .mamba import _causal_conv, _chunked_ssm
+                x = rms_norm(h, p["norm1"])
+                xz = x @ p["mixer"]["w_in"]
+                x_p, z = jnp.split(xz, 2, axis=-1)
+                dc = cfg.mamba_d_conv
+                xc, _ = _causal_conv(x_p, p["mixer"]["conv_w"],
+                                     p["mixer"]["conv_b"])
+                conv_state = jnp.pad(
+                    x_p, ((0, 0), (max(dc - 1 - t, 0), 0), (0, 0))
+                )[:, -(dc - 1):]
+                xc = jax.nn.silu(xc)
+                h0 = jnp.zeros((b, cfg.d_inner, cfg.mamba_d_state),
+                               jnp.float32)
+                y, h_f = _chunked_ssm(p["mixer"], xc, cfg, h0)
+                y = y + p["mixer"]["d_skip"] * xc.astype(jnp.float32)
+                y = y.astype(x.dtype) * jax.nn.silu(z)
+                nc["mamba"] = {"conv": conv_state, "ssm": h_f}
+                h = h + y @ p["mixer"]["w_out"]
+            elif mixer == "rwkv":
+                out, (last_x, s_f) = rwkv_time_mix(
+                    p["mixer"], rms_norm(h, p["norm1"]), cfg)
+                nc["rwkv"] = {"x": last_x, "s": s_f}
+                h = h + out
+            if ffn == "mlp":
+                h = h + mlp(p["ffn"], rms_norm(h, p["norm2"]), cfg.mlp_type)
+            elif ffn == "moe":
+                out, _ = moe_ffn(p["ffn"], rms_norm(h, p["norm2"]), cfg)
+                h = h + out
+            elif ffn == "channelmix":
+                out, last_x = rwkv_channel_mix(p["ffn"],
+                                               rms_norm(h, p["norm2"]))
+                nc["cmix"] = {"x": last_x}
+                h = h + out
+            new_cache.append(nc)
+        return h, new_cache
+
+    h, new_caches = jax.lax.scan(period_body, h,
+                                 (params["periods"], caches))
+    logits = lm_logits(params["embeddings"], h, cfg.vocab_size)
+    return logits, new_caches

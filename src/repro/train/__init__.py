@@ -1,0 +1,13 @@
+"""Training/serving substrate: optimizer, loss, step builders, compression."""
+
+from .loss import IGNORE, cross_entropy, lm_loss
+from .optimizer import OptConfig, adamw_update, init_opt_state, schedule
+from .steps import (build_prefill_step, build_serve_step, build_train_step,
+                    init_train_state, prefill_step, serve_step, train_step,
+                    train_state_specs)
+
+__all__ = ["IGNORE", "cross_entropy", "lm_loss", "OptConfig",
+           "adamw_update", "init_opt_state", "schedule",
+           "build_prefill_step", "build_serve_step", "build_train_step",
+           "init_train_state", "prefill_step", "serve_step", "train_step",
+           "train_state_specs"]

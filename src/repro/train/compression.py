@@ -1,0 +1,57 @@
+"""Int8 error-feedback gradient compression for cross-pod (DCN) sync.
+
+DCN is the scarcest bandwidth in a multi-pod fleet (DESIGN §7).  The
+cross-pod gradient exchange is compressed 4× by quantizing each gradient
+leaf to int8 with a per-leaf scale and *error feedback* (the quantization
+residual is added to the next step's gradient — provably preserves SGD
+convergence, Karimireddy et al. 2019).
+
+Wire format per leaf: int8 tensor + f32 scale.  The exchange is an
+``all_gather`` of the int8 payload over the ``pod`` axis (true int8 on the
+wire) followed by a local dequantized mean — for small pod counts this
+moves (P−1)/P · ¼ the bytes of an f32 ring all-reduce.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize(g, err):
+    """(int8 payload, f32 scale, new error) with error feedback."""
+    gf = g.astype(jnp.float32) + err
+    scale = jnp.max(jnp.abs(gf)) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(gf / scale), -127, 127).astype(jnp.int8)
+    new_err = gf - q.astype(jnp.float32) * scale
+    return q, scale, new_err
+
+
+def dequantize(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def cross_pod_mean(grads, err_state, axis_name: str = "pod"):
+    """Compressed mean over the pod axis (inside shard_map over `pod`).
+
+    grads/err_state: pytrees of per-pod gradients and error buffers.
+    Returns (mean grads f32, new error state)."""
+
+    def leaf(g, err):
+        q, scale, new_err = quantize(g, err)
+        qs = jax.lax.all_gather(q, axis_name)            # (P, ...) int8 wire
+        ss = jax.lax.all_gather(scale, axis_name)        # (P,) f32
+        deq = qs.astype(jnp.float32) * ss.reshape(
+            (-1,) + (1,) * (qs.ndim - 1))
+        return deq.mean(0).astype(g.dtype), new_err
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_e = jax.tree.leaves(err_state)
+    out = [leaf(g, e) for g, e in zip(flat_g, flat_e)]
+    return (jax.tree.unflatten(treedef, [o[0] for o in out]),
+            jax.tree.unflatten(treedef, [o[1] for o in out]))
+
+
+def init_error_state(grads_shape_tree):
+    return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32),
+                        grads_shape_tree)

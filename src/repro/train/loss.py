@@ -1,0 +1,36 @@
+"""Masked cross-entropy LM loss over padded-vocab logits."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+IGNORE = -1
+
+
+def cross_entropy(logits, labels):
+    """logits: (B, T, Vp); labels: (B, T) int32 with IGNORE for masked
+    positions (modality-frontend slots, padding).  Mean over valid."""
+    lf = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(lf, axis=-1)
+    valid = labels != IGNORE
+    safe = jnp.where(valid, labels, 0)
+    picked = jnp.take_along_axis(lf, safe[..., None], axis=-1)[..., 0]
+    nll = (lse - picked) * valid
+    count = jnp.maximum(valid.sum(), 1)
+    return nll.sum() / count, count
+
+
+def lm_loss(params, batch, cfg, forward_fn, aux_weight: float = 0.01):
+    frontend = batch.get("frontend")
+    logits, aux = forward_fn(params, batch["tokens"], cfg,
+                             frontend=frontend)
+    labels = batch["labels"]
+    if frontend is not None:
+        # frontend slots carry no labels
+        b, f = labels.shape[0], frontend.shape[1]
+        pad = jnp.full((b, f), IGNORE, labels.dtype)
+        labels = jnp.concatenate([pad, labels], axis=1)
+    ce, count = cross_entropy(logits, labels)
+    return ce + aux_weight * aux, {"ce": ce, "aux": aux,
+                                   "tokens": count}

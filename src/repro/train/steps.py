@@ -1,0 +1,223 @@
+"""Step functions: train, prefill, decode — the jit/lower targets.
+
+``make_*`` builders return (fn, in_shardings, out_shardings, donate) so
+the launcher and the dry-run lower identical artifacts.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..models import sharding as shd
+from ..models.transformer import decode_step, forward, init_params
+from .loss import lm_loss
+from .optimizer import OptConfig, adamw_update, init_opt_state
+
+
+def train_state_specs(cfg, mesh):
+    pspec = shd.param_specs(cfg, mesh)
+    return {
+        "params": pspec,
+        "m": pspec,
+        "v": pspec,
+        "step": P(),
+    }
+
+
+def init_train_state(key, cfg):
+    params = init_params(key, cfg)
+    opt = init_opt_state(params)
+    return {"params": params, "m": opt["m"], "v": opt["v"],
+            "step": opt["step"]}
+
+
+def train_step(state, batch, cfg, opt: OptConfig, constrain=None,
+               moe_c=None, grad_constrain=None, microbatches: int = 1,
+               grad_sync_dtype=None):
+    """Forward + backward + AdamW, with gradient accumulation.
+
+    ``microbatches`` > 1 scans over batch slices accumulating f32 grads —
+    the production memory lever: live activations shrink by the microbatch
+    factor while the optimizer still sees the full global batch.
+
+    ``grad_constrain`` pins per-microbatch grads to the parameter sharding:
+    without it GSPMD all-reduces *unsharded* per-layer grads over every
+    batch axis each microbatch (the 450 GB-per-device cross-pod AR the
+    jamba dry-run exposed); with it the sync is a reduce-scatter to the
+    FSDP layout + a small sharded cross-pod all-reduce."""
+    fwd = functools.partial(forward, constrain=constrain, moe_c=moe_c)
+    gc = grad_constrain or (lambda g: g)
+
+    def loss_fn(params, mb):
+        return lm_loss(params, mb, cfg, fwd)
+
+    params = state["params"]
+    if microbatches <= 1:
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, batch)
+        grads = gc(jax.tree.map(lambda g: g.astype(jnp.float32), grads))
+    else:
+        def split(x):
+            b = x.shape[0]
+            return x.reshape(microbatches, b // microbatches, *x.shape[1:])
+
+        mbs = jax.tree.map(split, batch)
+        zero = gc(jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params))
+
+        def acc_body(carry, mb):
+            g_acc, loss_acc = carry
+            (loss, metrics), g = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, mb)
+            if grad_sync_dtype is not None:
+                # sync-precision lever (§Perf B2): the per-microbatch
+                # reduce-scatter moves bf16; accumulation stays f32
+                g = jax.tree.map(
+                    lambda x: x.astype(grad_sync_dtype), g)
+            g_acc = gc(jax.tree.map(
+                lambda a, b_: a + b_.astype(jnp.float32), g_acc, gc(g)))
+            return (g_acc, loss_acc + loss), metrics
+
+        (grads, loss_sum), metrics = jax.lax.scan(
+            acc_body, (zero, jnp.zeros((), jnp.float32)), mbs)
+        grads = jax.tree.map(lambda g: g / microbatches, grads)
+        loss = loss_sum / microbatches
+        metrics = jax.tree.map(lambda m: m[-1], metrics)
+
+    new_params, new_opt, opt_metrics = adamw_update(
+        params, grads, {"m": state["m"], "v": state["v"],
+                        "step": state["step"]}, opt)
+    new_state = {"params": new_params, "m": new_opt["m"],
+                 "v": new_opt["v"], "step": new_opt["step"]}
+    metrics = dict(metrics, loss=loss, **opt_metrics)
+    return new_state, metrics
+
+
+def prefill_step(params, batch, cfg, constrain=None, moe_c=None):
+    """Prefill forward: last-position logits (serving semantics).  The
+    lm_head projection runs on the last position only (§Perf A1) — the
+    full (B, 32768, V) logits tensor never exists."""
+    logits, _ = forward(params, batch["tokens"], cfg,
+                        frontend=batch.get("frontend"),
+                        constrain=constrain, moe_c=moe_c,
+                        logits_last_only=True)
+    return logits
+
+
+def serve_step(params, token, caches, step_idx, cfg, constrain=None,
+               moe_c=None):
+    """One-token decode against the cache (decode dry-run cells)."""
+    logits, new_caches = decode_step(params, token, caches, step_idx, cfg,
+                                     constrain=constrain, moe_c=moe_c)
+    next_token = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+    return next_token[:, None], new_caches
+
+
+# ------------------------------------------------------------- jit builders
+def default_microbatches(cfg, mesh, global_batch: int) -> int:
+    """Largest accumulation factor keeping ≥1 example per data shard."""
+    n_b = 1
+    for a in shd.batch_axes(mesh):
+        n_b *= mesh.shape[a]
+    target = cfg.train_microbatches or 8
+    mb = 1
+    while (global_batch % (mb * 2) == 0
+           and (global_batch // (mb * 2)) % n_b == 0 and mb < target):
+        mb *= 2
+    return mb
+
+
+def build_train_step(cfg, mesh, opt: OptConfig | None = None,
+                     donate: bool = True, global_batch: int | None = None,
+                     microbatches: int | None = None,
+                     grad_sync_dtype=None):
+    opt = opt or OptConfig()
+    shd.set_flash_mesh(mesh)
+    sspec = train_state_specs(cfg, mesh)
+    bspec = shd.train_batch_specs(mesh,
+                                  has_frontend=cfg.frontend_tokens > 0)
+    n_b = 1
+    for a in shd.batch_axes(mesh):
+        n_b *= mesh.shape[a]
+    gb = global_batch or n_b
+    if microbatches is None:
+        microbatches = default_microbatches(cfg, mesh, gb)
+    mb_batch = gb // microbatches if gb % microbatches == 0 else gb
+    constrain = shd.activation_constrainer(mesh, mb_batch)
+    moe_c = shd.moe_constrainers(cfg, mesh, mb_batch)
+    pspec_named = shd.named(mesh, sspec["params"])
+
+    def grad_constrain(g):
+        return jax.tree.map(jax.lax.with_sharding_constraint, g,
+                            pspec_named)
+
+    fn = functools.partial(train_step, cfg=cfg, opt=opt,
+                           constrain=constrain, moe_c=moe_c,
+                           grad_constrain=grad_constrain,
+                           microbatches=microbatches,
+                           grad_sync_dtype=grad_sync_dtype)
+    metrics_spec = {k: P() for k in
+                    ("ce", "aux", "tokens", "loss", "grad_norm", "lr")}
+    jit_fn = jax.jit(
+        fn,
+        in_shardings=(shd.named(mesh, sspec), shd.named(mesh, bspec)),
+        out_shardings=(shd.named(mesh, sspec),
+                       shd.named(mesh, metrics_spec)),
+        donate_argnums=(0,) if donate else (),
+    )
+    return jit_fn, sspec, bspec
+
+
+def build_prefill_step(cfg, mesh, global_batch: int | None = None):
+    shd.set_flash_mesh(mesh)
+    pspec = shd.param_specs(cfg, mesh)
+    bspec = shd.train_batch_specs(mesh,
+                                  has_frontend=cfg.frontend_tokens > 0)
+    bspec = {k: v for k, v in bspec.items() if k != "labels"}
+    ba = shd.batch_axes(mesh)
+    n_b = 1
+    for a in ba:
+        n_b *= mesh.shape[a]
+    gb = global_batch or n_b
+    constrain = shd.activation_constrainer(mesh, gb)
+    moe_c = shd.moe_constrainers(cfg, mesh, gb)
+    out_spec = P(ba, None, None)
+    fn = functools.partial(prefill_step, cfg=cfg, constrain=constrain,
+                           moe_c=moe_c)
+    jit_fn = jax.jit(fn,
+                     in_shardings=(shd.named(mesh, pspec),
+                                   shd.named(mesh, bspec)),
+                     out_shardings=NamedSharding(mesh, out_spec))
+    return jit_fn, pspec, bspec
+
+
+def build_serve_step(cfg, mesh, batch: int, max_len: int,
+                     donate: bool = True):
+    seq_shard = batch == 1          # long-context: shard the cache seq dim
+    shd.set_flash_mesh(mesh)
+    pspec = shd.param_specs(cfg, mesh)
+    cspec = shd.cache_specs(cfg, mesh, batch, seq_shard=seq_shard)
+    ba = shd.batch_axes(mesh)
+    n_b = 1
+    for a in ba:
+        n_b *= mesh.shape[a]
+    tok_spec = P(ba, None) if batch % n_b == 0 and batch >= n_b else P(None,
+                                                                       None)
+    constrain = shd.activation_constrainer(mesh, batch)
+    moe_c = shd.moe_constrainers(cfg, mesh, batch)
+    fn = functools.partial(serve_step, cfg=cfg, constrain=constrain,
+                           moe_c=moe_c)
+    jit_fn = jax.jit(
+        fn,
+        in_shardings=(shd.named(mesh, pspec),
+                      NamedSharding(mesh, tok_spec),
+                      shd.named(mesh, cspec), NamedSharding(mesh, P())),
+        out_shardings=(NamedSharding(mesh, tok_spec),
+                       shd.named(mesh, cspec)),
+        donate_argnums=(2,) if donate else (),
+    )
+    return jit_fn, pspec, cspec, tok_spec

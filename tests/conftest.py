@@ -1,0 +1,12 @@
+import jax
+import numpy as np
+import pytest
+
+# Tests run on the single CPU device; the 512-device forcing happens ONLY
+# in launch/dryrun.py (and the dedicated subprocess tests), never here.
+jax.config.update("jax_platforms", "cpu")
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,115 @@
+"""HLO analyzer: trip counts, dot FLOPs, collective pricing — validated
+against a hand-built HLO snippet and a real compiled module."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.analysis import analyze, parse_module, roofline_from_cost
+from repro.analysis.hlo import (_replica_group_info, _ring_factor,
+                                shape_numel_bytes, Instruction)
+
+SYNTH = """
+HloModule test
+
+%body (p: (s32[], f32[8,16])) -> (s32[], f32[8,16]) {
+  %p = (s32[], f32[8,16]{1,0}) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %x = f32[8,16]{1,0} get-tuple-element(%p), index=1
+  %w = f32[16,16]{1,0} constant({...})
+  %d = f32[8,16]{1,0} dot(%x, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %ar = f32[8,16]{1,0} all-reduce(%d), channel_id=1, replica_groups=[32,16]<=[512], use_global_device_ids=true, to_apply=%sum
+  %one = s32[] constant(1)
+  %i2 = s32[] add(%i, %one)
+  ROOT %t = (s32[], f32[8,16]{1,0}) tuple(%i2, %ar)
+}
+
+%cond (p: (s32[], f32[8,16])) -> pred[] {
+  %p = (s32[], f32[8,16]{1,0}) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %n = s32[] constant(12)
+  ROOT %lt = pred[] compare(%i, %n), direction=LT
+}
+
+%sum (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %s = f32[] add(%a, %b)
+}
+
+ENTRY %main (arg: f32[8,16]) -> f32[8,16] {
+  %arg = f32[8,16]{1,0} parameter(0)
+  %zero = s32[] constant(0)
+  %tup = (s32[], f32[8,16]{1,0}) tuple(%zero, %arg)
+  %w = (s32[], f32[8,16]{1,0}) while(%tup), condition=%cond, body=%body
+  ROOT %out = f32[8,16]{1,0} get-tuple-element(%w), index=1
+}
+"""
+
+
+def test_synthetic_module_trip_count_and_flops():
+    cost = analyze(SYNTH, pod_size=256)
+    assert cost.trip_counts == {"w": 12}
+    # dot: 2 * 8*16 * 16 flops per iteration × 12
+    assert cost.dot_flops == 12 * 2 * 8 * 16 * 16
+    # all-reduce: g=16 within one pod, f32[8,16] = 512B
+    ar = [c for c in cost.collectives if c.op == "all-reduce"]
+    assert len(ar) == 1
+    assert ar[0].group_size == 16 and not ar[0].cross_pod
+    assert np.isclose(ar[0].wire_bytes, 12 * 2 * (15 / 16) * 512)
+
+
+def test_replica_group_parsing():
+    ins = Instruction("x", "f32[4]", "all-reduce",
+                      "%y), replica_groups=[16,32]<=[32,16]T(1,0), x")
+    g, pods = _replica_group_info(ins, pod_size=256)
+    assert g == 32 and pods == 2      # strided groups span both pods
+    ins2 = Instruction("x", "f32[4]", "all-reduce",
+                       "%y), replica_groups={{0,1,2},{3,4,5}}, x")
+    g, pods = _replica_group_info(ins2, pod_size=256)
+    assert g == 3 and pods == 1
+
+
+def test_shape_parsing():
+    assert shape_numel_bytes("f32[8,16]{1,0}") == (128, 512)
+    assert shape_numel_bytes("bf16[2,3]") == (6, 12)
+    assert shape_numel_bytes("(s32[], bf16[4,4]{1,0})") == (17, 36)
+    assert shape_numel_bytes("pred[]") == (1, 1)
+
+
+def test_ring_factors():
+    assert _ring_factor("all-reduce", 16) == 2 * 15 / 16
+    assert _ring_factor("all-gather", 4) == 3
+    assert _ring_factor("reduce-scatter", 8) == 7 / 8
+    assert _ring_factor("all-reduce", 1) == 0.0
+
+
+def test_real_compiled_module_scan_counting():
+    """Scanned matmul: analyzer must multiply the trip count that
+    cost_analysis() misses (the DESIGN §4 probe, as a regression test)."""
+    d = 64
+    def step(w, x):
+        def body(c, wl):
+            return jnp.tanh(c @ wl), ()
+        h, _ = jax.lax.scan(body, x, w)
+        return jnp.sum(h)
+    compiled = jax.jit(step).lower(
+        jax.ShapeDtypeStruct((5, d, d), jnp.float32),
+        jax.ShapeDtypeStruct((8, d), jnp.float32)).compile()
+    cost = analyze(compiled.as_text())
+    expected_dot = 5 * 2 * 8 * d * d
+    assert cost.dot_flops == expected_dot, (cost.dot_flops, expected_dot)
+    rl = roofline_from_cost(cost, model_flops_per_device=expected_dot)
+    assert rl.bound in ("memory", "compute")
+    assert 0 < rl.model_flops_ratio <= 1.2
+
+
+def test_roofline_terms():
+    from repro.analysis.hlo import HloCost
+    c = HloCost(flops=197e12, hbm_bytes=819e9 * 2)
+    rl = roofline_from_cost(c, model_flops_per_device=98.5e12)
+    assert np.isclose(rl.compute_s, 1.0)
+    assert np.isclose(rl.memory_s, 2.0)
+    assert rl.bound == "memory"
+    assert np.isclose(rl.roofline_fraction, 0.5)
+    assert np.isclose(rl.model_flops_ratio, 0.5)

@@ -1,0 +1,122 @@
+"""Checkpoint roundtrip/atomicity/async + fault-tolerance policies."""
+
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.checkpoint import CheckpointManager
+from repro.runtime.fault_tolerance import (Action, RestartPolicy,
+                                           StragglerMonitor,
+                                           run_with_restarts)
+
+
+def _state(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {"params": {"w": jax.random.normal(k, (8, 8)),
+                       "b": jnp.zeros((8,))},
+            "step": jnp.int32(7)}
+
+
+def test_save_restore_roundtrip(tmp_path):
+    mgr = CheckpointManager(tmp_path)
+    st = _state()
+    mgr.save(7, st, mesh_shape=(16, 16))
+    assert mgr.all_steps() == [7]
+    target = jax.tree.map(lambda x: jnp.zeros_like(x), st)
+    back = mgr.restore(7, target)
+    assert np.allclose(np.asarray(back["params"]["w"]),
+                       np.asarray(st["params"]["w"]))
+    assert int(back["step"]) == 7
+
+
+def test_async_save_and_gc(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=2)
+    for s in (1, 2, 3, 4):
+        mgr.save_async(s, _state(s))
+    mgr.wait()
+    assert mgr.all_steps() == [3, 4]
+    assert mgr.latest_step() == 4
+
+
+def test_restore_rejects_structure_change(tmp_path):
+    mgr = CheckpointManager(tmp_path)
+    mgr.save(1, _state())
+    bad_target = {"params": {"w": jnp.zeros((4, 4))}, "step": jnp.int32(0)}
+    with pytest.raises(ValueError):
+        mgr.restore(1, bad_target)
+
+
+def test_bf16_roundtrip(tmp_path):
+    """npz can't hold ml_dtypes natively — the uint16-view path must
+    restore bf16 bit-exactly (regression: train_lm restore crashed)."""
+    mgr = CheckpointManager(tmp_path)
+    st = {"w": jax.random.normal(jax.random.PRNGKey(0), (16, 16)
+                                 ).astype(jnp.bfloat16),
+          "v": jnp.ones((4,), jnp.float32)}
+    mgr.save(3, st)
+    back = mgr.restore(3, jax.tree.map(jnp.zeros_like, st))
+    assert back["w"].dtype == jnp.bfloat16
+    assert np.array_equal(np.asarray(back["w"], np.float32),
+                          np.asarray(st["w"], np.float32))
+
+
+def test_atomic_tmpdir_never_latest(tmp_path):
+    mgr = CheckpointManager(tmp_path)
+    # a stale .tmp dir (crashed writer) must be invisible to all_steps
+    (tmp_path / "step_00000099.tmp").mkdir()
+    mgr.save(1, _state())
+    assert mgr.all_steps() == [1]
+
+
+# ------------------------------------------------------- fault tolerance
+def test_straggler_detection_flags_slow_host():
+    mon = StragglerMonitor(n_hosts=4, threshold=1.5, patience=2)
+    act = Action.CONTINUE
+    for _ in range(4):
+        act, slow = mon.record_step({0: 1.0, 1: 1.0, 2: 1.0, 3: 5.0})
+    assert act in (Action.REBALANCE, Action.EVICT_RESTART)
+    assert slow == [3]
+
+
+def test_straggler_eviction_escalation():
+    mon = StragglerMonitor(n_hosts=2, threshold=1.5, patience=2,
+                           evict_after=4)
+    act = Action.CONTINUE
+    for _ in range(10):
+        act, slow = mon.record_step({0: 1.0, 1: 10.0})
+        if act is Action.EVICT_RESTART:
+            break
+    assert act is Action.EVICT_RESTART
+
+
+def test_dead_host_heartbeats():
+    mon = StragglerMonitor(n_hosts=2, max_missed=3)
+    acts = [mon.heartbeat_missed(1) for _ in range(3)]
+    assert acts[-1] is Action.EVICT_RESTART
+
+
+def test_restart_policy_backoff_bounds():
+    pol = RestartPolicy(max_restarts=3, backoff_s=1.0, backoff_mult=2.0)
+    delays = [pol.next_delay() for _ in range(4)]
+    assert delays[:3] == [1.0, 2.0, 4.0]
+    assert delays[3] is None
+
+
+def test_run_with_restarts_recovers():
+    calls = {"n": 0}
+
+    def train_fn(state):
+        calls["n"] += 1
+        if calls["n"] < 3:
+            raise RuntimeError("simulated pod failure")
+        return state + calls["n"]
+
+    out = run_with_restarts(train_fn, restore_fn=lambda: 100,
+                            policy=RestartPolicy(backoff_s=0.0),
+                            sleep=lambda *_: None)
+    assert out == 103
+    assert calls["n"] == 3

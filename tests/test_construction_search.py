@@ -1,0 +1,89 @@
+"""Construction algorithms + local search: bijectivity, quality ordering,
+monotone improvement, termination — the paper's §2 behaviors."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import Hierarchy, grid3d, map_processes, qap_objective, \
+    random_geometric
+from repro.core.construction import CONSTRUCTIONS, construct
+from repro.core.local_search import (communication_pairs, local_search,
+                                     nsquare_pairs, parallel_sweep_search,
+                                     pruned_pairs)
+
+H64 = Hierarchy((4, 4, 4), (1.0, 10.0, 100.0))
+
+
+@pytest.mark.parametrize("name", sorted(CONSTRUCTIONS))
+def test_constructions_are_bijections(name):
+    g = grid3d(4, 4, 4)
+    perm = construct(name, g, H64, seed=3)
+    assert sorted(perm) == list(range(64))
+
+
+def test_topdown_beats_naive_constructions():
+    g = grid3d(4, 4, 4)
+    js = {name: qap_objective(g, H64, construct(name, g, H64, seed=0))
+          for name in CONSTRUCTIONS}
+    assert js["hierarchytopdown"] < js["random"]
+    assert js["hierarchytopdown"] < js["identity"]
+    assert js["hierarchybottomup"] < js["random"]
+
+
+@pytest.mark.parametrize("nbhd", ["nsquare", "nsquarepruned",
+                                  "communication"])
+def test_local_search_monotone_and_consistent(nbhd):
+    g = random_geometric(64, 0.25, seed=5)
+    perm = construct("random", g, H64, seed=1)
+    stats = local_search(g, H64, perm, neighborhood=nbhd,
+                         communication_neighborhood_dist=3)
+    # objective trace strictly decreasing
+    tr = stats.objective_trace
+    assert all(b <= a + 1e-9 for a, b in zip(tr, tr[1:]))
+    # incremental objective equals recomputation (the paper's fast update)
+    assert np.isclose(stats.final_objective, qap_objective(g, H64, perm))
+    assert stats.final_objective <= stats.initial_objective
+
+
+def test_neighborhood_nesting():
+    """N_C ⊆ N_C^2 ⊆ … ⊆ N² (guide §2.1)."""
+    g = random_geometric(24, 0.3, seed=2)
+    sizes = [len(communication_pairs(g, d)) for d in (1, 2, 4, 8)]
+    assert all(a <= b for a, b in zip(sizes, sizes[1:]))
+    assert sizes[-1] <= len(nsquare_pairs(24))
+    p1 = {tuple(p) for p in communication_pairs(g, 1)}
+    p2 = {tuple(p) for p in communication_pairs(g, 2)}
+    assert p1 <= p2
+
+
+def test_pruned_pairs_skip_isolated_pairs():
+    from repro.core import from_edges
+    g = from_edges(6, [0, 1], [1, 2], [1.0, 1.0])  # 3,4,5 isolated
+    pp = {tuple(p) for p in pruned_pairs(g)}
+    assert (3, 4) not in pp and (4, 5) not in pp
+    assert (0, 1) in pp
+    # active-isolated pairs retained
+    assert (0, 3) in pp or (3, 0) in pp
+
+
+def test_parallel_sweep_matches_sequential_quality():
+    g = grid3d(4, 4, 4)
+    p_seq = construct("random", g, H64, seed=9)
+    p_par = p_seq.copy()
+    s_seq = local_search(g, H64, p_seq, neighborhood="communication",
+                         communication_neighborhood_dist=2)
+    s_par = parallel_sweep_search(g, H64, p_par,
+                                  communication_pairs(g, 2))
+    assert s_par.final_objective <= s_seq.initial_objective * 0.8
+    assert np.isclose(s_par.final_objective, qap_objective(g, H64, p_par))
+
+
+def test_map_processes_end_to_end():
+    g = grid3d(4, 4, 4)
+    res = map_processes(g, H64, preconfiguration_mapping="fast",
+                        communication_neighborhood_dist=2, seed=0)
+    assert sorted(res.perm) == list(range(64))
+    assert res.final_objective <= res.initial_objective
+    with pytest.raises(ValueError):
+        map_processes(grid3d(3, 3, 3), H64)   # n mismatch

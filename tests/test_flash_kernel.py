@@ -1,0 +1,126 @@
+"""Flash-attention Pallas kernel sweeps vs a dense jnp oracle
+(shapes × GQA groups × windows × dtypes, interpret=True)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import flash_attention_kernel
+
+
+def ref_attn(q, k, v, window=0):
+    b, t, h, hd = q.shape
+    s_len, kvh = k.shape[1], k.shape[2]
+    g = h // kvh
+    qg = q.reshape(b, t, kvh, g, hd)
+    s = jnp.einsum("btkgh,bskh->bkgts", qg, k).astype(jnp.float32)
+    s *= hd ** -0.5
+    qp = jnp.arange(t)[:, None]
+    kp = jnp.arange(s_len)[None, :]
+    mask = qp >= kp
+    if window:
+        mask &= (qp - kp) < window
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgts,bskh->btkgh", p.astype(v.dtype), v)
+    return o.reshape(b, t, h, hd)
+
+
+CASES = [
+    # b, t, h, kv, hd, window, qb, kb
+    (2, 128, 4, 2, 32, 0, 64, 64),      # GQA g=2, full causal
+    (1, 256, 8, 2, 64, 0, 128, 64),     # deeper GQA
+    (2, 128, 4, 4, 32, 48, 32, 32),     # MHA + window
+    (1, 192, 6, 2, 32, 64, 64, 32),     # non-pow2 T → block fallback
+    (2, 96, 2, 1, 16, 0, 32, 96),       # single kv head (MQA)
+    (1, 128, 4, 4, 32, 16, 64, 64),     # tiny window
+]
+
+
+@pytest.mark.parametrize("b,t,h,kv,hd,win,qb,kb", CASES)
+def test_flash_kernel_matches_oracle(b, t, h, kv, hd, win, qb, kb):
+    key = jax.random.PRNGKey(0)
+    q = jax.random.normal(key, (b, t, h, hd), jnp.float32)
+    k = jax.random.normal(jax.random.fold_in(key, 1), (b, t, kv, hd),
+                          jnp.float32)
+    v = jax.random.normal(jax.random.fold_in(key, 2), (b, t, kv, hd),
+                          jnp.float32)
+    o_ref = ref_attn(q, k, v, win)
+    o_ker = flash_attention_kernel(q, k, v, window=win, q_block=qb,
+                                   kv_block=kb, interpret=True)
+    err = float(jnp.max(jnp.abs(o_ref - o_ker)))
+    assert err < 2e-5, err
+
+
+def test_flash_kernel_bf16():
+    key = jax.random.PRNGKey(3)
+    q = jax.random.normal(key, (1, 128, 4, 32), jnp.bfloat16)
+    k = jax.random.normal(jax.random.fold_in(key, 1), (1, 128, 2, 32),
+                          jnp.bfloat16)
+    v = jax.random.normal(jax.random.fold_in(key, 2), (1, 128, 2, 32),
+                          jnp.bfloat16)
+    o_ref = ref_attn(q.astype(jnp.float32), k.astype(jnp.float32),
+                     v.astype(jnp.float32))
+    o_ker = flash_attention_kernel(q, k, v, q_block=64, kv_block=64,
+                                   interpret=True)
+    assert o_ker.dtype == jnp.bfloat16
+    err = float(jnp.max(jnp.abs(o_ref - o_ker.astype(jnp.float32))))
+    assert err < 0.05, err
+
+
+def test_flash_matches_model_attention_path():
+    """The kernel must agree with the model's pure-JAX blocked attention
+    (the §Perf A3 swap is a drop-in)."""
+    from repro.configs import get_smoke_config
+    from repro.models.attention import flash_attention
+
+    cfg = get_smoke_config("granite-3-2b")
+    key = jax.random.PRNGKey(1)
+    b, t = 2, 128
+    q = jax.random.normal(key, (b, t, 4, cfg.head_dim_), jnp.float32)
+    k = jax.random.normal(jax.random.fold_in(key, 1),
+                          (b, t, 2, cfg.head_dim_), jnp.float32)
+    v = jax.random.normal(jax.random.fold_in(key, 2),
+                          (b, t, 2, cfg.head_dim_), jnp.float32)
+    o_model = flash_attention(q, k, v, cfg)
+    o_kernel = flash_attention_kernel(q, k, v,
+                                      window=cfg.sliding_window,
+                                      q_block=cfg.q_block,
+                                      kv_block=cfg.kv_block,
+                                      interpret=True)
+    err = float(jnp.max(jnp.abs(o_model - o_kernel)))
+    assert err < 2e-5, err
+
+
+def test_head_padding_is_inert():
+    """§Perf A2: padded-head configs produce identical logits."""
+    import dataclasses
+    from repro.configs import get_smoke_config
+    from repro.models.attention import init_attention, attention_block
+
+    cfg = get_smoke_config("llava-next-34b")  # 4 heads, kv=2 in smoke
+    cfg_pad = dataclasses.replace(cfg, pad_heads_to=3)  # 4 → kv*3=6 heads
+    assert cfg_pad.n_heads_eff == 6
+    key = jax.random.PRNGKey(5)
+    p = init_attention(key, cfg)
+    p_pad = init_attention(key, cfg_pad)
+    # copy the real heads into the padded layout: head (kvh, g) major
+    kv, g = cfg.n_kv_heads, cfg.n_heads // cfg.n_kv_heads
+    g_eff = cfg_pad.n_heads_eff // kv
+    wq = np.zeros(p_pad["wq"].shape, np.float32)
+    wo = np.zeros(p_pad["wo"].shape, np.float32)
+    for kvh in range(kv):
+        for gg in range(g):
+            src, dst = kvh * g + gg, kvh * g_eff + gg
+            wq[:, dst] = np.asarray(p["wq"][:, src], np.float32)
+            wo[dst] = np.asarray(p["wo"][src], np.float32)
+    p_pad = {"wq": jnp.asarray(wq, cfg.jnp_dtype), "wk": p["wk"],
+             "wv": p["wv"], "wo": jnp.asarray(wo, cfg.jnp_dtype)}
+    x = jax.random.normal(key, (2, 64, cfg.d_model), cfg.jnp_dtype) * 0.5
+    pos = jnp.broadcast_to(jnp.arange(64), (2, 64))
+    o1 = attention_block(p, x, pos, cfg)
+    o2 = attention_block(p_pad, x, pos, cfg_pad)
+    err = float(jnp.max(jnp.abs(o1.astype(jnp.float32)
+                                - o2.astype(jnp.float32))))
+    assert err < 2e-2, err

@@ -1,0 +1,81 @@
+"""Graph substrate: CSR construction, Metis IO, graphchecker semantics."""
+
+import io
+
+import numpy as np
+import pytest
+
+from repro.core import (CommGraph, GraphFormatError, from_dense, from_edges,
+                        grid3d, random_geometric, read_metis, validate,
+                        write_metis)
+
+
+def test_from_edges_symmetry():
+    g = from_edges(4, [0, 1, 2], [1, 2, 3], [1.0, 2.0, 3.0])
+    assert g.n == 4 and g.num_edges == 3
+    # backward edges present with equal weight
+    assert set(g.neighbors(1)) == {0, 2}
+    validate(g)
+
+
+def test_from_edges_merges_parallel():
+    g = from_edges(3, [0, 0], [1, 1], [1.0, 2.0])
+    assert g.num_edges == 1
+    assert g.weights(0)[0] == 3.0
+
+
+def test_self_loop_rejected():
+    with pytest.raises(GraphFormatError):
+        from_edges(3, [0], [0], [1.0])
+
+
+def test_dense_roundtrip(rng):
+    g = random_geometric(20, 0.5, seed=3)
+    C = g.to_dense()
+    g2 = from_dense(C)
+    assert g2.num_edges == g.num_edges
+    assert np.allclose(g2.to_dense(), C)
+
+
+def test_metis_roundtrip():
+    g = grid3d(3, 3, 3)
+    buf = io.StringIO()
+    write_metis(g, buf)
+    g2 = read_metis(io.StringIO(buf.getvalue()))
+    assert g2.n == g.n and g2.num_edges == g.num_edges
+    assert np.array_equal(g2.xadj, g.xadj)
+    assert np.array_equal(g2.adjncy, g.adjncy)
+
+
+def test_metis_comment_lines():
+    txt = "% a comment\n3 2\n% another\n2\n1 3\n2\n"
+    g = read_metis(io.StringIO(txt))
+    assert g.n == 3 and g.num_edges == 2
+
+
+def test_metis_edge_weights():
+    txt = "3 2 1\n2 7\n1 7 3 9\n2 9\n"
+    g = read_metis(io.StringIO(txt))
+    assert g.weights(0)[0] == 7.0
+    assert set(g.weights(1)) == {7.0, 9.0}
+
+
+@pytest.mark.parametrize("bad,why", [
+    ("3 2\n2\n1 3\n1\n", "missing backward edge"),          # 3 claims 1, not 2
+    ("3 1\n2\n1 3\n2\n", "edge count mismatch"),
+    ("2 1\n1\n1\n", "self-loop"),
+    ("2 1 1\n2 0\n1 0\n", "edge weight <= 0"),
+    ("2 1\n2 2\n1\n", "parallel edges"),
+])
+def test_graphchecker_rejects(bad, why):
+    with pytest.raises(GraphFormatError):
+        read_metis(io.StringIO(bad))
+
+
+def test_generators():
+    g = grid3d(4, 4, 4, torus=True)
+    assert g.n == 64
+    deg = np.diff(g.xadj)
+    assert np.all(deg == 6)  # torus is 6-regular
+    g2 = random_geometric(30, 0.3, seed=1)
+    validate(g2)

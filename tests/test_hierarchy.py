@@ -1,0 +1,58 @@
+"""Hierarchy + online distance oracle vs materialized matrix."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import Hierarchy, supermuc_like, tpu_v5e_fleet
+
+
+def test_parse_strings():
+    h = Hierarchy.from_strings("4:2:2", "1:10:100")
+    assert h.factors == (4, 2, 2) and h.n_pe == 16
+    assert h.distances == (1.0, 10.0, 100.0)
+
+
+def test_distance_basics():
+    h = Hierarchy((4, 2, 2), (1.0, 10.0, 100.0))
+    assert h.distance(0, 0) == 0
+    assert h.distance(0, 3) == 1       # same processor
+    assert h.distance(0, 4) == 10      # same node, diff processor
+    assert h.distance(0, 8) == 100     # diff node
+    assert h.distance(5, 4) == 1
+
+
+@given(st.lists(st.integers(2, 4), min_size=1, max_size=4),
+       st.integers(0, 10_000))
+@settings(max_examples=50, deadline=None)
+def test_online_oracle_matches_matrix(factors, seed):
+    dists = tuple(float(10 ** i) for i in range(len(factors)))
+    h = Hierarchy(tuple(factors), dists)
+    if h.n_pe > 256:
+        return
+    D = h.distance_matrix()
+    assert np.allclose(D, D.T)
+    assert np.all(np.diag(D) == 0)
+    rng = np.random.default_rng(seed)
+    p = rng.integers(0, h.n_pe, 32)
+    q = rng.integers(0, h.n_pe, 32)
+    assert np.allclose(h.distance(p, q), D[p, q])
+
+
+def test_lca_levels():
+    h = Hierarchy((4, 2, 2), (1.0, 10.0, 100.0))
+    assert h.lca_level(0, 1) == 1
+    assert h.lca_level(0, 4) == 2
+    assert h.lca_level(0, 8) == 3
+    assert h.lca_level(3, 3) == 0
+
+
+def test_presets():
+    assert tpu_v5e_fleet(2).n_pe == 512
+    assert tpu_v5e_fleet(1).n_pe == 256
+    assert supermuc_like().n_pe == 16 * 32 * 18
+
+
+def test_monotone_distances_required():
+    with pytest.raises(ValueError):
+        Hierarchy((2, 2), (10.0, 1.0))

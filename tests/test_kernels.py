@@ -1,0 +1,84 @@
+"""Pallas kernel sweeps: shapes × dtypes vs the pure-jnp ref oracles
+(interpret=True executes the kernel body on CPU)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import Hierarchy, grid3d, qap_objective, random_geometric
+from repro.core.objective import dense_gain_matrix
+from repro.kernels import ops
+from repro.kernels.ref import hier_distance_ref
+
+
+def _instance(n, seed, density=0.3):
+    rng = np.random.default_rng(seed)
+    C = np.triu(rng.random((n, n)) * (rng.random((n, n)) < density), 1)
+    C = C + C.T
+    D = np.triu(rng.random((n, n)), 1)
+    D = D + D.T
+    perm = rng.permutation(n)
+    return C, D, perm
+
+
+@pytest.mark.parametrize("n,tile", [(8, 8), (16, 8), (40, 16), (64, 32),
+                                    (100, 32), (128, 128), (192, 64),
+                                    (256, 128)])
+def test_swap_gain_kernel_shapes(n, tile):
+    C, D, perm = _instance(n, n)
+    G_np = dense_gain_matrix(C, D, perm)
+    G_ref = np.asarray(ops.gain_matrix_ref(C, D, perm))
+    G_ker = np.asarray(ops.gain_matrix(C, D, perm, tile=tile,
+                                       interpret=True))
+    assert np.allclose(G_ref, G_np, atol=1e-4)
+    assert np.allclose(G_ker, G_np, atol=1e-3), \
+        f"max err {np.abs(G_ker - G_np).max()}"
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_swap_gain_kernel_dtypes(dtype):
+    C, D, perm = _instance(64, 0)
+    G_np = dense_gain_matrix(C, D, perm)
+    G_ker = np.asarray(ops.gain_matrix(jnp.asarray(C, dtype),
+                                       jnp.asarray(D, dtype), perm,
+                                       tile=32, interpret=True))
+    tol = 1e-3 if dtype == jnp.float32 else 0.35  # bf16 inputs are coarse
+    assert np.max(np.abs(G_ker - G_np)) < tol * max(1, np.abs(G_np).max())
+
+
+@pytest.mark.parametrize("nx,ny,nz,h", [
+    (4, 4, 4, (16, 4)), (8, 8, 8, (16, 8, 4)), (4, 4, 2, (8, 2, 2)),
+])
+def test_qap_objective_kernel(nx, ny, nz, h):
+    g = grid3d(nx, ny, nz)
+    dists = tuple(float(10 ** i) for i in range(len(h)))
+    hier = Hierarchy(h, dists)
+    assert hier.n_pe == g.n
+    rng = np.random.default_rng(1)
+    for _ in range(3):
+        perm = rng.permutation(g.n)
+        j_core = qap_objective(g, hier, perm)
+        j_ker = ops.objective(g, hier, perm, interpret=True)
+        j_ref = ops.objective_ref(g, hier, perm)
+        assert np.isclose(j_ker, j_core, rtol=1e-5)
+        assert np.isclose(j_ref, j_core, rtol=1e-5)
+
+
+def test_hier_distance_ref_matches_core():
+    h = Hierarchy((4, 2, 2), (1.0, 10.0, 100.0))
+    idx = np.arange(16)
+    D = h.distance_matrix()
+    Dref = np.asarray(hier_distance_ref(
+        jnp.asarray(idx[:, None]), jnp.asarray(idx[None, :]),
+        tuple(int(s) for s in h.strides),
+        tuple(float(d) for d in h.distances)))
+    assert np.allclose(D, Dref)
+
+
+def test_empty_and_tiny_edges():
+    from repro.core import from_edges
+    g = from_edges(4, [0], [1], [2.0])
+    h = Hierarchy((2, 2), (1.0, 10.0))
+    perm = np.array([0, 1, 2, 3])
+    assert np.isclose(ops.objective(g, h, perm, interpret=True),
+                      qap_objective(g, h, perm))

@@ -1,0 +1,64 @@
+"""QAP objective + delta gains: sparse vs dense oracle, gain matrix."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (Hierarchy, qap_objective, qap_objective_dense,
+                        random_geometric, swap_gain)
+from repro.core.objective import (apply_swap, batched_swap_gains,
+                                  dense_gain_matrix)
+
+H = Hierarchy((4, 2, 2), (1.0, 10.0, 100.0))
+
+
+def _graph(seed):
+    return random_geometric(16, 0.45, seed=seed)
+
+
+@given(st.integers(0, 50), st.integers(0, 1000))
+@settings(max_examples=40, deadline=None)
+def test_sparse_equals_dense(gseed, pseed):
+    g = _graph(gseed)
+    perm = np.random.default_rng(pseed).permutation(16)
+    j1 = qap_objective(g, H, perm)
+    j2 = qap_objective_dense(g.to_dense(), H.distance_matrix(), perm)
+    assert np.isclose(j1, j2)
+
+
+@given(st.integers(0, 50), st.integers(0, 1000),
+       st.integers(0, 15), st.integers(0, 15))
+@settings(max_examples=60, deadline=None)
+def test_gain_equals_recompute(gseed, pseed, u, v):
+    """The paper's O(deg) delta gain must equal J(before) − J(after)."""
+    if u == v:
+        return
+    g = _graph(gseed)
+    perm = np.random.default_rng(pseed).permutation(16)
+    j0 = qap_objective(g, H, perm)
+    gain = swap_gain(g, H, perm, u, v)
+    p2 = perm.copy()
+    apply_swap(p2, u, v)
+    assert np.isclose(gain, j0 - qap_objective(g, H, p2), atol=1e-9)
+
+
+def test_batched_gains_match_single(rng):
+    g = _graph(7)
+    perm = rng.permutation(16)
+    pairs = np.array([(u, v) for u in range(16) for v in range(u + 1, 16)])
+    bg = batched_swap_gains(g, H, perm, pairs)
+    for (u, v), e in zip(pairs, bg):
+        assert np.isclose(e, swap_gain(g, H, perm, u, v))
+
+
+def test_dense_gain_matrix_matches(rng):
+    g = _graph(11)
+    C = g.to_dense()
+    D = H.distance_matrix()
+    perm = rng.permutation(16)
+    G = dense_gain_matrix(C, D, perm)
+    assert np.allclose(np.diag(G), 0)
+    for u in range(0, 16, 3):
+        for v in range(u + 1, 16, 2):
+            assert np.isclose(G[u, v], swap_gain(g, H, perm, u, v))
+    # symmetry: gain(u,v) == gain(v,u)
+    assert np.allclose(G, G.T)

@@ -1,0 +1,62 @@
+"""Partitioner invariants: perfect balance, label validity, cut sanity."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import grid3d, random_geometric
+from repro.core.partition import (PartitionConfig, block_sizes, cut_weight,
+                                  partition)
+
+
+@given(st.sampled_from([2, 4, 8, 16]), st.integers(0, 100))
+@settings(max_examples=20, deadline=None)
+def test_perfect_balance_grid(k, seed):
+    g = grid3d(4, 4, 4)
+    labels = partition(g, k, seed=seed)
+    assert labels.min() >= 0 and labels.max() == k - 1
+    assert np.all(block_sizes(labels, k) == g.n // k)
+
+
+@given(st.integers(2, 6), st.integers(0, 50))
+@settings(max_examples=20, deadline=None)
+def test_balance_non_power_of_two(k, seed):
+    g = random_geometric(60, 0.3, seed=seed)
+    labels = partition(g, k, seed=seed)
+    sizes = block_sizes(labels, k)
+    assert sizes.sum() == g.n
+    assert sizes.max() - sizes.min() <= 1     # ±1 when k ∤ n
+
+
+def test_cut_beats_random():
+    """The partitioner must beat a random assignment on structured graphs."""
+    g = grid3d(6, 6, 6)
+    labels = partition(g, 8, seed=0)
+    cut = cut_weight(g, labels)
+    rng = np.random.default_rng(0)
+    rand_cuts = []
+    for _ in range(5):
+        rl = rng.permutation(np.repeat(np.arange(8), g.n // 8))
+        rand_cuts.append(cut_weight(g, rl))
+    assert cut < 0.5 * min(rand_cuts)
+
+
+def test_preconfigurations():
+    g = grid3d(4, 4, 4)
+    cuts = {}
+    for pre in ("fast", "eco", "strong"):
+        cfg = PartitionConfig.preconfiguration(pre)
+        cuts[pre] = cut_weight(g, partition(g, 4, cfg, seed=0))
+    # strong should not be worse than fast (stochastic; allow equality)
+    assert cuts["strong"] <= cuts["fast"] * 1.5
+    with pytest.raises(ValueError):
+        PartitionConfig.preconfiguration("bogus")
+
+
+def test_disconnected_graph():
+    from repro.core import from_edges
+    # two disjoint triangles + 2 isolated vertices
+    g = from_edges(8, [0, 1, 2, 3, 4, 5], [1, 2, 0, 4, 5, 3],
+                   np.ones(6))
+    labels = partition(g, 2, seed=0)
+    assert np.all(block_sizes(labels, 2) == 4)
