@@ -8,8 +8,9 @@ import time
 
 import numpy as np
 
-from repro.core import map_processes, qap_objective, tpu_v5e_fleet
+from repro.core import Mapper, qap_objective, tpu_v5e_fleet
 from repro.core.comm_model import device_comm_graph, logical_traffic_summary
+from repro.launch.specs import placement_spec
 
 
 def _compiled_hlo():
@@ -59,8 +60,7 @@ def run(report):
     j_rand = qap_objective(g, h,
                            np.random.default_rng(0).permutation(512))
     t0 = time.perf_counter()
-    res = map_processes(g, h, preconfiguration_mapping="eco",
-                        communication_neighborhood_dist=3, seed=0)
+    res = Mapper(h, placement_spec(seed=0)).map(g)
     dt = time.perf_counter() - t0
     report(f"mesh_mapping/{src}/identity", 0, f"J={j_ident:.3e}")
     report(f"mesh_mapping/{src}/random", 0, f"J={j_rand:.3e}")

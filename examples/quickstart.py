@@ -1,16 +1,17 @@
-"""Quickstart: the paper's pipeline end to end in 40 lines.
+"""Quickstart: the paper's pipeline end to end with the session API.
 
   1. build a communication graph (a 3D stencil application),
   2. describe the machine hierarchy (the guide's parameter strings),
-  3. map processes to PEs with VieM (top-down + N_C^d local search),
-  4. evaluate the objective and per-level traffic.
+  3. declare the mapping in a MappingSpec and open a Mapper session,
+  4. map one graph — then a whole batch through the same session,
+  5. evaluate the objective and per-level traffic.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
 
 import numpy as np
 
-from repro.core import Hierarchy, grid3d, map_processes, qap_objective
+from repro.core import Hierarchy, Mapper, MappingSpec, grid3d, qap_objective
 from repro.core.comm_model import logical_traffic_summary
 
 # 1. an 8×8×8 stencil — 512 communicating processes
@@ -21,20 +22,38 @@ print(f"communication graph: n={g.n} processes, m={g.num_edges} edges")
 #    (--hierarchy_parameter_string=16:8:4 --distance_parameter_string=1:10:100)
 h = Hierarchy.from_strings("16:8:4", "1:10:100")
 
-# 3. map (defaults: hierarchytopdown construction + communication
-#    neighborhood with distance 10 — guide §4.1)
-res = map_processes(g, h, communication_neighborhood_dist=3,
-                    preconfiguration_mapping="fast", seed=0)
+# 3. declare *what* to compute: hierarchytopdown construction + N_C^d local
+#    search (guide §4.1 defaults), fast preconfiguration.  The spec is a
+#    frozen value — serialize it with spec.to_json() and hand the same file
+#    to the CLI via `viem --config spec.json`.
+spec = MappingSpec(neighborhood="communication", neighborhood_dist=3,
+                   preconfiguration="fast", seed=0)
+mapper = Mapper(h, spec)   # session: oracle + kernels built once, reused
+
+# 4. map one graph …
+res = mapper.map(g)
 print(f"construction J = {res.initial_objective:,.0f} "
       f"({res.construction_seconds:.2f}s)")
 print(f"after search  J = {res.final_objective:,.0f} "
       f"({res.search_seconds:.2f}s, {res.search_stats.swaps} swaps)")
+
+# … and a batch of same-shape graphs through the same session (the
+# hierarchy oracle and candidate neighborhoods are shared, not rebuilt):
+variants = []
+for i in range(4):
+    gg = grid3d(8, 8, 8)
+    gg.adjwgt = gg.adjwgt * (1.0 + 0.25 * i)   # shifting traffic intensity
+    variants.append(gg)
+batch = mapper.map_many(variants)
+print("batch         J =",
+      ", ".join(f"{r.final_objective:,.0f}" for r in batch))
+print(f"session cache: {mapper.cache_info()}")
 
 # compare against naive placements
 for name, perm in [("identity", np.arange(g.n)),
                    ("random", np.random.default_rng(0).permutation(g.n))]:
     print(f"{name:9s} J = {qap_objective(g, h, perm):,.0f}")
 
-# 4. where does the traffic live now?
+# 5. where does the traffic live now?
 for lvl, traffic in logical_traffic_summary(g, h, res.perm).items():
     print(f"  {lvl}: {traffic:,.0f}")

@@ -1,13 +1,19 @@
-"""`evaluator` — compute the QAP objective of a given mapping (guide §4.4)."""
+"""`evaluator` — compute the QAP objective of a given mapping (guide §4.4).
+
+``--compare_spec spec.json`` additionally runs VieM with that
+:class:`MappingSpec` and reports how the given mapping stacks up against
+what the solver would produce.
+"""
 
 from __future__ import annotations
 
 import argparse
 import sys
+from pathlib import Path
 
 import numpy as np
 
-from ..core import Hierarchy, qap_objective, read_metis
+from ..core import Hierarchy, Mapper, MappingSpec, qap_objective, read_metis
 from ..core.comm_model import logical_traffic_summary
 
 
@@ -17,6 +23,9 @@ def main(argv=None):
     ap.add_argument("--input_mapping", required=True)
     ap.add_argument("--hierarchy_parameter_string", required=True)
     ap.add_argument("--distance_parameter_string", required=True)
+    ap.add_argument("--compare_spec", default=None,
+                    help="MappingSpec JSON: also solve with this spec and "
+                         "print the comparison")
     args = ap.parse_args(argv)
 
     g = read_metis(args.file)
@@ -29,6 +38,18 @@ def main(argv=None):
     print(f"objective J(C,D,Pi) = {j:.6g}")
     for k, v in logical_traffic_summary(g, h, perm).items():
         print(f"  {k} = {v:.6g}")
+    if args.compare_spec:
+        try:
+            spec = MappingSpec.from_json(
+                Path(args.compare_spec).read_text()).validate()
+            res = Mapper(h, spec).map(g)
+        except (ValueError, OSError) as exc:
+            sys.exit(f"evaluator: {exc}")
+        ratio = j / res.final_objective if res.final_objective else \
+            float("inf")
+        print(f"viem[{spec.construction}+{spec.neighborhood}] "
+              f"J = {res.final_objective:.6g}")
+        print(f"given/viem ratio    = {ratio:.3f}")
 
 
 if __name__ == "__main__":

@@ -9,39 +9,86 @@ Usage:
         [--distance_construction_algorithm=hierarchyonline]
         [--local_search_neighborhood=communication]
         [--communication_neighborhood_dist=10]
+        [--config=spec.json]            # load a MappingSpec (flags override)
         [--output_filename=permutation]
+    python -m repro.cli.viem --list-algorithms
+
+Algorithm ``choices`` come from the registries, so third-party
+``@register_construction`` / ``@register_neighborhood`` algorithms are
+addressable here without touching this file.
 """
 
 from __future__ import annotations
 
 import argparse
 import sys
+from pathlib import Path
 
 import numpy as np
 
-from ..core import Hierarchy, map_processes, read_metis
+from ..core import Hierarchy, Mapper, MappingSpec, list_constructions, \
+    list_neighborhoods, read_metis
+
+
+def _print_algorithms():
+    print("constructions:")
+    for name in list_constructions():
+        print(f"  {name}")
+    print("neighborhoods:")
+    for name in list_neighborhoods():
+        print(f"  {name}")
+    print("  none  (skip local search)")
+
+
+def build_spec(args) -> MappingSpec:
+    """--config (if given) seeds the spec; explicit flags override it."""
+    base = None
+    if args.config:
+        base = MappingSpec.from_json(Path(args.config).read_text())
+    return MappingSpec.from_flags(args, base=base).validate()
 
 
 def main(argv=None):
     ap = argparse.ArgumentParser(prog="viem", description=__doc__)
-    ap.add_argument("file", help="Path to file (model).")
-    ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--preconfiguration_mapping", default="eco",
+    ap.add_argument("file", nargs="?", help="Path to file (model).")
+    ap.add_argument("--list-algorithms", action="store_true",
+                    help="print registered algorithms and exit")
+    ap.add_argument("--config", default=None,
+                    help="path to a MappingSpec JSON; explicit flags "
+                         "override values from the file")
+    ap.add_argument("--seed", type=int, default=None)
+    ap.add_argument("--preconfiguration_mapping", default=None,
                     choices=["strong", "eco", "fast"])
-    ap.add_argument("--construction_algorithm", default="hierarchytopdown",
-                    choices=["random", "identity", "growing",
-                             "hierarchybottomup", "hierarchytopdown"])
+    ap.add_argument("--construction_algorithm", default=None,
+                    choices=list_constructions())
     ap.add_argument("--distance_construction_algorithm", default="hierarchy",
                     choices=["hierarchy", "hierarchyonline"])
-    ap.add_argument("--hierarchy_parameter_string", required=True)
-    ap.add_argument("--distance_parameter_string", required=True)
-    ap.add_argument("--local_search_neighborhood", default="communication",
-                    choices=["nsquare", "nsquarepruned", "communication"])
+    ap.add_argument("--hierarchy_parameter_string")
+    ap.add_argument("--distance_parameter_string")
+    ap.add_argument("--local_search_neighborhood", default=None,
+                    choices=list_neighborhoods() + ["none"])
     ap.add_argument("--communication_neighborhood_dist", type=int,
-                    default=10)
+                    default=None)
+    ap.add_argument("--parallel_sweeps",
+                    action=argparse.BooleanOptionalAction, default=None)
     ap.add_argument("--output_filename", default="permutation")
     args = ap.parse_args(argv)
 
+    if args.list_algorithms:
+        _print_algorithms()
+        return
+
+    if not args.file:
+        ap.error("the graph file argument is required")
+    if not args.hierarchy_parameter_string or \
+            not args.distance_parameter_string:
+        ap.error("--hierarchy_parameter_string and "
+                 "--distance_parameter_string are required")
+
+    try:
+        spec = build_spec(args)
+    except (ValueError, OSError) as exc:
+        sys.exit(f"viem: {exc}")
     g = read_metis(args.file)
     h = Hierarchy.from_strings(args.hierarchy_parameter_string,
                                args.distance_parameter_string)
@@ -50,13 +97,7 @@ def main(argv=None):
                  f"specifies {h.n_pe} PEs — they must match (guide §4.1)")
     # `hierarchyonline` vs `hierarchy` is a memory/speed knob; the oracle
     # is online in both cases here and they agree bit-for-bit (tested).
-    res = map_processes(
-        g, h,
-        construction_algorithm=args.construction_algorithm,
-        local_search_neighborhood=args.local_search_neighborhood,
-        communication_neighborhood_dist=args.communication_neighborhood_dist,
-        preconfiguration_mapping=args.preconfiguration_mapping,
-        seed=args.seed)
+    res = Mapper(h, spec).map(g)
     np.savetxt(args.output_filename, res.perm, fmt="%d")
     print(f"initial objective  J = {res.initial_objective:.6g}")
     print(f"final objective    J = {res.final_objective:.6g}")

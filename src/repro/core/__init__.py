@@ -1,28 +1,57 @@
 """VieM core: sparse quadratic assignment process mapping (the paper's
-contribution), reimplemented as a composable library.
+contribution), reimplemented as a composable, registry-driven library.
 
-Public surface:
+The public API is declarative: describe *what* mapping you want in a
+frozen, serializable :class:`MappingSpec`, then run it through a
+:class:`Mapper` session that owns the machine :class:`Hierarchy` and
+amortizes its distance oracle, compiled Pallas kernels, and candidate
+neighborhoods across requests::
+
+    from repro.core import Hierarchy, Mapper, MappingSpec, grid3d
+
+    h = Hierarchy.from_strings("16:8:4", "1:10:100")
+    spec = MappingSpec(neighborhood="communication", neighborhood_dist=10)
+    mapper = Mapper(h, spec)
+    result = mapper.map(grid3d(8, 8, 8))     # one request
+    results = mapper.map_many(graphs)        # same-shape batch, shared setup
+    service = mapper.serve()                 # request-queue serving hook
+
+Algorithms are pluggable through registries — ``@register_construction``
+and ``@register_neighborhood`` make third-party strategies addressable
+from specs and the CLI without touching core dispatch.
+
+Modules:
+  spec         — MappingSpec: one config language for CLI/launch/benchmarks
+  mapping      — Mapper sessions, MapperService queue serving,
+                 map_processes() (deprecated one-shot shim)
   graph        — CSR communication graphs, Metis IO, generators
-  hierarchy    — hierarchical topologies + online distance oracle
+  hierarchy    — hierarchical topologies + cached online distance oracle
   objective    — sparse QAP objective, O(deg) swap gains, dense gain matrix
   partition    — multilevel perfectly-balanced partitioner (KaHIP stand-in)
-  construction — identity/random/growing/hierarchybottomup/hierarchytopdown
-  local_search — N², N² pruned, N_C^d neighborhoods
-  mapping      — map_processes() top-level API
+  construction — registered constructions (identity/random/growing/
+                 hierarchybottomup/hierarchytopdown)
+  local_search — registered neighborhoods (N², N² pruned, N_C^d)
   comm_model   — communication-graph extraction from compiled XLA programs
 """
 
+from .construction import list_constructions, register_construction
 from .graph import CommGraph, GraphFormatError, from_dense, from_edges, \
     grid3d, random_geometric, read_metis, validate, write_metis
-from .hierarchy import Hierarchy, supermuc_like, tpu_v5e_fleet
-from .mapping import MappingResult, map_processes
+from .hierarchy import DistanceOracle, Hierarchy, supermuc_like, \
+    tpu_v5e_fleet
+from .local_search import list_neighborhoods, register_neighborhood
+from .mapping import Mapper, MapperService, MappingResult, map_processes
 from .objective import dense_gain_matrix, qap_objective, \
     qap_objective_dense, swap_gain
+from .spec import MappingSpec
 
 __all__ = [
     "CommGraph", "GraphFormatError", "from_dense", "from_edges", "grid3d",
     "random_geometric", "read_metis", "validate", "write_metis",
-    "Hierarchy", "supermuc_like", "tpu_v5e_fleet",
-    "MappingResult", "map_processes",
+    "DistanceOracle", "Hierarchy", "supermuc_like", "tpu_v5e_fleet",
+    "Mapper", "MapperService", "MappingResult", "MappingSpec",
+    "map_processes",
+    "list_constructions", "register_construction",
+    "list_neighborhoods", "register_neighborhood",
     "dense_gain_matrix", "qap_objective", "qap_objective_dense", "swap_gain",
 ]

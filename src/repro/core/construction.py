@@ -5,9 +5,16 @@
 
 All return ``perm`` with perm[u] = PE assigned to process u (a bijection on
 [0, n)).  n must equal the hierarchy's PE count.
+
+Algorithms live in a registry: decorate a ``fn(g, h, *, seed, cfg)`` with
+``@register_construction("name")`` and it becomes addressable from
+``MappingSpec``, the ``viem`` CLI (auto-populated ``choices``), and
+``Mapper`` — no core edits needed.
 """
 
 from __future__ import annotations
+
+from typing import Callable
 
 import numpy as np
 
@@ -31,17 +38,50 @@ def quotient(g: CommGraph, labels: np.ndarray, k: int) -> CommGraph:
     return from_edges(k, lo, hi, w, vwgt=vw)
 
 
+# ---------------------------------------------------------------- registry
+CONSTRUCTIONS: dict[str, Callable] = {}
+
+
+def register_construction(name: str) -> Callable:
+    """Register ``fn(g, h, *, seed, cfg)`` as a construction algorithm.
+
+    Registered names auto-populate CLI ``choices`` and are valid
+    ``MappingSpec.construction`` values."""
+    def deco(fn: Callable) -> Callable:
+        if name in CONSTRUCTIONS:
+            raise ValueError(f"construction {name!r} is already registered")
+        CONSTRUCTIONS[name] = fn
+        return fn
+    return deco
+
+
+def resolve_construction(name: str) -> Callable:
+    try:
+        return CONSTRUCTIONS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown construction algorithm {name!r}; registered: "
+            f"{sorted(CONSTRUCTIONS)}") from None
+
+
+def list_constructions() -> list[str]:
+    return sorted(CONSTRUCTIONS)
+
+
 # ------------------------------------------------------------ constructions
+@register_construction("identity")
 def identity_construction(g: CommGraph, h: Hierarchy, **_) -> np.ndarray:
     return np.arange(g.n, dtype=np.int64)
 
 
+@register_construction("random")
 def random_construction(g: CommGraph, h: Hierarchy, seed: int = 0,
                         **_) -> np.ndarray:
     rng = np.random.default_rng(seed)
     return rng.permutation(g.n).astype(np.int64)
 
 
+@register_construction("growing")
 def growing_construction(g: CommGraph, h: Hierarchy, seed: int = 0,
                          **_) -> np.ndarray:
     """Greedy graph growing: repeatedly take the unassigned process with the
@@ -68,6 +108,7 @@ def growing_construction(g: CommGraph, h: Hierarchy, seed: int = 0,
     return perm
 
 
+@register_construction("hierarchytopdown")
 def hierarchy_top_down(g: CommGraph, h: Hierarchy, seed: int = 0,
                        cfg: PartitionConfig | None = None, **_) -> np.ndarray:
     """The guide's most successful strategy: recursively partition G_C into
@@ -95,6 +136,7 @@ def hierarchy_top_down(g: CommGraph, h: Hierarchy, seed: int = 0,
     return perm
 
 
+@register_construction("hierarchybottomup")
 def hierarchy_bottom_up(g: CommGraph, h: Hierarchy, seed: int = 0,
                         cfg: PartitionConfig | None = None, **_) -> np.ndarray:
     """Bottom-up: cluster processes into processors (blocks of a_1), build
@@ -127,19 +169,8 @@ def hierarchy_bottom_up(g: CommGraph, h: Hierarchy, seed: int = 0,
     return offset
 
 
-CONSTRUCTIONS = {
-    "identity": identity_construction,
-    "random": random_construction,
-    "growing": growing_construction,
-    "hierarchybottomup": hierarchy_bottom_up,
-    "hierarchytopdown": hierarchy_top_down,
-}
-
-
 def construct(name: str, g: CommGraph, h: Hierarchy, seed: int = 0,
               preconfiguration: str = "eco") -> np.ndarray:
-    if name not in CONSTRUCTIONS:
-        raise ValueError(f"unknown construction_algorithm {name!r}; "
-                         f"choose from {sorted(CONSTRUCTIONS)}")
+    fn = resolve_construction(name)
     cfg = PartitionConfig.preconfiguration(preconfiguration)
-    return CONSTRUCTIONS[name](g, h, seed=seed, cfg=cfg)
+    return fn(g, h, seed=seed, cfg=cfg)

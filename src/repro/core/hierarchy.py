@@ -17,6 +17,7 @@ chip → tray (ICI hop) → superblock (several ICI hops) → pod (DCN).
 
 from __future__ import annotations
 
+import functools
 from dataclasses import dataclass, field
 
 import numpy as np
@@ -48,9 +49,13 @@ class Hierarchy:
         return len(self.factors)
 
     # strides[l] = number of PEs in a level-l subtree (strides[0]=1 core)
-    @property
+    # cached: the distance oracle reads strides on every call and this sits
+    # in the innermost loop of every search driver.  Do not mutate.
+    @functools.cached_property
     def strides(self) -> np.ndarray:
-        return np.concatenate([[1], np.cumprod(self.factors)]).astype(np.int64)
+        s = np.concatenate([[1], np.cumprod(self.factors)]).astype(np.int64)
+        s.setflags(write=False)
+        return s
 
     # --------------------------------------------------------------- oracle
     def distance(self, p, q):
@@ -93,6 +98,47 @@ class Hierarchy:
         f = tuple(int(x) for x in hierarchy_parameter_string.split(":") if x)
         d = tuple(float(x) for x in distance_parameter_string.split(":") if x)
         return Hierarchy(f, d)
+
+    # --------------------------------------------------------- cached oracle
+    @functools.cached_property
+    def oracle(self) -> "DistanceOracle":
+        """The precomputed distance oracle, built once per Hierarchy
+        instance and shared by every Mapper session over it."""
+        return DistanceOracle(self)
+
+
+class DistanceOracle:
+    """Precomputed distance-oracle state for one :class:`Hierarchy`.
+
+    Holds the stride/distance arrays the online oracle needs (so hot loops
+    never rebuild them) and memoizes the materialized n×n matrix (the
+    guide's ``hierarchy`` distance construction) on first request.  Built
+    at most once per ``Hierarchy`` via the cached ``Hierarchy.oracle``
+    property; ``Mapper.cache_info()`` reports whether a session triggered
+    that build.
+    """
+
+    def __init__(self, h: Hierarchy):
+        self.hierarchy = h
+        self.n_pe = h.n_pe
+        self.strides = h.strides
+        self.distances = np.asarray(h.distances, dtype=np.float64)
+        self._matrix: np.ndarray | None = None
+
+    def distance(self, p, q):
+        """Same semantics as :meth:`Hierarchy.distance` (tested equal)."""
+        return self.hierarchy.distance(p, q)
+
+    def matrix(self) -> np.ndarray:
+        """Materialized D, computed once and cached — small n only."""
+        if self._matrix is None:
+            self._matrix = self.hierarchy.distance_matrix()
+            self._matrix.setflags(write=False)
+        return self._matrix
+
+    # static kernel parameters (hashable) for the Pallas objective kernel
+    def kernel_params(self) -> tuple[tuple, tuple]:
+        return tuple(int(s) for s in self.strides), tuple(self.hierarchy.distances)
 
 
 # ----------------------------------------------------------------- presets

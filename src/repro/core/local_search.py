@@ -9,11 +9,17 @@
 All variants use the paper's *sparse* O(deg) gain (objective.swap_gain) and
 update the objective incrementally — the guide's central speedup over the
 O(n)-per-swap dense formulation.
+
+Neighborhoods live in a registry: ``@register_neighborhood("name")``
+wraps a candidate-pair generator ``fn(g, *, dist, seed, max_pairs)`` and
+makes it addressable from ``MappingSpec``, the ``viem`` CLI, and
+``Mapper`` without touching core dispatch.
 """
 
 from __future__ import annotations
 
 from dataclasses import dataclass, field
+from typing import Callable
 
 import numpy as np
 
@@ -29,6 +35,59 @@ class SearchStats:
     initial_objective: float = 0.0
     final_objective: float = 0.0
     objective_trace: list = field(default_factory=list)
+
+
+# ---------------------------------------------------------------- registry
+@dataclass(frozen=True)
+class Neighborhood:
+    """A registered candidate-pair generator plus its driver policy
+    (``shuffle`` — whether the sequential search visits pairs in random
+    order, the guide's behavior for the communication neighborhood).
+    ``weight_dependent`` declares that the generator reads edge weights;
+    it widens the Mapper's candidate-pair cache key so same-structure,
+    different-weight graphs are not served stale pairs."""
+    name: str
+    pairs: Callable          # fn(g, *, dist, seed, max_pairs) -> (P, 2) i64
+    shuffle: bool = False
+    weight_dependent: bool = False
+
+
+NEIGHBORHOODS: dict[str, Neighborhood] = {}
+
+
+def register_neighborhood(name: str, shuffle: bool = False,
+                          weight_dependent: bool = False) -> Callable:
+    """Register ``fn(g, *, dist, seed, max_pairs)`` as a local-search
+    neighborhood.  Registered names auto-populate CLI ``choices`` and are
+    valid ``MappingSpec.neighborhood`` values.  Pass
+    ``weight_dependent=True`` if the generator reads ``g.adjwgt``."""
+    def deco(fn: Callable) -> Callable:
+        if name in NEIGHBORHOODS:
+            raise ValueError(f"neighborhood {name!r} is already registered")
+        NEIGHBORHOODS[name] = Neighborhood(name, fn, shuffle,
+                                           weight_dependent)
+        return fn
+    return deco
+
+
+def resolve_neighborhood(name: str) -> Neighborhood:
+    try:
+        return NEIGHBORHOODS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown local search neighborhood {name!r}; registered: "
+            f"{sorted(NEIGHBORHOODS)}") from None
+
+
+def list_neighborhoods() -> list[str]:
+    return sorted(NEIGHBORHOODS)
+
+
+def candidate_pairs(name: str, g: CommGraph, dist: int = 10, seed: int = 0,
+                    max_pairs: int = 2_000_000) -> np.ndarray:
+    """Candidate pairs of the named registered neighborhood."""
+    return resolve_neighborhood(name).pairs(
+        g, dist=dist, seed=seed, max_pairs=max_pairs)
 
 
 # ------------------------------------------------------------ neighborhoods
@@ -110,6 +169,23 @@ def pruned_pairs(g: CommGraph) -> np.ndarray:
     return np.concatenate(pairs, axis=0).astype(np.int64)
 
 
+@register_neighborhood("communication", shuffle=True)
+def _communication_neighborhood(g: CommGraph, *, dist: int = 10,
+                                seed: int = 0,
+                                max_pairs: int = 2_000_000) -> np.ndarray:
+    return communication_pairs(g, dist, max_pairs=max_pairs, seed=seed)
+
+
+@register_neighborhood("nsquare")
+def _nsquare_neighborhood(g: CommGraph, **_) -> np.ndarray:
+    return nsquare_pairs(g.n)
+
+
+@register_neighborhood("nsquarepruned")
+def _pruned_neighborhood(g: CommGraph, **_) -> np.ndarray:
+    return pruned_pairs(g)
+
+
 # ------------------------------------------------------------------ drivers
 def _cyclic_search(g: CommGraph, h: Hierarchy, perm: np.ndarray,
                    pairs: np.ndarray, shuffle: bool, seed: int,
@@ -151,19 +227,15 @@ def _cyclic_search(g: CommGraph, h: Hierarchy, perm: np.ndarray,
 def local_search(g: CommGraph, h: Hierarchy, perm: np.ndarray,
                  neighborhood: str = "communication",
                  communication_neighborhood_dist: int = 10,
-                 seed: int = 0) -> SearchStats:
-    """Improve ``perm`` in place.  Mirrors the guide's §4.1 flags."""
-    if neighborhood == "nsquare":
-        pairs = nsquare_pairs(g.n)
-        return _cyclic_search(g, h, perm, pairs, shuffle=False, seed=seed)
-    if neighborhood == "nsquarepruned":
-        pairs = pruned_pairs(g)
-        return _cyclic_search(g, h, perm, pairs, shuffle=False, seed=seed)
-    if neighborhood == "communication":
-        pairs = communication_pairs(g, communication_neighborhood_dist,
-                                    seed=seed)
-        return _cyclic_search(g, h, perm, pairs, shuffle=True, seed=seed)
-    raise ValueError(f"unknown local_search_neighborhood {neighborhood!r}")
+                 seed: int = 0, max_sweeps: int = 50,
+                 max_pairs: int = 2_000_000) -> SearchStats:
+    """Improve ``perm`` in place.  Mirrors the guide's §4.1 flags; the
+    neighborhood is resolved through the registry."""
+    nb = resolve_neighborhood(neighborhood)
+    pairs = nb.pairs(g, dist=communication_neighborhood_dist, seed=seed,
+                     max_pairs=max_pairs)
+    return _cyclic_search(g, h, perm, pairs, shuffle=nb.shuffle, seed=seed,
+                          max_sweeps=max_sweeps)
 
 
 # ----------------------------------------------- batched sweep (TPU-shaped)

@@ -1,27 +1,50 @@
-"""Top-level mapping API — the `viem` program as a library (guide §4.1).
+"""Top-level mapping API — `Mapper` sessions driven by `MappingSpec`.
 
-    result = map_processes(g, hierarchy=..., distance=...)
-    result.perm        # process -> PE
-    result.stats       # construction + search statistics
+    spec = MappingSpec(neighborhood="communication", neighborhood_dist=10)
+    mapper = Mapper(hierarchy, spec)
+    result = mapper.map(g)            # one graph
+    results = mapper.map_many(gs)     # same-shape batch, shared setup
+    service = mapper.serve()          # request-queue serving hook
 
-Defaults mirror the guide: hierarchytopdown construction, communication
-neighborhood with distance 10, eco preconfiguration, hierarchyonline
-distances (we never materialize D unless explicitly requested).
+A `Mapper` owns one :class:`Hierarchy` and amortizes everything that does
+not depend on the individual graph across requests: the hierarchy's
+distance oracle (built once per `Hierarchy`, see
+:class:`~repro.core.hierarchy.DistanceOracle`), compiled Pallas kernels
+(swap-gain matrix, edge-list QAP objective — compiled once per shape and
+cached), and candidate-pair neighborhoods (cached per graph structure).
+`cache_info()` exposes hit/build counters so callers can assert the
+amortization actually happened.
+
+Algorithms are resolved through the registries in
+:mod:`repro.core.construction` and :mod:`repro.core.local_search`; defaults
+mirror the guide (hierarchytopdown construction, communication
+neighborhood with distance 10, eco preconfiguration, online distances).
+
+:func:`map_processes` survives as a deprecated shim over
+``Mapper(h, MappingSpec(...)).map(g)`` — identical results, one-shot setup.
 """
 
 from __future__ import annotations
 
+import functools
+import itertools
+import queue
+import threading
 import time
+import warnings
+from collections import OrderedDict
 from dataclasses import dataclass
 
 import numpy as np
 
-from .construction import construct
+from .construction import resolve_construction
 from .graph import CommGraph
-from .hierarchy import Hierarchy
-from .local_search import SearchStats, communication_pairs, local_search, \
-    parallel_sweep_search
-from .objective import qap_objective
+from .hierarchy import DistanceOracle, Hierarchy
+from .local_search import (SearchStats, _cyclic_search,
+                           parallel_sweep_search, resolve_neighborhood)
+from .objective import dense_gain_matrix, qap_objective
+from .partition import PartitionConfig
+from .spec import MappingSpec
 
 
 @dataclass
@@ -40,6 +63,277 @@ class MappingResult:
         return 1.0 - self.final_objective / self.initial_objective
 
 
+# ------------------------------------------------------------- kernel cache
+class _KernelCache:
+    """Session cache of jitted Pallas entry points, keyed by the static
+    arguments that force a recompile (hierarchy parameters + shapes).
+    ``compiles`` counts cache misses — the number of distinct kernel
+    configurations this session prepared.  Each miss corresponds to at
+    most one XLA compile on first call (jax's process-global jit cache
+    dedups across sessions), so it upper-bounds real compiles."""
+
+    def __init__(self):
+        self.compiles = 0
+        self._fns: dict[tuple, object] = {}
+
+    @staticmethod
+    def _interpret() -> bool:
+        import jax
+        return jax.default_backend() != "tpu"
+
+    def objective_edges(self, oracle: DistanceOracle, n_edges: int):
+        strides, dists = oracle.kernel_params()
+        key = ("qap_edges", strides, dists, int(n_edges))
+        fn = self._fns.get(key)
+        if fn is None:
+            from ..kernels.qap_objective import qap_objective_edges
+            fn = functools.partial(qap_objective_edges, strides=strides,
+                                   dists=dists, interpret=self._interpret())
+            self._fns[key] = fn
+            self.compiles += 1
+        return fn
+
+    def swap_gain_matrix(self, n: int):
+        key = ("swap_gain", int(n))
+        fn = self._fns.get(key)
+        if fn is None:
+            from ..kernels.swap_gain import swap_gain_matrix
+            fn = functools.partial(swap_gain_matrix,
+                                   interpret=self._interpret())
+            self._fns[key] = fn
+            self.compiles += 1
+        return fn
+
+
+def _structure_key(g: CommGraph, with_weights: bool = False) -> tuple:
+    """Adjacency-structure fingerprint; weights are included only for
+    neighborhoods that declare ``weight_dependent`` (none of the built-ins
+    read them, so same-structure batches share one candidate set)."""
+    key = (g.n, int(g.xadj[-1]), hash(g.xadj.tobytes()),
+           hash(g.adjncy.tobytes()))
+    if with_weights:
+        key += (hash(np.asarray(g.adjwgt).tobytes()),)
+    return key
+
+
+# ------------------------------------------------------------------ session
+class Mapper:
+    """A mapping session over one machine hierarchy.
+
+    Construction cost (oracle build, kernel compiles, neighborhood pair
+    generation) is paid once and reused by every subsequent ``map`` /
+    ``map_many`` / ``serve`` request — the point of a session object over
+    the one-shot :func:`map_processes`.
+    """
+
+    def __init__(self, hierarchy: Hierarchy, spec: MappingSpec | None = None):
+        self.h = hierarchy
+        self.spec = (spec or MappingSpec()).validate()
+        already_built = "oracle" in hierarchy.__dict__   # cached_property hit
+        self.oracle = hierarchy.oracle          # built at most once per h
+        self._oracle_builds = 0 if already_built else 1
+        self._kernels = _KernelCache()
+        # LRU-bounded: candidate-pair arrays can reach max_pairs entries
+        # (~32 MB each), and serve() sessions are long-lived
+        self._pair_cache: "OrderedDict[tuple, np.ndarray]" = OrderedDict()
+        self._pair_cache_size = 16
+        self._pair_hits = 0
+        self._requests = 0
+
+    # ------------------------------------------------------------- caching
+    def cache_info(self) -> dict:
+        """Counters for the session's amortized state: how many distance
+        oracles were built and kernels compiled on this session's behalf,
+        plus candidate-pair cache hits and requests served."""
+        return {
+            "oracle_builds": self._oracle_builds,
+            "kernel_compiles": self._kernels.compiles,
+            "pair_cache_hits": self._pair_hits,
+            "requests": self._requests,
+        }
+
+    def _pairs(self, g: CommGraph, spec: MappingSpec) -> np.ndarray:
+        nb = resolve_neighborhood(spec.neighborhood)
+        key = (spec.neighborhood, spec.neighborhood_dist, spec.seed,
+               spec.max_pairs) + _structure_key(g, nb.weight_dependent)
+        pairs = self._pair_cache.get(key)
+        if pairs is None:
+            pairs = nb.pairs(g, dist=spec.neighborhood_dist, seed=spec.seed,
+                             max_pairs=spec.max_pairs)
+            self._pair_cache[key] = pairs
+            if len(self._pair_cache) > self._pair_cache_size:
+                self._pair_cache.popitem(last=False)
+        else:
+            self._pair_cache.move_to_end(key)
+            self._pair_hits += 1
+        return pairs
+
+    # ----------------------------------------------------------- objective
+    def objective(self, g: CommGraph, perm: np.ndarray,
+                  spec: MappingSpec | None = None) -> float:
+        """J(C, D, Π) via the spec's backend: ``numpy`` host evaluation or
+        the cached Pallas edge-list kernel (``pallas``)."""
+        spec = spec or self.spec
+        if spec.backend == "pallas":
+            u, v, w = g.edge_list()
+            fn = self._kernels.objective_edges(self.oracle, len(u))
+            perm = np.asarray(perm, dtype=np.int64)
+            return float(fn(perm[u].astype(np.int32),
+                            perm[v].astype(np.int32),
+                            w.astype(np.float32)))
+        return qap_objective(g, self.h, perm)
+
+    def gain_matrix(self, g: CommGraph, perm: np.ndarray,
+                    spec: MappingSpec | None = None) -> np.ndarray:
+        """Full pair-exchange gain matrix via the spec's backend (dense —
+        small/medium n).  The pallas path reuses the session's cached
+        distance matrix and compiled swap-gain kernel."""
+        spec = spec or self.spec
+        perm = np.asarray(perm, dtype=np.int64)
+        D = self.oracle.matrix()
+        if spec.backend == "pallas":
+            C = g.to_dense()
+            B = D[np.ix_(perm, perm)]
+            fn = self._kernels.swap_gain_matrix(g.n)
+            return np.asarray(fn(C, B))
+        return dense_gain_matrix(g.to_dense(), D, perm)
+
+    # ----------------------------------------------------------------- map
+    def map(self, g: CommGraph, spec: MappingSpec | None = None
+            ) -> MappingResult:
+        """Compute a process→PE mapping for one graph."""
+        spec = self.spec if spec is None else spec.validate()
+        return self._map_one(g, spec)
+
+    def map_many(self, graphs, spec: MappingSpec | None = None
+                 ) -> list[MappingResult]:
+        """Map a batch of same-shape graphs through one session.
+
+        Graphs must agree on process count (and therefore PE count); the
+        hierarchy oracle, compiled kernels, and — for structurally
+        identical graphs — the candidate-pair neighborhoods are computed
+        once and shared across the whole batch.  Results are identical to
+        per-graph :meth:`map` calls.
+        """
+        graphs = list(graphs)
+        if not graphs:
+            return []
+        ns = {g.n for g in graphs}
+        if len(ns) != 1:
+            raise ValueError(f"map_many requires same-shape graphs; got "
+                             f"process counts {sorted(ns)}")
+        spec = self.spec if spec is None else spec.validate()
+        return [self._map_one(g, spec) for g in graphs]
+
+    def _map_one(self, g: CommGraph, spec: MappingSpec) -> MappingResult:
+        if g.n != self.h.n_pe:
+            raise ValueError(f"graph has {g.n} processes but hierarchy has "
+                             f"{self.h.n_pe} PEs — they must match "
+                             f"(guide §4.1)")
+        self._requests += 1
+        construct_fn = resolve_construction(spec.construction)
+        cfg = PartitionConfig.preconfiguration(spec.preconfiguration)
+        t0 = time.perf_counter()
+        perm = construct_fn(g, self.h, seed=spec.seed, cfg=cfg)
+        t_cons = time.perf_counter() - t0
+        j0 = self.objective(g, perm, spec)
+
+        stats = None
+        t1 = time.perf_counter()
+        if spec.neighborhood is not None:
+            nb = resolve_neighborhood(spec.neighborhood)
+            pairs = self._pairs(g, spec)
+            kw = {} if spec.max_sweeps is None else \
+                {"max_sweeps": spec.max_sweeps}
+            if spec.parallel_sweeps:
+                stats = parallel_sweep_search(g, self.h, perm, pairs,
+                                              seed=spec.seed, **kw)
+            else:
+                stats = _cyclic_search(g, self.h, perm, pairs,
+                                       shuffle=nb.shuffle, seed=spec.seed,
+                                       **kw)
+        t_search = time.perf_counter() - t1
+        if stats is None:
+            jf = j0
+        elif spec.backend == "numpy":
+            jf = stats.final_objective   # incremental f64, legacy-identical
+        else:
+            # search drivers track the objective in host float64; recompute
+            # through the session backend so j0 and jf are comparable
+            jf = self.objective(g, perm, spec)
+        return MappingResult(perm=perm, initial_objective=j0,
+                             final_objective=jf,
+                             construction_seconds=t_cons,
+                             search_seconds=t_search, search_stats=stats)
+
+    # --------------------------------------------------------------- serve
+    def serve(self, requests: "queue.Queue | None" = None,
+              results: "queue.Queue | None" = None) -> "MapperService":
+        """Start a request-queue serving session over this Mapper."""
+        return MapperService(self, requests=requests, results=results)
+
+
+class MapperService:
+    """Request-queue serving hook: a daemon thread drains graphs through
+    one :class:`Mapper` session, so hierarchy-oracle and kernel setup are
+    paid once for the whole queue (wired into ``repro.launch.serve``).
+
+    ``submit(g)`` returns a ticket; ``(ticket, MappingResult)`` tuples (or
+    ``(ticket, Exception)`` on per-request failure) arrive on ``results``.
+    ``close()`` — or exiting the context manager — stops the thread after
+    draining already-queued requests.
+    """
+
+    def __init__(self, mapper: Mapper,
+                 requests: "queue.Queue | None" = None,
+                 results: "queue.Queue | None" = None):
+        self.mapper = mapper
+        self.requests = requests if requests is not None else queue.Queue()
+        self.results = results if results is not None else queue.Queue()
+        self._tickets = itertools.count()
+        self._closed = False
+        self._lock = threading.Lock()   # makes submit vs close atomic
+        self._thread = threading.Thread(target=self._drain,
+                                        name="viem-mapper", daemon=True)
+        self._thread.start()
+
+    def submit(self, g: CommGraph,
+               spec: MappingSpec | None = None) -> int:
+        with self._lock:
+            if self._closed:
+                raise RuntimeError("MapperService is closed; requests "
+                                   "submitted now would never be served")
+            ticket = next(self._tickets)
+            self.requests.put((ticket, g, spec))
+        return ticket
+
+    def _drain(self):
+        while True:
+            item = self.requests.get()
+            if item is None:
+                break
+            ticket, g, spec = item
+            try:
+                out: object = self.mapper.map(g, spec=spec)
+            except Exception as exc:   # per-request isolation
+                out = exc
+            self.results.put((ticket, out))
+
+    def close(self, timeout: float | None = None):
+        with self._lock:
+            if not self._closed:
+                self._closed = True
+                self.requests.put(None)
+        self._thread.join(timeout)
+
+    def __enter__(self) -> "MapperService":
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
+
+# ------------------------------------------------------------- legacy shim
 def map_processes(g: CommGraph, h: Hierarchy,
                   construction_algorithm: str = "hierarchytopdown",
                   local_search_neighborhood: str | None = "communication",
@@ -47,41 +341,20 @@ def map_processes(g: CommGraph, h: Hierarchy,
                   preconfiguration_mapping: str = "eco",
                   parallel_sweeps: bool = False,
                   seed: int = 0) -> MappingResult:
-    """Compute a process→PE mapping.  ``local_search_neighborhood=None``
-    skips local search (construction only).  ``parallel_sweeps=True`` uses
-    the TPU-adapted batched sweep instead of the paper's sequential search
-    (same candidate neighborhood)."""
-    if g.n != h.n_pe:
-        raise ValueError(f"graph has {g.n} processes but hierarchy has "
-                         f"{h.n_pe} PEs — they must match (guide §4.1)")
-    t0 = time.perf_counter()
-    perm = construct(construction_algorithm, g, h, seed=seed,
-                     preconfiguration=preconfiguration_mapping)
-    t_cons = time.perf_counter() - t0
-    j0 = qap_objective(g, h, perm)
+    """Deprecated one-shot API — use ``Mapper(h, MappingSpec(...)).map(g)``.
 
-    stats = None
-    t1 = time.perf_counter()
-    if local_search_neighborhood is not None:
-        if parallel_sweeps:
-            if local_search_neighborhood == "communication":
-                pairs = communication_pairs(
-                    g, communication_neighborhood_dist, seed=seed)
-            elif local_search_neighborhood == "nsquare":
-                from .local_search import nsquare_pairs
-                pairs = nsquare_pairs(g.n)
-            else:
-                from .local_search import pruned_pairs
-                pairs = pruned_pairs(g)
-            stats = parallel_sweep_search(g, h, perm, pairs, seed=seed)
-        else:
-            stats = local_search(
-                g, h, perm,
-                neighborhood=local_search_neighborhood,
-                communication_neighborhood_dist=communication_neighborhood_dist,
-                seed=seed)
-    t_search = time.perf_counter() - t1
-    jf = stats.final_objective if stats is not None else j0
-    return MappingResult(perm=perm, initial_objective=j0, final_objective=jf,
-                         construction_seconds=t_cons,
-                         search_seconds=t_search, search_stats=stats)
+    Results are identical; the session API additionally amortizes oracle,
+    kernel, and neighborhood setup across calls."""
+    warnings.warn(
+        "map_processes() is deprecated; build a MappingSpec and use "
+        "Mapper(h, spec).map(g) — identical results, reusable session "
+        "state. map_processes() will be removed in a future release.",
+        DeprecationWarning, stacklevel=2)
+    spec = MappingSpec(
+        construction=construction_algorithm,
+        neighborhood=local_search_neighborhood,
+        neighborhood_dist=communication_neighborhood_dist,
+        preconfiguration=preconfiguration_mapping,
+        parallel_sweeps=parallel_sweeps,
+        seed=seed)
+    return Mapper(h, spec).map(g)

@@ -1,0 +1,125 @@
+"""`MappingSpec` — the one declarative config language for mappings.
+
+Every way of asking for a mapping (library calls, the `viem` CLI, launch
+specs, benchmarks, the serving queue) builds the same frozen, serializable
+spec:
+
+    spec = MappingSpec(construction="hierarchytopdown",
+                       neighborhood="communication", neighborhood_dist=10)
+    spec.to_dict() / MappingSpec.from_dict(d)     # JSON-safe round trip
+    MappingSpec.from_flags(args)                  # the guide's §4.1 flags
+
+Algorithm names are resolved against the registries in
+:mod:`repro.core.construction` and :mod:`repro.core.local_search`, so a
+third-party ``@register_construction`` algorithm is immediately addressable
+from a spec (and from the CLI) without touching this file.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from dataclasses import dataclass
+
+_NONE_ALIASES = (None, "none", "None", "")
+
+
+@dataclass(frozen=True)
+class MappingSpec:
+    """Declarative description of one mapping computation (guide §4.1).
+
+    ``neighborhood=None`` skips local search (construction only).
+    ``parallel_sweeps`` selects the TPU-adapted batched sweep over the
+    paper's sequential search.  ``backend`` selects how standalone objective
+    evaluations are computed: ``"numpy"`` (host, float64 — bit-identical to
+    the legacy ``map_processes`` path) or ``"pallas"`` (the Pallas edge-list
+    kernel, compiled once per session and cached by the :class:`Mapper`).
+    ``max_sweeps=None`` keeps each search driver's own default budget.
+    """
+
+    construction: str = "hierarchytopdown"
+    neighborhood: str | None = "communication"
+    neighborhood_dist: int = 10
+    preconfiguration: str = "eco"
+    parallel_sweeps: bool = False
+    backend: str = "numpy"
+    seed: int = 0
+    max_sweeps: int | None = None
+    max_pairs: int = 2_000_000
+
+    def __post_init__(self):
+        if self.neighborhood in _NONE_ALIASES:
+            object.__setattr__(self, "neighborhood", None)
+
+    # ------------------------------------------------------------ validation
+    def validate(self) -> "MappingSpec":
+        """Resolve every algorithm name against its registry; raise
+        ``ValueError`` naming the offender (and what *is* registered)."""
+        from .construction import resolve_construction
+        from .local_search import resolve_neighborhood
+        from .partition import PartitionConfig
+
+        resolve_construction(self.construction)
+        if self.neighborhood is not None:
+            resolve_neighborhood(self.neighborhood)
+        PartitionConfig.preconfiguration(self.preconfiguration)
+        if self.backend not in ("numpy", "pallas"):
+            raise ValueError(f"unknown backend {self.backend!r}; "
+                             f"choose from ['numpy', 'pallas']")
+        if self.neighborhood_dist < 1:
+            raise ValueError("neighborhood_dist must be >= 1")
+        if self.max_pairs < 1:
+            raise ValueError("max_pairs must be >= 1")
+        if self.max_sweeps is not None and self.max_sweeps < 0:
+            raise ValueError("max_sweeps must be None or >= 0")
+        return self
+
+    # ------------------------------------------------------- dict/json forms
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "MappingSpec":
+        known = {f.name for f in dataclasses.fields(cls)}
+        unknown = sorted(set(d) - known)
+        if unknown:
+            raise ValueError(f"unknown MappingSpec keys {unknown}; "
+                             f"known keys: {sorted(known)}")
+        return cls(**d)
+
+    def to_json(self) -> str:
+        return json.dumps(self.to_dict(), indent=2)
+
+    @classmethod
+    def from_json(cls, text: str) -> "MappingSpec":
+        return cls.from_dict(json.loads(text))
+
+    # -------------------------------------------------------------- flags
+    #  legacy guide flag            -> spec field
+    _FLAG_FIELDS = (
+        ("construction_algorithm", "construction"),
+        ("local_search_neighborhood", "neighborhood"),
+        ("communication_neighborhood_dist", "neighborhood_dist"),
+        ("preconfiguration_mapping", "preconfiguration"),
+        ("parallel_sweeps", "parallel_sweeps"),
+        ("backend", "backend"),
+        ("seed", "seed"),
+    )
+
+    @classmethod
+    def from_flags(cls, args, base: "MappingSpec | None" = None
+                   ) -> "MappingSpec":
+        """Build a spec from an ``argparse`` namespace using the guide's
+        §4.1 flag names.  Flags left at ``None`` fall back to ``base``
+        (e.g. a spec loaded from ``--config``), so explicit flags override
+        a config file."""
+        spec = base or cls()
+        overrides = {}
+        for flag, field in cls._FLAG_FIELDS:
+            val = getattr(args, flag, None)
+            if val is not None:
+                overrides[field] = val
+        return spec.replace(**overrides) if overrides else spec
+
+    def replace(self, **changes) -> "MappingSpec":
+        return dataclasses.replace(self, **changes)

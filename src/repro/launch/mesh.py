@@ -41,7 +41,7 @@ def viem_device_order(hlo_text: str, n_devices: int, pods: int = 2,
     ``np.array(jax.devices())[device_order]`` to
     :func:`make_production_mesh`.
     """
-    from ..core import map_processes, tpu_v5e_fleet
+    from ..core import Mapper, MappingSpec, tpu_v5e_fleet
     from ..core.comm_model import device_comm_graph
 
     g = device_comm_graph(hlo_text, n_devices)
@@ -49,10 +49,10 @@ def viem_device_order(hlo_text: str, n_devices: int, pods: int = 2,
     if h.n_pe != n_devices:
         raise ValueError(f"fleet has {h.n_pe} PEs but program uses "
                          f"{n_devices} devices")
-    res = map_processes(
-        g, h, construction_algorithm="hierarchytopdown",
-        local_search_neighborhood="communication",
-        communication_neighborhood_dist=neighborhood_dist,
-        preconfiguration_mapping=preconfiguration, seed=seed)
+    spec = MappingSpec(construction="hierarchytopdown",
+                       neighborhood="communication",
+                       neighborhood_dist=neighborhood_dist,
+                       preconfiguration=preconfiguration, seed=seed)
+    res = Mapper(h, spec).map(g)
     # res.perm[logical] = physical  →  device_order[logical] = physical
     return np.asarray(res.perm, dtype=np.int64), res

@@ -1,8 +1,10 @@
-"""Serving driver: batched prefill + decode loop with KV/SSM caches.
+"""Serving driver: batched prefill + decode loop with KV/SSM caches,
+plus the fleet-placement mapping service (a `Mapper.serve()` queue).
 
 Usage (local smoke):
     PYTHONPATH=src python -m repro.launch.serve --arch rwkv6-3b --smoke \
         --batch 4 --prompt-len 32 --gen 16
+    PYTHONPATH=src python -m repro.launch.serve --placement-smoke
 """
 
 from __future__ import annotations
@@ -51,14 +53,68 @@ def serve(arch: str, batch: int, prompt_len: int, gen: int,
     }
 
 
+# ------------------------------------------------------ placement service
+def placement_service(hierarchy=None, spec=None, requests=None,
+                      results=None):
+    """Long-lived device-placement service for the serving fleet.
+
+    One `Mapper` session per fleet hierarchy: the distance oracle and any
+    compiled Pallas kernels are built once, then every traffic graph pushed
+    onto the request queue (e.g. extracted from newly compiled serving
+    programs via ``repro.core.comm_model.device_comm_graph``) is mapped by
+    the same session.  Returns the started
+    :class:`~repro.core.mapping.MapperService`.
+    """
+    from ..core import Mapper, tpu_v5e_fleet
+    from .specs import placement_spec
+    h = hierarchy if hierarchy is not None else tpu_v5e_fleet(pods=2)
+    return Mapper(h, spec or placement_spec()).serve(
+        requests=requests, results=results)
+
+
+def _placement_smoke():
+    """Round-trip a few synthetic fleet traffic graphs through the
+    placement queue and print objectives vs identity placement."""
+    import numpy as np
+
+    from ..core import from_edges, qap_objective, tpu_v5e_fleet
+
+    h = tpu_v5e_fleet(pods=1)   # 256 PEs
+    n = h.n_pe
+    graphs = []
+    for shift in (1, 2, 4):
+        us = np.arange(n)
+        vs = (us + shift * 16) % n
+        graphs.append(from_edges(n, us, vs, np.full(n, 1e6)))
+    with placement_service(h) as svc:
+        tickets = {svc.submit(g): g for g in graphs}
+        for _ in tickets:
+            ticket, res = svc.results.get(timeout=300)
+            if isinstance(res, Exception):
+                raise res
+            g = tickets[ticket]
+            j_id = qap_objective(g, h, np.arange(n))
+            print(f"request {ticket}: J={res.final_objective:.3e} "
+                  f"(identity {j_id:.3e}, "
+                  f"{res.final_objective / j_id:.2f}x)")
+    print("placement service:", "ok")
+
+
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
+    ap.add_argument("--arch")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--placement-smoke", action="store_true",
+                    help="exercise the Mapper placement queue and exit")
     args = ap.parse_args()
+    if args.placement_smoke:
+        _placement_smoke()
+        return
+    if not args.arch:
+        ap.error("--arch is required unless --placement-smoke")
     out = serve(args.arch, args.batch, args.prompt_len, args.gen,
                 smoke=args.smoke)
     print(f"prefill {out['prefill_s']:.2f}s, "

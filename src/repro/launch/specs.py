@@ -48,6 +48,19 @@ def prefill_input_specs(cfg, shape_name: str):
     return params, batch
 
 
+def placement_spec(seed: int = 0):
+    """The fleet-placement ``MappingSpec`` shared by the serving placement
+    service (``repro.launch.serve``) and the mesh-mapping benchmark — the
+    same config language the ``viem`` CLI speaks (``--config``).
+
+    d=3 keeps the N_C^d neighborhood tractable at fleet scale (hundreds to
+    thousands of devices) while still crossing tray/superblock boundaries.
+    """
+    from ..core import MappingSpec
+    return MappingSpec(preconfiguration="eco", neighborhood="communication",
+                       neighborhood_dist=3, seed=seed)
+
+
 def serve_input_specs(cfg, shape_name: str):
     shape = SHAPES[shape_name]
     b, s = shape.global_batch, shape.seq_len

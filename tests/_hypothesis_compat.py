@@ -1,0 +1,36 @@
+"""Guarded `hypothesis` import shared by the property-test modules.
+
+When hypothesis is installed the real ``given``/``settings``/``st`` are
+re-exported.  When it is not (the bare runtime image), the substitutes
+below turn each ``@given`` test into a cleanly skipped zero-arg test —
+property tests skip, every other test in the module still runs.
+"""
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+    def given(*_args, **_kwargs):
+        def deco(fn):
+            def skipper():
+                pytest.skip("hypothesis not installed")
+            skipper.__name__ = fn.__name__
+            skipper.__doc__ = fn.__doc__
+            return skipper
+        return deco
+
+    def settings(*_args, **_kwargs):
+        return lambda fn: fn
+
+    class _StrategyStub:
+        """Accepts any strategy expression at decoration time; the values
+        are never used because the test body is skipped."""
+
+        def __getattr__(self, _name):
+            return lambda *a, **k: None
+
+    st = _StrategyStub()

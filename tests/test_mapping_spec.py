@@ -1,0 +1,356 @@
+"""New declarative API: MappingSpec round-trips, registry errors and
+plugins, Mapper↔map_processes parity, map_many batching with cache-hit
+accounting, and the request-queue serving hook."""
+
+import json
+import subprocess
+import sys
+import warnings
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.core import (Hierarchy, Mapper, MappingSpec, grid3d,
+                        map_processes, write_metis)
+from repro.core.construction import (CONSTRUCTIONS, construct,
+                                     list_constructions,
+                                     register_construction,
+                                     resolve_construction)
+from repro.core.local_search import (NEIGHBORHOODS, list_neighborhoods,
+                                     register_neighborhood,
+                                     resolve_neighborhood)
+
+REPO = Path(__file__).resolve().parents[1]
+H64 = Hierarchy((4, 4, 4), (1.0, 10.0, 100.0))
+
+
+def _weighted_grids(count):
+    """Structurally identical same-shape graphs with distinct traffic."""
+    out = []
+    for i in range(count):
+        g = grid3d(4, 4, 4)
+        g.adjwgt = g.adjwgt * (1.0 + 0.5 * i)
+        out.append(g)
+    return out
+
+
+# ------------------------------------------------------------------- spec
+def test_spec_dict_round_trip():
+    spec = MappingSpec(construction="growing", neighborhood="nsquare",
+                       neighborhood_dist=4, preconfiguration="fast",
+                       parallel_sweeps=True, backend="pallas", seed=7,
+                       max_sweeps=12, max_pairs=1000)
+    d = spec.to_dict()
+    assert MappingSpec.from_dict(d) == spec
+    assert MappingSpec.from_json(spec.to_json()) == spec
+    assert json.loads(spec.to_json())["construction"] == "growing"
+
+
+def test_spec_none_neighborhood_round_trip():
+    spec = MappingSpec(neighborhood=None)
+    assert MappingSpec.from_dict(spec.to_dict()) == spec
+    # "none" strings normalize to None (the CLI's spelling)
+    assert MappingSpec(neighborhood="none").neighborhood is None
+    assert spec.replace(seed=3).neighborhood is None
+
+
+def test_spec_rejects_unknown_keys():
+    with pytest.raises(ValueError, match="wibble"):
+        MappingSpec.from_dict({"wibble": 1})
+
+
+def test_spec_validate_rejects_bad_values():
+    with pytest.raises(ValueError, match="backend"):
+        MappingSpec(backend="cuda").validate()
+    with pytest.raises(ValueError, match="neighborhood_dist"):
+        MappingSpec(neighborhood_dist=0).validate()
+    with pytest.raises(ValueError):
+        MappingSpec(preconfiguration="turbo").validate()
+
+
+def test_spec_from_flags_overrides_base():
+    import argparse
+    base = MappingSpec(construction="random", seed=5)
+    ns = argparse.Namespace(construction_algorithm="growing",
+                            local_search_neighborhood=None,
+                            communication_neighborhood_dist=None,
+                            preconfiguration_mapping=None,
+                            parallel_sweeps=None, backend=None, seed=None)
+    spec = MappingSpec.from_flags(ns, base=base)
+    assert spec.construction == "growing"       # flag wins
+    assert spec.seed == 5                       # base survives
+
+
+# --------------------------------------------------------------- registry
+def test_unknown_construction_names_algorithm_and_lists_registered():
+    with pytest.raises(ValueError) as ei:
+        resolve_construction("does-not-exist")
+    msg = str(ei.value)
+    assert "does-not-exist" in msg
+    for name in list_constructions():
+        assert name in msg
+    with pytest.raises(ValueError, match="does-not-exist"):
+        construct("does-not-exist", grid3d(4, 4, 4), H64)
+
+
+def test_unknown_neighborhood_names_algorithm_and_lists_registered():
+    with pytest.raises(ValueError) as ei:
+        resolve_neighborhood("bogus")
+    msg = str(ei.value)
+    assert "bogus" in msg
+    for name in list_neighborhoods():
+        assert name in msg
+
+
+def test_spec_validate_uses_registries():
+    with pytest.raises(ValueError, match="nope"):
+        MappingSpec(construction="nope").validate()
+    with pytest.raises(ValueError, match="nope"):
+        MappingSpec(neighborhood="nope").validate()
+
+
+def test_third_party_algorithms_plug_in():
+    @register_construction("_test_reversed")
+    def _reversed(g, h, **_):
+        return np.arange(g.n, dtype=np.int64)[::-1].copy()
+
+    @register_neighborhood("_test_first_k")
+    def _first_k(g, **_):
+        return np.stack([np.zeros(4, np.int64),
+                         np.arange(1, 5, dtype=np.int64)], axis=1)
+
+    try:
+        spec = MappingSpec(construction="_test_reversed",
+                           neighborhood="_test_first_k").validate()
+        res = Mapper(H64, spec).map(grid3d(4, 4, 4))
+        assert sorted(res.perm.tolist()) == list(range(64))
+        assert res.final_objective <= res.initial_objective
+        # double registration is rejected
+        with pytest.raises(ValueError, match="already registered"):
+            register_construction("_test_reversed")(lambda g, h, **_: None)
+    finally:
+        del CONSTRUCTIONS["_test_reversed"]
+        del NEIGHBORHOODS["_test_first_k"]
+
+
+# ----------------------------------------------------------------- parity
+@pytest.mark.parametrize("construction", sorted(CONSTRUCTIONS))
+@pytest.mark.parametrize("neighborhood", sorted(NEIGHBORHOODS))
+def test_mapper_matches_legacy_bit_for_bit(construction, neighborhood):
+    g = grid3d(4, 4, 4)
+    spec = MappingSpec(construction=construction, neighborhood=neighborhood,
+                       neighborhood_dist=2, preconfiguration="fast", seed=3)
+    new = Mapper(H64, spec).map(g)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        old = map_processes(
+            g, H64, construction_algorithm=construction,
+            local_search_neighborhood=neighborhood,
+            communication_neighborhood_dist=2,
+            preconfiguration_mapping="fast", seed=3)
+    assert np.array_equal(new.perm, old.perm)
+    assert new.initial_objective == old.initial_objective
+    assert new.final_objective == old.final_objective
+
+
+@pytest.mark.parametrize("neighborhood", [None, "communication"])
+@pytest.mark.parametrize("parallel", [False, True])
+def test_mapper_matches_legacy_modes(neighborhood, parallel):
+    g = grid3d(4, 4, 4)
+    spec = MappingSpec(neighborhood=neighborhood, neighborhood_dist=2,
+                       preconfiguration="fast", parallel_sweeps=parallel,
+                       seed=0)
+    new = Mapper(H64, spec).map(g)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        old = map_processes(g, H64, local_search_neighborhood=neighborhood,
+                            communication_neighborhood_dist=2,
+                            preconfiguration_mapping="fast",
+                            parallel_sweeps=parallel, seed=0)
+    assert np.array_equal(new.perm, old.perm)
+    assert new.final_objective == old.final_objective
+
+
+def test_map_processes_is_deprecated():
+    with pytest.warns(DeprecationWarning, match="Mapper"):
+        map_processes(grid3d(4, 4, 4), H64,
+                      local_search_neighborhood=None,
+                      preconfiguration_mapping="fast")
+
+
+def test_mapper_rejects_size_mismatch():
+    with pytest.raises(ValueError, match="must match"):
+        Mapper(H64, MappingSpec()).map(grid3d(3, 3, 3))
+
+
+# --------------------------------------------------------------- map_many
+def test_map_many_matches_independent_maps_and_builds_once():
+    graphs = _weighted_grids(8)
+    spec = MappingSpec(neighborhood=None, preconfiguration="fast",
+                       backend="pallas", seed=0)
+    h = Hierarchy((4, 4, 4), (1.0, 10.0, 100.0))   # fresh: no cached oracle
+    mapper = Mapper(h, spec)
+    batch = mapper.map_many(graphs)
+    info = mapper.cache_info()
+    assert info["oracle_builds"] == 1        # one oracle for all 8 graphs
+    assert info["kernel_compiles"] == 1      # one objective-kernel compile
+    assert info["requests"] == 8
+    singles = [Mapper(h, spec).map(g) for g in graphs]
+    for got, want in zip(batch, singles):
+        assert np.array_equal(got.perm, want.perm)
+        assert got.final_objective == want.final_objective
+
+
+def test_map_many_shares_candidate_pairs_across_batch():
+    graphs = _weighted_grids(4)
+    mapper = Mapper(H64, MappingSpec(neighborhood="communication",
+                                     neighborhood_dist=2,
+                                     preconfiguration="fast"))
+    batch = mapper.map_many(graphs)
+    # structurally identical graphs → pairs computed once, 3 cache hits
+    assert mapper.cache_info()["pair_cache_hits"] == len(graphs) - 1
+    for g, got in zip(graphs, batch):
+        want = Mapper(H64, mapper.spec).map(g)
+        assert np.array_equal(got.perm, want.perm)
+        assert got.final_objective == want.final_objective
+
+
+def test_map_many_rejects_mixed_shapes():
+    with pytest.raises(ValueError, match="same-shape"):
+        Mapper(H64, MappingSpec()).map_many([grid3d(4, 4, 4),
+                                             grid3d(4, 4, 2)])
+
+
+def test_pallas_backend_objective_matches_numpy():
+    g = grid3d(4, 4, 4)
+    spec = MappingSpec(neighborhood=None, preconfiguration="fast")
+    res_np = Mapper(H64, spec).map(g)
+    res_pl = Mapper(H64, spec.replace(backend="pallas")).map(g)
+    assert np.array_equal(res_np.perm, res_pl.perm)
+    assert res_pl.initial_objective == pytest.approx(
+        res_np.initial_objective, rel=1e-6)
+
+
+def test_per_call_spec_override_controls_backend():
+    g = grid3d(4, 4, 4)
+    mapper = Mapper(H64, MappingSpec(neighborhood=None,
+                                     preconfiguration="fast"))
+    assert mapper.cache_info()["kernel_compiles"] == 0
+    res = mapper.map(g, spec=mapper.spec.replace(backend="pallas"))
+    # the per-request spec's backend applied: the kernel was compiled
+    assert mapper.cache_info()["kernel_compiles"] == 1
+    assert res.initial_objective == pytest.approx(
+        Mapper(H64, mapper.spec).map(g).initial_objective, rel=1e-6)
+
+
+def test_pallas_initial_and_final_objectives_are_comparable():
+    g = grid3d(4, 4, 4)
+    spec = MappingSpec(neighborhood="communication", neighborhood_dist=2,
+                       preconfiguration="fast", backend="pallas")
+    res = Mapper(H64, spec).map(g)
+    # jf recomputed through the same backend as j0 → improvement is sane
+    assert res.final_objective <= res.initial_objective + 1e-3
+    res_np = Mapper(H64, spec.replace(backend="numpy")).map(g)
+    assert np.array_equal(res.perm, res_np.perm)
+    assert res.final_objective == pytest.approx(res_np.final_objective,
+                                                rel=1e-6)
+
+
+def test_weight_dependent_neighborhood_is_not_served_stale_pairs():
+    @register_neighborhood("_test_heavy_edges", weight_dependent=True)
+    def _heavy(g, **_):
+        u, v, w = g.edge_list()
+        top = np.argsort(-w, kind="stable")[:8]
+        return np.stack([u[top], v[top]], axis=1)
+
+    try:
+        mapper = Mapper(H64, MappingSpec(neighborhood="_test_heavy_edges",
+                                         preconfiguration="fast"))
+        g1 = grid3d(4, 4, 4)
+        g2 = grid3d(4, 4, 4)
+        rng = np.random.default_rng(0)
+        g2.adjwgt = g2.adjwgt * rng.uniform(1, 100, size=g2.adjwgt.shape)
+        mapper.map_many([g1, g2])
+        # same structure but different weights → pairs recomputed, not hit
+        assert mapper.cache_info()["pair_cache_hits"] == 0
+    finally:
+        del NEIGHBORHOODS["_test_heavy_edges"]
+
+
+# ------------------------------------------------------------------ serve
+def test_serve_queue_matches_map():
+    mapper = Mapper(H64, MappingSpec(neighborhood="communication",
+                                     neighborhood_dist=2,
+                                     preconfiguration="fast"))
+    graphs = _weighted_grids(3)
+    want = {i: mapper.map(g) for i, g in enumerate(graphs)}
+    with mapper.serve() as svc:
+        tickets = [svc.submit(g) for g in graphs]
+        got = dict(svc.results.get(timeout=120) for _ in tickets)
+    assert sorted(got) == tickets
+    for i in tickets:
+        assert np.array_equal(got[i].perm, want[i].perm)
+        assert got[i].final_objective == want[i].final_objective
+
+
+def test_serve_isolates_per_request_failures():
+    mapper = Mapper(H64, MappingSpec(preconfiguration="fast",
+                                     neighborhood=None))
+    with mapper.serve() as svc:
+        bad = svc.submit(grid3d(3, 3, 3))    # size mismatch → error result
+        good = svc.submit(grid3d(4, 4, 4))
+        got = dict(svc.results.get(timeout=120) for _ in range(2))
+    assert isinstance(got[bad], ValueError)
+    assert sorted(got[good].perm.tolist()) == list(range(64))
+
+
+def test_serve_rejects_submit_after_close():
+    svc = Mapper(H64, MappingSpec(neighborhood=None,
+                                  preconfiguration="fast")).serve()
+    svc.close()
+    svc.close()    # idempotent
+    with pytest.raises(RuntimeError, match="closed"):
+        svc.submit(grid3d(4, 4, 4))
+
+
+# -------------------------------------------------------------------- CLI
+def _run_cli(mod, *args):
+    return subprocess.run(
+        [sys.executable, "-m", mod, *args], capture_output=True, text=True,
+        cwd=REPO, env={"PYTHONPATH": str(REPO / "src"),
+                       "PATH": "/usr/bin:/bin", "JAX_PLATFORMS": "cpu"})
+
+
+def test_cli_list_algorithms():
+    r = _run_cli("repro.cli.viem", "--list-algorithms")
+    assert r.returncode == 0, r.stderr
+    for name in list_constructions() + list_neighborhoods():
+        assert name in r.stdout
+
+
+def test_cli_config_with_flag_override(tmp_path):
+    g = grid3d(4, 4, 2)
+    gpath = tmp_path / "g.metis"
+    write_metis(g, str(gpath))
+    spec_path = tmp_path / "spec.json"
+    spec_path.write_text(MappingSpec(construction="identity",
+                                     neighborhood="none",
+                                     preconfiguration="fast",
+                                     seed=1).to_json())
+    out = tmp_path / "perm.txt"
+    r = _run_cli("repro.cli.viem", str(gpath),
+                 "--hierarchy_parameter_string=4:4:2",
+                 "--distance_parameter_string=1:10:100",
+                 f"--config={spec_path}",
+                 "--construction_algorithm=random",   # overrides the file
+                 f"--output_filename={out}")
+    assert r.returncode == 0, r.stderr
+    perm = np.loadtxt(out, dtype=np.int64)
+    assert sorted(perm.tolist()) == list(range(32))
+    # random@seed1 with no search — must equal the library result exactly
+    want = Mapper(Hierarchy((4, 4, 2), (1.0, 10.0, 100.0)),
+                  MappingSpec(construction="random", neighborhood=None,
+                              preconfiguration="fast", seed=1)
+                  ).map(g).perm
+    assert np.array_equal(perm, want)

@@ -1,7 +1,7 @@
 """QAP objective + delta gains: sparse vs dense oracle, gain matrix."""
 
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import (Hierarchy, qap_objective, qap_objective_dense,
                         random_geometric, swap_gain)
