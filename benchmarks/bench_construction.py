@@ -9,8 +9,6 @@ from __future__ import annotations
 
 import time
 
-import numpy as np
-
 from repro.core import Hierarchy, grid3d, qap_objective, random_geometric
 from repro.core.construction import CONSTRUCTIONS, construct
 

@@ -10,13 +10,11 @@ from __future__ import annotations
 
 import time
 
-import numpy as np
-
 from repro.core import Hierarchy, grid3d, qap_objective
 from repro.core.construction import construct
 from repro.core.local_search import local_search, parallel_sweep_search, \
     communication_pairs
-from repro.core.objective import batched_swap_gains, swap_gain
+from repro.core.objective import swap_gain
 
 H = Hierarchy((16, 8, 4), (1.0, 10.0, 100.0))
 

@@ -8,16 +8,19 @@ import sys
 
 def main() -> None:
     from . import (bench_construction, bench_kernels, bench_local_search,
-                   bench_mesh_mapping)
+                   bench_mesh_mapping, bench_topology)
 
     def report(name: str, us: float, derived: str = ""):
         print(f"{name},{us:.0f},{derived}", flush=True)
 
+    smoke = "--smoke" in sys.argv[1:]
     print("name,us_per_call,derived")
     bench_construction.run(report)
     bench_local_search.run(report)
     bench_kernels.run(report)
     bench_mesh_mapping.run(report)
+    # machine-model axis: writes BENCH_topology.json next to the CSV stream
+    bench_topology.run(report, smoke=smoke)
 
 
 if __name__ == "__main__":

@@ -23,7 +23,6 @@ per-device — exactly what the roofline terms need.
 
 from __future__ import annotations
 
-import json
 import re
 from collections import defaultdict
 from dataclasses import dataclass, field

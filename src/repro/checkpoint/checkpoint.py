@@ -49,8 +49,10 @@ def _restore_dtype(arr: np.ndarray, dtype_str: str) -> np.ndarray:
 
 
 def tree_paths(tree) -> list[str]:
+    # jax.tree_util spelling: jax.tree.map_with_path only exists on newer
+    # jax releases than the pinned toolchain provides.
     paths = []
-    jax.tree.map_with_path(
+    jax.tree_util.tree_map_with_path(
         lambda p, _: paths.append(jax.tree_util.keystr(p)), tree)
     return paths
 

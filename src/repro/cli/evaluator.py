@@ -1,5 +1,9 @@
 """`evaluator` — compute the QAP objective of a given mapping (guide §4.4).
 
+The mapping is scored against the same machine model it was built for:
+the tree hierarchy flags, or ``--topology`` / ``--distance_matrix_file``
+for any other registered machine model (same flags as ``viem``).
+
 ``--compare_spec spec.json`` additionally runs VieM with that
 :class:`MappingSpec` and reports how the given mapping stacks up against
 what the solver would produce.
@@ -13,36 +17,44 @@ from pathlib import Path
 
 import numpy as np
 
-from ..core import Hierarchy, Mapper, MappingSpec, qap_objective, read_metis
+from ..core import Mapper, MappingSpec, qap_objective, read_metis
 from ..core.comm_model import logical_traffic_summary
+from .machine import add_topology_flags, topology_from_args
 
 
 def main(argv=None):
     ap = argparse.ArgumentParser(prog="evaluator", description=__doc__)
     ap.add_argument("file", help="Path to file (graph/model).")
     ap.add_argument("--input_mapping", required=True)
-    ap.add_argument("--hierarchy_parameter_string", required=True)
-    ap.add_argument("--distance_parameter_string", required=True)
+    add_topology_flags(ap)
     ap.add_argument("--compare_spec", default=None,
                     help="MappingSpec JSON: also solve with this spec and "
                          "print the comparison")
     args = ap.parse_args(argv)
 
     g = read_metis(args.file)
-    h = Hierarchy.from_strings(args.hierarchy_parameter_string,
-                               args.distance_parameter_string)
+    try:
+        topo = topology_from_args(args)
+    except (ValueError, OSError) as exc:
+        sys.exit(f"evaluator: {exc}")
     perm = np.loadtxt(args.input_mapping, dtype=np.int64)
     if sorted(perm) != list(range(g.n)):
         sys.exit("evaluator: mapping is not a permutation of 0..n-1")
-    j = qap_objective(g, h, perm)
+    if g.n != topo.n_pe:
+        sys.exit(f"evaluator: model has {g.n} vertices but the machine "
+                 f"specifies {topo.n_pe} PEs — they must match")
+    j = qap_objective(g, topo, perm)
+    print(f"machine topology    = {topo.kind} ({topo.n_pe} PEs)")
     print(f"objective J(C,D,Pi) = {j:.6g}")
-    for k, v in logical_traffic_summary(g, h, perm).items():
-        print(f"  {k} = {v:.6g}")
+    if hasattr(topo, "hierarchy"):     # per-level traffic is tree-specific
+        for k, v in logical_traffic_summary(g, topo.hierarchy,
+                                            perm).items():
+            print(f"  {k} = {v:.6g}")
     if args.compare_spec:
         try:
             spec = MappingSpec.from_json(
                 Path(args.compare_spec).read_text()).validate()
-            res = Mapper(h, spec).map(g)
+            res = Mapper(topo, spec).map(g)
         except (ValueError, OSError) as exc:
             sys.exit(f"evaluator: {exc}")
         ratio = j / res.final_objective if res.final_objective else \

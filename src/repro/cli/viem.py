@@ -4,6 +4,8 @@ Usage:
     python -m repro.cli.viem graph.metis \
         --hierarchy_parameter_string=4:8:16 \
         --distance_parameter_string=1:10:100 \
+        [--topology=torus --topology_params='{"dims": [16, 16]}'] \
+        [--distance_matrix_file=D.metis]    # explicit matrix (sparse QAP)
         [--seed=0] [--preconfiguration_mapping=eco]
         [--construction_algorithm=hierarchytopdown]
         [--distance_construction_algorithm=hierarchyonline]
@@ -13,9 +15,10 @@ Usage:
         [--output_filename=permutation]
     python -m repro.cli.viem --list-algorithms
 
-Algorithm ``choices`` come from the registries, so third-party
-``@register_construction`` / ``@register_neighborhood`` algorithms are
-addressable here without touching this file.
+Algorithm and machine-model ``choices`` come from the registries, so
+third-party ``@register_construction`` / ``@register_neighborhood`` /
+``@register_topology`` plug-ins are addressable here without touching
+this file.
 """
 
 from __future__ import annotations
@@ -26,11 +29,14 @@ from pathlib import Path
 
 import numpy as np
 
-from ..core import Hierarchy, Mapper, MappingSpec, list_constructions, \
+from ..core import Mapper, MappingSpec, list_constructions, \
     list_neighborhoods, read_metis
+from .machine import add_topology_flags, machine_flags_given, \
+    topology_from_args
 
 
 def _print_algorithms():
+    from ..topology import list_topologies
     print("constructions:")
     for name in list_constructions():
         print(f"  {name}")
@@ -38,6 +44,9 @@ def _print_algorithms():
     for name in list_neighborhoods():
         print(f"  {name}")
     print("  none  (skip local search)")
+    print("topologies:")
+    for name in list_topologies():
+        print(f"  {name}")
 
 
 def build_spec(args) -> MappingSpec:
@@ -63,8 +72,7 @@ def main(argv=None):
                     choices=list_constructions())
     ap.add_argument("--distance_construction_algorithm", default="hierarchy",
                     choices=["hierarchy", "hierarchyonline"])
-    ap.add_argument("--hierarchy_parameter_string")
-    ap.add_argument("--distance_parameter_string")
+    add_topology_flags(ap)
     ap.add_argument("--local_search_neighborhood", default=None,
                     choices=list_neighborhoods() + ["none"])
     ap.add_argument("--communication_neighborhood_dist", type=int,
@@ -80,25 +88,26 @@ def main(argv=None):
 
     if not args.file:
         ap.error("the graph file argument is required")
-    if not args.hierarchy_parameter_string or \
-            not args.distance_parameter_string:
-        ap.error("--hierarchy_parameter_string and "
-                 "--distance_parameter_string are required")
 
     try:
         spec = build_spec(args)
+        # the machine model: explicit CLI flags win; otherwise a machine
+        # carried inside --config (spec.topology) is honored
+        if spec.topology is not None and not machine_flags_given(args):
+            topo = spec.topology.build()
+        else:
+            topo = topology_from_args(args)
     except (ValueError, OSError) as exc:
         sys.exit(f"viem: {exc}")
     g = read_metis(args.file)
-    h = Hierarchy.from_strings(args.hierarchy_parameter_string,
-                               args.distance_parameter_string)
-    if g.n != h.n_pe:
-        sys.exit(f"viem: model has {g.n} vertices but the hierarchy "
-                 f"specifies {h.n_pe} PEs — they must match (guide §4.1)")
+    if g.n != topo.n_pe:
+        sys.exit(f"viem: model has {g.n} vertices but the machine "
+                 f"specifies {topo.n_pe} PEs — they must match (guide §4.1)")
     # `hierarchyonline` vs `hierarchy` is a memory/speed knob; the oracle
     # is online in both cases here and they agree bit-for-bit (tested).
-    res = Mapper(h, spec).map(g)
+    res = Mapper(topo, spec).map(g)
     np.savetxt(args.output_filename, res.perm, fmt="%d")
+    print(f"machine topology     = {topo.kind} ({topo.n_pe} PEs)")
     print(f"initial objective  J = {res.initial_objective:.6g}")
     print(f"final objective    J = {res.final_objective:.6g}")
     print(f"improvement          = {res.improvement:.2%}")

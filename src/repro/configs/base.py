@@ -9,9 +9,8 @@ builds ShapeDtypeStruct stand-ins per (config, shape) for the dry-run.
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass, field, replace
+from dataclasses import dataclass, replace
 
-import jax
 import jax.numpy as jnp
 
 
@@ -212,12 +211,20 @@ class ModelConfig:
 
 def reduced(cfg: ModelConfig, **overrides) -> ModelConfig:
     """Family-preserving smoke-test reduction."""
+    smoke_experts = 4 if cfg.moe_experts else 0
     base = dict(
         n_layers=cfg.period * 2 if cfg.period > 1 else 2,
         d_model=128,
         n_heads=4, n_kv_heads=min(cfg.n_kv_heads, 2) or 2,
         d_ff=256, vocab_size=512, head_dim=32,
-        moe_experts=4 if cfg.moe_experts else 0,
+        moe_experts=smoke_experts,
+        # Smoke configs are drop-free: with the production capacity factor
+        # (1.25) the MoE capacity cutoff makes every token's kept/dropped
+        # status depend on how *earlier* tokens routed, which breaks the
+        # locality the receptive-field tests assert.  capacity_factor == E
+        # gives cap == top_k·T — no drops, routing stays token-local.
+        capacity_factor=float(smoke_experts) if smoke_experts
+        else cfg.capacity_factor,
         time_chunk=16, q_block=64, kv_block=64,
         sliding_window=64 if cfg.sliding_window else 0,
         frontend_tokens=4 if cfg.frontend_tokens else 0,

@@ -43,14 +43,14 @@ from .local_search import list_neighborhoods, register_neighborhood
 from .mapping import Mapper, MapperService, MappingResult, map_processes
 from .objective import dense_gain_matrix, qap_objective, \
     qap_objective_dense, swap_gain
-from .spec import MappingSpec
+from .spec import MappingSpec, TopologySpec
 
 __all__ = [
     "CommGraph", "GraphFormatError", "from_dense", "from_edges", "grid3d",
     "random_geometric", "read_metis", "validate", "write_metis",
     "DistanceOracle", "Hierarchy", "supermuc_like", "tpu_v5e_fleet",
     "Mapper", "MapperService", "MappingResult", "MappingSpec",
-    "map_processes",
+    "TopologySpec", "map_processes",
     "list_constructions", "register_construction",
     "list_neighborhoods", "register_neighborhood",
     "dense_gain_matrix", "qap_objective", "qap_objective_dense", "swap_gain",

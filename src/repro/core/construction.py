@@ -4,7 +4,12 @@
   identity, random, growing, hierarchybottomup, hierarchytopdown (default).
 
 All return ``perm`` with perm[u] = PE assigned to process u (a bijection on
-[0, n)).  n must equal the hierarchy's PE count.
+[0, n)).  n must equal the machine's PE count.
+
+``h`` is the machine model: a legacy ``Hierarchy`` / tree-family topology
+(runs the guide's exact factor-driven recursion) or any
+:class:`~repro.topology.Topology` — ``hierarchytopdown`` then recurses
+through the topology's ``split()`` hook instead of hierarchy factors.
 
 Algorithms live in a registry: decorate a ``fn(g, h, *, seed, cfg)`` with
 ``@register_construction("name")`` and it becomes addressable from
@@ -109,15 +114,22 @@ def growing_construction(g: CommGraph, h: Hierarchy, seed: int = 0,
 
 
 @register_construction("hierarchytopdown")
-def hierarchy_top_down(g: CommGraph, h: Hierarchy, seed: int = 0,
+def hierarchy_top_down(g: CommGraph, h, seed: int = 0,
                        cfg: PartitionConfig | None = None, **_) -> np.ndarray:
     """The guide's most successful strategy: recursively partition G_C into
-    a_k perfectly balanced blocks, assign each block to one level-k subtree,
-    recurse; base case (a_1 processes per processor) assigns ranks
-    arbitrarily (all intra-processor distances are equal)."""
+    perfectly balanced blocks matching the machine's natural decomposition,
+    assign each block to one machine sub-group, recurse; the base case
+    assigns ranks arbitrarily (all intra-leaf distances are equal).
+
+    Tree-family machines (anything exposing hierarchy ``factors``) run the
+    guide's exact factor-driven recursion; every other topology drives the
+    recursion through its ``split()`` hook (torus sub-boxes, matrix
+    farthest-pair halves, ...)."""
     if g.n != h.n_pe:
         raise ValueError(f"n processes ({g.n}) != n PEs ({h.n_pe})")
     cfg = cfg or PartitionConfig()
+    if not hasattr(h, "factors"):
+        return _split_top_down(g, h, seed, cfg)
     perm = np.full(g.n, -1, dtype=np.int64)
     factors = h.factors
 
@@ -136,12 +148,61 @@ def hierarchy_top_down(g: CommGraph, h: Hierarchy, seed: int = 0,
     return perm
 
 
+def _fit_block_sizes(labels: np.ndarray, k: int,
+                     sizes: np.ndarray) -> np.ndarray:
+    """Force block cardinalities to the target ``sizes`` by moving
+    vertices from over-full to under-full blocks (the partitioner balances
+    to n/k ± 1; split() parts can differ by one for odd sets)."""
+    counts = np.bincount(labels, minlength=k)
+    if np.array_equal(counts, sizes):
+        return labels
+    labels = labels.copy()
+    for b_u in range(k):
+        while counts[b_u] < sizes[b_u]:
+            b_o = next(b for b in range(k) if counts[b] > sizes[b])
+            v = np.nonzero(labels == b_o)[0][-1]
+            labels[v] = b_u
+            counts[b_o] -= 1
+            counts[b_u] += 1
+    return labels
+
+
+def _split_top_down(g: CommGraph, topo, seed: int,
+                    cfg: PartitionConfig) -> np.ndarray:
+    """Generic top-down recursion over the topology's ``split()`` hook:
+    partition the processes into blocks sized like the machine's natural
+    sub-groups, assign block b to sub-group b, recurse."""
+    perm = np.full(g.n, -1, dtype=np.int64)
+
+    def rec(nodes: np.ndarray, pes: np.ndarray, seed_: int):
+        parts = topo.split(pes) if len(nodes) > 1 else None
+        if not parts or len(parts) <= 1:
+            perm[nodes] = pes[:len(nodes)]
+            return
+        a = len(parts)
+        sizes = np.array([len(p) for p in parts])
+        sub, back = g.subgraph(nodes)
+        labels = _fit_block_sizes(partition(sub, a, cfg, seed=seed_),
+                                  a, sizes)
+        for b, part in enumerate(parts):
+            rec(back[labels == b], part, seed_ * a + b + 1)
+
+    rec(np.arange(g.n, dtype=np.int64),
+        np.arange(topo.n_pe, dtype=np.int64), seed)
+    return perm
+
+
 @register_construction("hierarchybottomup")
-def hierarchy_bottom_up(g: CommGraph, h: Hierarchy, seed: int = 0,
+def hierarchy_bottom_up(g: CommGraph, h, seed: int = 0,
                         cfg: PartitionConfig | None = None, **_) -> np.ndarray:
     """Bottom-up: cluster processes into processors (blocks of a_1), build
     the quotient graph, cluster processors into nodes (blocks of a_2), …
     PE index = mixed-radix digits collected along the way."""
+    if not hasattr(h, "factors"):
+        raise ValueError(
+            "hierarchybottomup needs a tree-family machine (hierarchy "
+            f"factors); topology kind {getattr(h, 'kind', '?')!r} has "
+            "none — use hierarchytopdown (split-driven) or growing")
     if g.n != h.n_pe:
         raise ValueError(f"n processes ({g.n}) != n PEs ({h.n_pe})")
     cfg = cfg or PartitionConfig()

@@ -163,7 +163,11 @@ def read_metis(path_or_file) -> CommGraph:
     else:
         with open(path_or_file, "r") as fh:
             lines = fh.read().splitlines()
-    body = [ln for ln in lines if ln.strip() and not ln.lstrip().startswith("%")]
+    # blank lines are significant — an isolated vertex has an empty
+    # adjacency line — so only comments and leading blanks are dropped
+    body = [ln for ln in lines if not ln.lstrip().startswith("%")]
+    while body and not body[0].strip():
+        body.pop(0)
     if not body:
         raise GraphFormatError("empty graph file")
     header = body[0].split()
@@ -175,6 +179,9 @@ def read_metis(path_or_file) -> CommGraph:
         raise GraphFormatError(f"unknown format flag {fmt!r}")
     has_ew = fmt.endswith("1")
     has_vw = len(fmt) == 2 and fmt[0] == "1"
+    # tolerate editor-added blank lines after the last vertex line
+    while len(body) - 1 > n and not body[-1].strip():
+        body.pop()
     if len(body) - 1 != n:
         raise GraphFormatError(
             f"file declares n={n} vertices but has {len(body)-1} vertex lines")

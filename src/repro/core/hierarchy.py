@@ -18,7 +18,7 @@ chip → tray (ICI hop) → superblock (several ICI hops) → pod (DCN).
 from __future__ import annotations
 
 import functools
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 import numpy as np
 

@@ -24,7 +24,6 @@ from typing import Callable
 import numpy as np
 
 from .graph import CommGraph
-from .hierarchy import Hierarchy
 from .objective import batched_swap_gains, qap_objective, swap_gain
 
 
@@ -187,7 +186,7 @@ def _pruned_neighborhood(g: CommGraph, **_) -> np.ndarray:
 
 
 # ------------------------------------------------------------------ drivers
-def _cyclic_search(g: CommGraph, h: Hierarchy, perm: np.ndarray,
+def _cyclic_search(g: CommGraph, h, perm: np.ndarray,
                    pairs: np.ndarray, shuffle: bool, seed: int,
                    max_sweeps: int = 50) -> SearchStats:
     """Shared driver: visit candidate pairs cyclically (optionally in random
@@ -224,7 +223,7 @@ def _cyclic_search(g: CommGraph, h: Hierarchy, perm: np.ndarray,
     return stats
 
 
-def local_search(g: CommGraph, h: Hierarchy, perm: np.ndarray,
+def local_search(g: CommGraph, h, perm: np.ndarray,
                  neighborhood: str = "communication",
                  communication_neighborhood_dist: int = 10,
                  seed: int = 0, max_sweeps: int = 50,
@@ -239,7 +238,7 @@ def local_search(g: CommGraph, h: Hierarchy, perm: np.ndarray,
 
 
 # ----------------------------------------------- batched sweep (TPU-shaped)
-def parallel_sweep_search(g: CommGraph, h: Hierarchy, perm: np.ndarray,
+def parallel_sweep_search(g: CommGraph, h, perm: np.ndarray,
                           pairs: np.ndarray, max_sweeps: int = 64,
                           seed: int = 0) -> SearchStats:
     """TPU-adapted search (DESIGN §3): per sweep, evaluate *all* candidate

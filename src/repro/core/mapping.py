@@ -1,24 +1,28 @@
 """Top-level mapping API — `Mapper` sessions driven by `MappingSpec`.
 
     spec = MappingSpec(neighborhood="communication", neighborhood_dist=10)
-    mapper = Mapper(hierarchy, spec)
+    mapper = Mapper(machine, spec)    # machine: Hierarchy or any Topology
     result = mapper.map(g)            # one graph
     results = mapper.map_many(gs)     # same-shape batch, shared setup
     service = mapper.serve()          # request-queue serving hook
 
-A `Mapper` owns one :class:`Hierarchy` and amortizes everything that does
-not depend on the individual graph across requests: the hierarchy's
-distance oracle (built once per `Hierarchy`, see
-:class:`~repro.core.hierarchy.DistanceOracle`), compiled Pallas kernels
-(swap-gain matrix, edge-list QAP objective — compiled once per shape and
-cached), and candidate-pair neighborhoods (cached per graph structure).
+A `Mapper` owns one machine model — a legacy :class:`Hierarchy` (wrapped
+into the ``tree`` topology, bit-for-bit identical) or any registered
+:class:`~repro.topology.Topology` (torus, fattree, dragonfly, explicit
+matrix, third-party) — and amortizes everything that does not depend on
+the individual graph across requests: the machine's distance oracle
+(built once per machine instance), compiled Pallas kernels (swap-gain
+matrix, edge-list QAP objective — one entry per topology kernel form ×
+shape), and candidate-pair neighborhoods (cached per graph structure).
 `cache_info()` exposes hit/build counters so callers can assert the
 amortization actually happened.
 
 Algorithms are resolved through the registries in
-:mod:`repro.core.construction` and :mod:`repro.core.local_search`; defaults
-mirror the guide (hierarchytopdown construction, communication
-neighborhood with distance 10, eco preconfiguration, online distances).
+:mod:`repro.core.construction`, :mod:`repro.core.local_search`, and
+:mod:`repro.topology`; defaults mirror the guide (hierarchytopdown
+construction, communication neighborhood with distance 10, eco
+preconfiguration, online distances).  ``Mapper.from_spec(spec)`` builds
+the machine from the spec's serialized :class:`TopologySpec`.
 
 :func:`map_processes` survives as a deprecated shim over
 ``Mapper(h, MappingSpec(...)).map(g)`` — identical results, one-shot setup.
@@ -39,7 +43,7 @@ import numpy as np
 
 from .construction import resolve_construction
 from .graph import CommGraph
-from .hierarchy import DistanceOracle, Hierarchy
+from .hierarchy import Hierarchy
 from .local_search import (SearchStats, _cyclic_search,
                            parallel_sweep_search, resolve_neighborhood)
 from .objective import dense_gain_matrix, qap_objective
@@ -66,10 +70,10 @@ class MappingResult:
 # ------------------------------------------------------------- kernel cache
 class _KernelCache:
     """Session cache of jitted Pallas entry points, keyed by the static
-    arguments that force a recompile (hierarchy parameters + shapes).
-    ``compiles`` counts cache misses — the number of distinct kernel
-    configurations this session prepared.  Each miss corresponds to at
-    most one XLA compile on first call (jax's process-global jit cache
+    arguments that force a recompile (the topology's ``kernel_params()``
+    + shapes).  ``compiles`` counts cache misses — the number of distinct
+    kernel configurations this session prepared.  Each miss corresponds to
+    at most one XLA compile on first call (jax's process-global jit cache
     dedups across sessions), so it upper-bounds real compiles."""
 
     def __init__(self):
@@ -81,16 +85,35 @@ class _KernelCache:
         import jax
         return jax.default_backend() != "tpu"
 
-    def objective_edges(self, oracle: DistanceOracle, n_edges: int):
-        strides, dists = oracle.kernel_params()
-        key = ("qap_edges", strides, dists, int(n_edges))
+    def objective_edges(self, topology, n_edges: int):
+        """Edge-list objective entry for the topology's device-side
+        distance form: closed-form tree/torus oracles computed in-register,
+        or the gather path against the materialized matrix."""
+        kp = topology.kernel_params()
+        kind = kp[0]
+        key = ("qap_edges", kp, int(n_edges))
         fn = self._fns.get(key)
-        if fn is None:
-            from ..kernels.qap_objective import qap_objective_edges
-            fn = functools.partial(qap_objective_edges, strides=strides,
-                                   dists=dists, interpret=self._interpret())
-            self._fns[key] = fn
-            self.compiles += 1
+        if fn is not None:
+            return fn
+        from ..kernels import qap_objective as qk
+        interpret = self._interpret()
+        if kind == "tree":
+            _, strides, dists = kp
+            fn = functools.partial(qk.qap_objective_edges, strides=strides,
+                                   dists=dists, interpret=interpret)
+        elif kind == "torus":
+            _, dims, weights = kp
+            fn = functools.partial(qk.qap_objective_edges_torus, dims=dims,
+                                   weights=weights, interpret=interpret)
+        elif kind == "matrix":
+            import jax.numpy as jnp
+            D = jnp.asarray(topology.matrix(), jnp.float32)
+            fn = functools.partial(qk.qap_objective_edges_matrix, D=D,
+                                   interpret=interpret)
+        else:
+            raise ValueError(f"unknown kernel_params kind {kind!r}")
+        self._fns[key] = fn
+        self.compiles += 1
         return fn
 
     def swap_gain_matrix(self, n: int):
@@ -118,20 +141,25 @@ def _structure_key(g: CommGraph, with_weights: bool = False) -> tuple:
 
 # ------------------------------------------------------------------ session
 class Mapper:
-    """A mapping session over one machine hierarchy.
+    """A mapping session over one machine model.
 
-    Construction cost (oracle build, kernel compiles, neighborhood pair
-    generation) is paid once and reused by every subsequent ``map`` /
-    ``map_many`` / ``serve`` request — the point of a session object over
-    the one-shot :func:`map_processes`.
+    ``machine`` is a legacy :class:`Hierarchy` (wrapped into the ``tree``
+    topology — results bit-for-bit identical) or any
+    :class:`~repro.topology.Topology`.  Construction cost (oracle build,
+    kernel compiles, neighborhood pair generation) is paid once and reused
+    by every subsequent ``map`` / ``map_many`` / ``serve`` request — the
+    point of a session object over the one-shot :func:`map_processes`.
     """
 
-    def __init__(self, hierarchy: Hierarchy, spec: MappingSpec | None = None):
-        self.h = hierarchy
+    def __init__(self, machine, spec: MappingSpec | None = None):
+        from ..topology.base import as_topology
+        self.topology = as_topology(machine)
+        # `h` is the machine handle threaded through constructions, search
+        # drivers, and the objective — kept under the legacy name so the
+        # duck-typed tree path runs the exact pre-topology code.
+        self.h = self.topology
         self.spec = (spec or MappingSpec()).validate()
-        already_built = "oracle" in hierarchy.__dict__   # cached_property hit
-        self.oracle = hierarchy.oracle          # built at most once per h
-        self._oracle_builds = 0 if already_built else 1
+        self.oracle, self._oracle_builds = self._claim_oracle()
         self._kernels = _KernelCache()
         # LRU-bounded: candidate-pair arrays can reach max_pairs entries
         # (~32 MB each), and serve() sessions are long-lived
@@ -139,6 +167,28 @@ class Mapper:
         self._pair_cache_size = 16
         self._pair_hits = 0
         self._requests = 0
+
+    @classmethod
+    def from_spec(cls, spec: MappingSpec) -> "Mapper":
+        """Build the machine from the spec's serialized
+        :class:`TopologySpec` and open a session over it."""
+        spec = spec.validate()
+        if spec.topology is None:
+            raise ValueError("MappingSpec.topology is not set; pass the "
+                             "machine explicitly: Mapper(machine, spec)")
+        return cls(spec.topology.build(), spec)
+
+    def _claim_oracle(self):
+        """The machine's distance-oracle state, built at most once per
+        machine instance and shared across sessions over it.  Returns
+        (oracle, builds_counted_against_this_session)."""
+        topo = self.topology
+        if hasattr(topo, "hierarchy"):            # tree family: legacy oracle
+            already = "oracle" in topo.hierarchy.__dict__
+            return topo.hierarchy.oracle, 0 if already else 1
+        already = getattr(topo, "_oracle_claimed", False)
+        topo._oracle_claimed = True
+        return topo, 0 if already else 1
 
     # ------------------------------------------------------------- caching
     def cache_info(self) -> dict:
@@ -176,7 +226,7 @@ class Mapper:
         spec = spec or self.spec
         if spec.backend == "pallas":
             u, v, w = g.edge_list()
-            fn = self._kernels.objective_edges(self.oracle, len(u))
+            fn = self._kernels.objective_edges(self.topology, len(u))
             perm = np.asarray(perm, dtype=np.int64)
             return float(fn(perm[u].astype(np.int32),
                             perm[v].astype(np.int32),
@@ -227,8 +277,8 @@ class Mapper:
 
     def _map_one(self, g: CommGraph, spec: MappingSpec) -> MappingResult:
         if g.n != self.h.n_pe:
-            raise ValueError(f"graph has {g.n} processes but hierarchy has "
-                             f"{self.h.n_pe} PEs — they must match "
+            raise ValueError(f"graph has {g.n} processes but the machine "
+                             f"has {self.h.n_pe} PEs — they must match "
                              f"(guide §4.1)")
         self._requests += 1
         construct_fn = resolve_construction(spec.construction)

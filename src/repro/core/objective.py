@@ -18,11 +18,13 @@ from __future__ import annotations
 import numpy as np
 
 from .graph import CommGraph
-from .hierarchy import Hierarchy
+from .hierarchy import Hierarchy   # noqa: F401  (re-exported type hint)
 
 
-def qap_objective(g: CommGraph, h: Hierarchy, perm: np.ndarray) -> float:
-    """J(C, D, Π) in O(m) using the online distance oracle."""
+def qap_objective(g: CommGraph, h, perm: np.ndarray) -> float:
+    """J(C, D, Π) in O(m) using the online distance oracle.  ``h`` is any
+    machine model with a vectorized ``distance`` (Hierarchy or
+    :class:`~repro.topology.Topology`)."""
     u, v, w = g.edge_list()
     return float(np.sum(w * h.distance(perm[u], perm[v])))
 
@@ -36,7 +38,7 @@ def qap_objective_dense(C: np.ndarray, D: np.ndarray,
     return float(np.sum(np.triu(C * Dp, k=1)))
 
 
-def swap_gain(g: CommGraph, h: Hierarchy, perm: np.ndarray,
+def swap_gain(g: CommGraph, h, perm: np.ndarray,
               u: int, v: int) -> float:
     """Gain (objective decrease, positive = improvement) of swapping the PEs
     assigned to processes u and v.  O(deg(u) + deg(v))."""
@@ -61,7 +63,7 @@ def apply_swap(perm: np.ndarray, u: int, v: int) -> None:
     perm[u], perm[v] = perm[v], perm[u]
 
 
-def batched_swap_gains(g: CommGraph, h: Hierarchy, perm: np.ndarray,
+def batched_swap_gains(g: CommGraph, h, perm: np.ndarray,
                        pairs: np.ndarray) -> np.ndarray:
     """Vectorized gains for many candidate pairs at once (host/numpy path).
 
@@ -77,7 +79,6 @@ def batched_swap_gains(g: CommGraph, h: Hierarchy, perm: np.ndarray,
     def side(a_arr, b_arr):
         # flattened neighbor expansion for all a in a_arr
         cnt = deg[a_arr]
-        off = np.concatenate([[0], np.cumsum(cnt)])
         idx = np.concatenate([np.arange(g.xadj[a], g.xadj[a + 1])
                               for a in a_arr]) if cnt.sum() else np.zeros(0, np.int64)
         nb = g.adjncy[idx]

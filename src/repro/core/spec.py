@@ -10,18 +10,66 @@ spec:
     MappingSpec.from_flags(args)                  # the guide's §4.1 flags
 
 Algorithm names are resolved against the registries in
-:mod:`repro.core.construction` and :mod:`repro.core.local_search`, so a
-third-party ``@register_construction`` algorithm is immediately addressable
-from a spec (and from the CLI) without touching this file.
+:mod:`repro.core.construction`, :mod:`repro.core.local_search`, and
+:mod:`repro.topology`, so a third-party ``@register_construction`` /
+``@register_topology`` plug-in is immediately addressable from a spec (and
+from the CLI) without touching this file.
+
+A spec may carry the machine model itself as a :class:`TopologySpec`
+(kind + JSON-safe constructor params); ``Mapper.from_spec(spec)`` then
+builds both the topology and the session from the one serialized object.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import json
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 
 _NONE_ALIASES = (None, "none", "None", "")
+
+
+@dataclass(frozen=True)
+class TopologySpec:
+    """Declarative machine model: a registered topology ``kind`` plus the
+    JSON-safe constructor parameters its factory takes, e.g.::
+
+        TopologySpec("tree",  {"factors": [4, 4], "distances": [1, 10]})
+        TopologySpec("torus", {"dims": [16, 16]})
+        TopologySpec("matrix", {"file": "D.metis"})
+
+    ``build()`` resolves the kind against the ``@register_topology``
+    registry and returns the live :class:`~repro.topology.Topology`.
+    """
+
+    kind: str = "tree"
+    params: dict = field(default_factory=dict)
+
+    def validate(self) -> "TopologySpec":
+        from ..topology.base import resolve_topology
+        resolve_topology(self.kind)
+        return self
+
+    def build(self):
+        from ..topology.base import make_topology
+        return make_topology(self.kind, **self.params)
+
+    def to_dict(self) -> dict:
+        return {"kind": self.kind, "params": dict(self.params)}
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "TopologySpec":
+        unknown = sorted(set(d) - {"kind", "params"})
+        if unknown:
+            raise ValueError(f"unknown TopologySpec keys {unknown}; "
+                             f"known keys: ['kind', 'params']")
+        return cls(kind=d.get("kind", "tree"),
+                   params=dict(d.get("params", {})))
+
+    @classmethod
+    def of(cls, topology) -> "TopologySpec":
+        """Spec of a live topology (via its ``spec_params``)."""
+        return cls(kind=topology.kind, params=topology.spec_params())
 
 
 @dataclass(frozen=True)
@@ -46,10 +94,14 @@ class MappingSpec:
     seed: int = 0
     max_sweeps: int | None = None
     max_pairs: int = 2_000_000
+    topology: TopologySpec | None = None
 
     def __post_init__(self):
         if self.neighborhood in _NONE_ALIASES:
             object.__setattr__(self, "neighborhood", None)
+        if isinstance(self.topology, dict):
+            object.__setattr__(self, "topology",
+                               TopologySpec.from_dict(self.topology))
 
     # ------------------------------------------------------------ validation
     def validate(self) -> "MappingSpec":
@@ -72,11 +124,16 @@ class MappingSpec:
             raise ValueError("max_pairs must be >= 1")
         if self.max_sweeps is not None and self.max_sweeps < 0:
             raise ValueError("max_sweeps must be None or >= 0")
+        if self.topology is not None:
+            self.topology.validate()
         return self
 
     # ------------------------------------------------------- dict/json forms
     def to_dict(self) -> dict:
-        return dataclasses.asdict(self)
+        d = dataclasses.asdict(self)
+        if self.topology is not None:
+            d["topology"] = self.topology.to_dict()
+        return d
 
     @classmethod
     def from_dict(cls, d: dict) -> "MappingSpec":

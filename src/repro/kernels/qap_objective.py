@@ -1,10 +1,18 @@
-"""Pallas TPU kernel: sparse QAP objective over an edge list.
+"""Pallas TPU kernels: sparse QAP objective over an edge list.
 
 J(C, D, Π) = Σ_{e=(u,v)} w_e · D(Π(u), Π(v)) — the paper's O(m) evaluation
-(guide §2.1) with the *online* hierarchical distance oracle computed
-arithmetically in-register (guide's `hierarchyonline`): no n×n distance
-matrix, no gather — the hierarchy levels k are small and static, so the
-oracle unrolls to k compare/select steps on the VPU.
+(guide §2.1) with the distance oracle in one of three device-side forms,
+selected by the machine topology's ``kernel_params()``:
+
+  tree    — online hierarchical oracle computed arithmetically in-register
+            (guide's `hierarchyonline`): the k levels are small and static,
+            so the oracle unrolls to k compare/select steps on the VPU,
+  torus   — closed-form k-ary n-cube oracle: per-axis div/mod coordinates
+            and ring distance, unrolled over the (static) axes — like the
+            tree path, large n never materializes an n×n matrix anywhere,
+  matrix  — explicit-D topologies: the (E,)-gather d_e = D[pu_e, pv_e]
+            runs in the jit'd wrapper (XLA's gather is the right tool; D
+            may exceed VMEM), and the Pallas kernel reduces Σ w_e · d_e.
 
 Inputs are pre-gathered PE ids pu = Π[u], pv = Π[v] (the gather is done in
 the jit'd wrapper; XLA handles it well) shaped (rows, L) so each grid step
@@ -36,6 +44,22 @@ def _hier_distance(pu, pv, strides, dists):
     return out
 
 
+def _torus_distance(pu, pv, dims, weights):
+    """Closed-form k-ary n-cube oracle: Σ_a w_a · ring(|x_a − y_a|, k_a).
+    Axis 0 is innermost in the PE index (mixed radix); the per-axis
+    div/mod unrolls over the static axis list on the VPU."""
+    out = jnp.zeros(pu.shape, jnp.float32)
+    stride = 1
+    for d, w in zip(dims, weights):
+        xa = (pu // stride) % d
+        ya = (pv // stride) % d
+        delta = jnp.abs(xa - ya)
+        out += jnp.float32(w) * jnp.minimum(delta, d - delta).astype(
+            jnp.float32)
+        stride *= d
+    return out
+
+
 def _qap_obj_kernel(pu_ref, pv_ref, w_ref, out_ref, acc_ref, *,
                     strides: tuple, dists: tuple, rows: int):
     r = pl.program_id(0)
@@ -55,6 +79,36 @@ def _qap_obj_kernel(pu_ref, pv_ref, w_ref, out_ref, acc_ref, *,
         out_ref[0, 0] = acc_ref[0, 0]
 
 
+def _qap_obj_torus_kernel(pu_ref, pv_ref, w_ref, out_ref, acc_ref, *,
+                          dims: tuple, weights: tuple, rows: int):
+    r = pl.program_id(0)
+
+    @pl.when(r == 0)
+    def _init():
+        acc_ref[0, 0] = 0.0
+
+    d = _torus_distance(pu_ref[...], pv_ref[...], dims, weights)
+    acc_ref[0, 0] += jnp.sum(w_ref[...] * d)
+
+    @pl.when(r == rows - 1)
+    def _done():
+        out_ref[0, 0] = acc_ref[0, 0]
+
+
+def _weighted_sum_kernel(d_ref, w_ref, out_ref, acc_ref, *, rows: int):
+    r = pl.program_id(0)
+
+    @pl.when(r == 0)
+    def _init():
+        acc_ref[0, 0] = 0.0
+
+    acc_ref[0, 0] += jnp.sum(w_ref[...] * d_ref[...])
+
+    @pl.when(r == rows - 1)
+    def _done():
+        out_ref[0, 0] = acc_ref[0, 0]
+
+
 @functools.partial(jax.jit,
                    static_argnames=("strides", "dists", "lanes", "interpret"))
 def qap_objective_edges(pu: jax.Array, pv: jax.Array, w: jax.Array,
@@ -67,13 +121,10 @@ def qap_objective_edges(pu: jax.Array, pv: jax.Array, w: jax.Array,
     0) to a lane multiple and reshaped to (rows, lanes).
     """
     e = pu.shape[0]
-    lanes = min(lanes, max(128, 1 << (max(e - 1, 1)).bit_length()))
-    e_pad = -(-max(e, 1) // lanes) * lanes
-    pad = e_pad - e
-    pu_p = jnp.pad(pu.astype(jnp.int32), (0, pad)).reshape(-1, lanes)
-    pv_p = jnp.pad(pv.astype(jnp.int32), (0, pad)).reshape(-1, lanes)
-    w_p = jnp.pad(w.astype(jnp.float32), (0, pad)).reshape(-1, lanes)
-    rows = pu_p.shape[0]
+    pu_p, pv_p, w_p = _pad_to_lanes(
+        [pu.astype(jnp.int32), pv.astype(jnp.int32),
+         w.astype(jnp.float32)], e, lanes)
+    rows, lanes = pu_p.shape
     out = pl.pallas_call(
         functools.partial(_qap_obj_kernel, strides=tuple(strides),
                           dists=tuple(dists), rows=rows),
@@ -89,4 +140,76 @@ def qap_objective_edges(pu: jax.Array, pv: jax.Array, w: jax.Array,
         scratch_shapes=[pltpu.SMEM((1, 1), jnp.float32)],
         interpret=interpret,
     )(pu_p, pv_p, w_p)
+    return out[0, 0]
+
+
+def _pad_to_lanes(arrs, e: int, lanes: int):
+    """Zero-pad 1-D edge arrays to a lane multiple and reshape to
+    (rows, lanes).  Zero padding is inert for every oracle form: pu == pv
+    == 0 gives distance 0 for tree/torus/matrix, and w == 0 kills the
+    term regardless."""
+    lanes = min(lanes, max(128, 1 << (max(e - 1, 1)).bit_length()))
+    e_pad = -(-max(e, 1) // lanes) * lanes
+    pad = e_pad - e
+    return [jnp.pad(a, (0, pad)).reshape(-1, lanes) for a in arrs]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("dims", "weights", "lanes", "interpret"))
+def qap_objective_edges_torus(pu: jax.Array, pv: jax.Array, w: jax.Array,
+                              dims: tuple, weights: tuple,
+                              lanes: int = 1024, interpret: bool = False
+                              ) -> jax.Array:
+    """Σ w_e · D_torus(pu_e, pv_e) for the k-ary n-cube (dims, weights)."""
+    e = pu.shape[0]
+    pu_p, pv_p, w_p = _pad_to_lanes(
+        [pu.astype(jnp.int32), pv.astype(jnp.int32),
+         w.astype(jnp.float32)], e, lanes)
+    rows, lanes_ = pu_p.shape
+    out = pl.pallas_call(
+        functools.partial(_qap_obj_torus_kernel, dims=tuple(dims),
+                          weights=tuple(weights), rows=rows),
+        grid=(rows,),
+        in_specs=[
+            pl.BlockSpec((1, lanes_), lambda r: (r, 0)),
+            pl.BlockSpec((1, lanes_), lambda r: (r, 0)),
+            pl.BlockSpec((1, lanes_), lambda r: (r, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1), lambda r: (0, 0),
+                               memory_space=pltpu.SMEM),
+        out_shape=jax.ShapeDtypeStruct((1, 1), jnp.float32),
+        scratch_shapes=[pltpu.SMEM((1, 1), jnp.float32)],
+        interpret=interpret,
+    )(pu_p, pv_p, w_p)
+    return out[0, 0]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("lanes", "interpret"))
+def qap_objective_edges_matrix(pu: jax.Array, pv: jax.Array, w: jax.Array,
+                               D: jax.Array, lanes: int = 1024,
+                               interpret: bool = False) -> jax.Array:
+    """Σ w_e · D[pu_e, pv_e] for an explicit distance matrix.
+
+    The per-edge gather runs as an XLA gather in this wrapper (D may not
+    fit VMEM, and XLA pipelines HBM gathers well); the Pallas kernel does
+    the lane-aligned weighted reduction.
+    """
+    e = pu.shape[0]
+    d = D.astype(jnp.float32)[pu, pv]
+    d_p, w_p = _pad_to_lanes([d, w.astype(jnp.float32)], e, lanes)
+    rows, lanes_ = d_p.shape
+    out = pl.pallas_call(
+        functools.partial(_weighted_sum_kernel, rows=rows),
+        grid=(rows,),
+        in_specs=[
+            pl.BlockSpec((1, lanes_), lambda r: (r, 0)),
+            pl.BlockSpec((1, lanes_), lambda r: (r, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1), lambda r: (0, 0),
+                               memory_space=pltpu.SMEM),
+        out_shape=jax.ShapeDtypeStruct((1, 1), jnp.float32),
+        scratch_shapes=[pltpu.SMEM((1, 1), jnp.float32)],
+        interpret=interpret,
+    )(d_p, w_p)
     return out[0, 0]

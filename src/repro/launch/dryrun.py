@@ -23,8 +23,6 @@ import time
 import traceback
 from pathlib import Path
 
-import jax
-
 from ..analysis import analyze, roofline_from_cost
 from ..configs import ARCHS, SHAPES, get_config, supports_shape
 from .mesh import make_production_mesh

@@ -6,9 +6,10 @@
 
 ``viem_device_order`` is the paper integrated as a launch feature: given a
 compiled step's HLO, extract the logical-device traffic graph
-(core.comm_model), model the physical fleet as the paper's hierarchy
-(core.hierarchy.tpu_v5e_fleet), and solve the sparse QAP for the
-logical→physical assignment.  The returned device list feeds
+(core.comm_model), model the physical fleet — either the paper-style tree
+hierarchy (core.hierarchy.tpu_v5e_fleet) or the honest ICI model, a 2D
+torus per pod (repro.topology.tpu_v5e_torus) — and solve the sparse QAP
+for the logical→physical assignment.  The returned device list feeds
 ``make_production_mesh(devices=...)`` so heavy-traffic logical neighbors
 land on physically close chips.
 """
@@ -31,21 +32,43 @@ def make_production_mesh(*, multi_pod: bool = False, devices=None):
     return jax.make_mesh(shape, axes)
 
 
+def fleet_model(machine_model: str = "tree", pods: int = 2):
+    """The physical-fleet machine model by name: ``tree`` (the paper-style
+    nested distance classes), ``torus`` (the honest per-pod 2D ICI torus
+    with a DCN pod axis), or any registered topology name (built with its
+    default parameters).  A live ``Topology``/``Hierarchy`` passes
+    through."""
+    if not isinstance(machine_model, str):
+        return machine_model
+    if machine_model == "tree":
+        from ..core import tpu_v5e_fleet
+        return tpu_v5e_fleet(pods=pods)
+    if machine_model == "torus":
+        from ..topology import tpu_v5e_torus
+        return tpu_v5e_torus(pods=pods)
+    from ..topology import make_topology
+    return make_topology(machine_model)
+
+
 def viem_device_order(hlo_text: str, n_devices: int, pods: int = 2,
                       preconfiguration: str = "eco",
-                      neighborhood_dist: int = 10, seed: int = 0):
+                      neighborhood_dist: int = 10, seed: int = 0,
+                      machine_model: str = "tree"):
     """Logical→physical assignment minimizing modeled collective cost.
+
+    ``machine_model`` selects the fleet model (see :func:`fleet_model`);
+    the default stays the paper-style tree hierarchy.
 
     Returns (device_order, result): ``device_order[i]`` is the physical
     chip that logical device i should use — pass
     ``np.array(jax.devices())[device_order]`` to
     :func:`make_production_mesh`.
     """
-    from ..core import Mapper, MappingSpec, tpu_v5e_fleet
+    from ..core import Mapper, MappingSpec
     from ..core.comm_model import device_comm_graph
 
     g = device_comm_graph(hlo_text, n_devices)
-    h = tpu_v5e_fleet(pods=pods)
+    h = fleet_model(machine_model, pods=pods)
     if h.n_pe != n_devices:
         raise ValueError(f"fleet has {h.n_pe} PEs but program uses "
                          f"{n_devices} devices")

@@ -18,7 +18,6 @@ import jax.numpy as jnp
 from ..configs import get_config, get_smoke_config
 from ..models.transformer import init_params, prefill_with_cache
 from ..train.steps import serve_step
-from .train import make_local_mesh
 
 
 def serve(arch: str, batch: int, prompt_len: int, gen: int,

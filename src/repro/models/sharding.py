@@ -10,7 +10,6 @@ rather than relying on GSPMD's padded sharding.
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 

@@ -14,8 +14,6 @@ Decode carries a cache pytree with the same period structure:
 
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 

@@ -8,6 +8,8 @@ property tests skip, every other test in the module still runs.
 
 import pytest
 
+__all__ = ["HAVE_HYPOTHESIS", "given", "settings", "st"]
+
 try:
     from hypothesis import given, settings, strategies as st
     HAVE_HYPOTHESIS = True

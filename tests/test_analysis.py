@@ -5,7 +5,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.analysis import analyze, parse_module, roofline_from_cost
+from repro.analysis import analyze, roofline_from_cost
 from repro.analysis.hlo import (_replica_group_info, _ring_factor,
                                 shape_numel_bytes, Instruction)
 

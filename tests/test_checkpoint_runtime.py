@@ -1,8 +1,5 @@
 """Checkpoint roundtrip/atomicity/async + fault-tolerance policies."""
 
-import threading
-import time
-
 import jax
 import jax.numpy as jnp
 import numpy as np

@@ -3,7 +3,6 @@ monotone improvement, termination — the paper's §2 behaviors."""
 
 import numpy as np
 import pytest
-from _hypothesis_compat import given, settings, st
 
 from repro.core import Hierarchy, grid3d, map_processes, qap_objective, \
     random_geometric

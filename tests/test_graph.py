@@ -5,7 +5,7 @@ import io
 import numpy as np
 import pytest
 
-from repro.core import (CommGraph, GraphFormatError, from_dense, from_edges,
+from repro.core import (GraphFormatError, from_dense, from_edges,
                         grid3d, random_geometric, read_metis, validate,
                         write_metis)
 

@@ -5,7 +5,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import Hierarchy, grid3d, qap_objective, random_geometric
+from repro.core import Hierarchy, grid3d, qap_objective
 from repro.core.objective import dense_gain_matrix
 from repro.kernels import ops
 from repro.kernels.ref import hier_distance_ref

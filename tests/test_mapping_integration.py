@@ -8,7 +8,7 @@ from pathlib import Path
 import numpy as np
 import pytest
 
-from repro.core import (Hierarchy, grid3d, map_processes, qap_objective,
+from repro.core import (grid3d, map_processes, qap_objective,
                         tpu_v5e_fleet, write_metis)
 from repro.core.comm_model import (device_comm_graph, generate_model,
                                    logical_traffic_summary)
@@ -61,7 +61,6 @@ def test_mapping_improves_mesh_traffic():
     from repro.core import from_edges
     n = 256
     h = tpu_v5e_fleet(pods=1)
-    rng = np.random.default_rng(0)
     us, vs, ws = [], [], []
     # 16 TP rings of size 16 with heavy traffic, strided layout (worst
     # case for identity), plus a DP ring with light traffic

@@ -1,0 +1,275 @@
+"""Shared distance-oracle contract suite, run against *every* registered
+topology backend: zero diagonal, symmetry, online oracle ≡ materialized
+matrix, kernel path ≡ numpy path, split() decomposition invariants, spec
+round-trips — plus `tree` ≡ legacy `Hierarchy` bit-for-bit through Mapper.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import (Hierarchy, Mapper, MappingSpec, TopologySpec,
+                        grid3d, qap_objective, write_metis)
+from repro.topology import (DragonflyTopology, FatTreeTopology,
+                            MatrixTopology, TorusTopology, TreeTopology,
+                            as_topology, list_topologies,
+                            load_distance_matrix, make_topology,
+                            tpu_v5e_torus, tpu_v5p_torus)
+
+
+def _matrix_instance(n=64, seed=0):
+    rng = np.random.default_rng(seed)
+    A = rng.random((n, n)) * 9.0
+    D = A + A.T
+    np.fill_diagonal(D, 0.0)
+    return MatrixTopology(matrix=D)
+
+
+# one instance per registered backend, all with n_pe == 64 so the same
+# graphs/mappings exercise every machine model
+INSTANCES = {
+    "tree": TreeTopology((4, 4, 4), (1.0, 10.0, 100.0)),
+    "torus": TorusTopology((4, 4, 4), (1.0, 2.0, 7.0)),
+    "fattree": FatTreeTopology((4, 4, 4), (1.0, 3.0, 9.0)),
+    "dragonfly": DragonflyTopology(pes_per_router=4, routers_per_group=4,
+                                   n_groups=4),
+    "matrix": _matrix_instance(),
+}
+
+
+def _params(request):
+    return INSTANCES[request.param]
+
+
+@pytest.fixture(params=sorted(INSTANCES))
+def topo(request):
+    return INSTANCES[request.param]
+
+
+def test_every_registered_backend_is_covered():
+    """The contract suite must grow with the registry."""
+    assert set(INSTANCES) == set(list_topologies())
+    for name, t in INSTANCES.items():
+        assert t.kind == name
+        assert t.n_pe == 64
+
+
+# ----------------------------------------------------------- the contract
+def test_zero_diagonal_and_symmetry(topo):
+    D = topo.distance_matrix()
+    assert D.shape == (64, 64)
+    assert np.all(np.diag(D) == 0.0)
+    assert np.array_equal(D, D.T)
+    assert np.all(D >= 0.0)
+
+
+def test_online_oracle_matches_matrix(topo, rng):
+    D = topo.distance_matrix()
+    p = rng.integers(0, topo.n_pe, 200)
+    q = rng.integers(0, topo.n_pe, 200)
+    assert np.array_equal(topo.distance(p, q), D[p, q])
+    # scalar form
+    assert topo.distance(3, 7) == D[3, 7]
+    # broadcasting form
+    idx = np.arange(topo.n_pe)
+    assert np.array_equal(topo.distance(idx[:, None], idx[None, :]), D)
+
+
+def test_matrix_is_cached(topo):
+    assert topo.matrix() is topo.matrix()
+    assert not topo.matrix().flags.writeable
+
+
+def test_kernel_path_matches_numpy_path(topo):
+    """The Pallas edge-list objective (tree/torus closed form, matrix
+    gather) agrees with the host oracle for every backend."""
+    g = grid3d(4, 4, 4)
+    spec = MappingSpec(construction="random", neighborhood=None, seed=3)
+    mapper = Mapper(topo, spec)
+    perm = np.random.default_rng(5).permutation(64)
+    want = mapper.objective(g, perm, spec)
+    got = mapper.objective(g, perm, spec.replace(backend="pallas"))
+    assert want == pytest.approx(got, rel=2e-6)
+    assert mapper.cache_info()["kernel_compiles"] == 1
+
+
+def test_split_is_a_balanced_partition(topo):
+    """split() recursively decomposes the full PE set into equal-size(±1)
+    parts that exactly partition it, and terminates."""
+    def rec(ids, depth):
+        assert depth < 32, "split() recursion did not terminate"
+        parts = topo.split(ids)
+        if parts is None:
+            return [ids]
+        assert len(parts) >= 2
+        sizes = [len(p) for p in parts]
+        assert max(sizes) - min(sizes) <= 1
+        leaves = []
+        for p in parts:
+            leaves += rec(p, depth + 1)
+        return leaves
+
+    leaves = rec(np.arange(topo.n_pe, dtype=np.int64), 0)
+    union = np.sort(np.concatenate(leaves))
+    assert np.array_equal(union, np.arange(topo.n_pe))
+
+
+def test_spec_round_trip(topo):
+    rebuilt = make_topology(topo.kind, **topo.spec_params())
+    assert np.array_equal(rebuilt.distance_matrix(),
+                          topo.distance_matrix())
+    # through TopologySpec / MappingSpec JSON
+    spec = MappingSpec(topology=TopologySpec.of(topo),
+                       preconfiguration="fast").validate()
+    spec2 = MappingSpec.from_json(spec.to_json())
+    assert spec2.topology == spec.topology
+    mapper = Mapper.from_spec(spec2)
+    assert mapper.topology.n_pe == topo.n_pe
+    assert np.array_equal(mapper.topology.distance_matrix(),
+                          topo.distance_matrix())
+
+
+def test_mapper_end_to_end(topo):
+    """Every backend maps the mesh graph: valid permutation, local search
+    does not worsen the objective, objective is consistent."""
+    g = grid3d(4, 4, 4)
+    spec = MappingSpec(preconfiguration="fast", neighborhood_dist=2,
+                       max_sweeps=2, seed=0)
+    res = Mapper(topo, spec).map(g)
+    assert sorted(res.perm) == list(range(64))
+    assert res.final_objective <= res.initial_objective + 1e-9
+    assert res.final_objective == pytest.approx(
+        qap_objective(g, topo, res.perm))
+
+
+# ------------------------------------------------- tree ≡ Hierarchy (exact)
+def test_tree_is_bit_identical_to_hierarchy():
+    h = Hierarchy((4, 4, 4), (1.0, 10.0, 100.0))
+    t = TreeTopology(hierarchy=h)
+    assert np.array_equal(t.distance_matrix(), h.distance_matrix())
+    g = grid3d(4, 4, 4)
+    for nb in ("communication", None):
+        spec = MappingSpec(preconfiguration="fast", neighborhood=nb,
+                           seed=2)
+        r_h = Mapper(h, spec).map(g)
+        r_t = Mapper(t, spec).map(g)
+        assert np.array_equal(r_h.perm, r_t.perm)
+        assert r_h.initial_objective == r_t.initial_objective
+        assert r_h.final_objective == r_t.final_objective
+
+
+def test_hierarchy_coerces_to_tree_topology():
+    h = Hierarchy((4, 4), (1.0, 10.0))
+    t = as_topology(h)
+    assert isinstance(t, TreeTopology) and t.hierarchy is h
+    assert as_topology(t) is t
+    with pytest.raises(TypeError):
+        as_topology(object())
+
+
+def test_tree_oracle_shared_across_sessions():
+    h = Hierarchy((4, 4), (1.0, 10.0))
+    m1 = Mapper(h)
+    m2 = Mapper(h)
+    assert m1.cache_info()["oracle_builds"] == 1
+    assert m2.cache_info()["oracle_builds"] == 0      # cached on h
+    topo = TorusTopology((4, 4))
+    m3, m4 = Mapper(topo), Mapper(topo)
+    assert m3.cache_info()["oracle_builds"] == 1
+    assert m4.cache_info()["oracle_builds"] == 0      # claimed on topo
+
+
+# ----------------------------------------------------------- torus details
+def test_torus_ring_distance():
+    t = TorusTopology((5, 3), (1.0, 4.0))
+    assert t.distance(0, 4) == 1.0         # wraparound: min(4, 1)
+    assert t.distance(0, 2) == 2.0
+    assert t.distance(0, 5) == 4.0         # one hop on axis 1
+    assert t.distance(0, 10) == 4.0        # wraparound on axis 1 (ring of 3)
+    assert t.n_pe == 15
+
+
+def test_torus_presets():
+    assert tpu_v5e_torus(1).n_pe == 256
+    assert tpu_v5e_torus(2).n_pe == 512
+    assert tpu_v5p_torus().n_pe == 1024
+    # DCN axis dominates ICI
+    t = tpu_v5e_torus(2)
+    assert t.distance(0, 256) == 60.0
+
+
+def test_fattree_doubles_cumulative_link_costs():
+    ft = FatTreeTopology((2, 2), (1.0, 5.0))
+    # same edge switch: up+down one link each = 2; via root: 2·(1+5) = 12
+    assert ft.distance(0, 1) == 2.0
+    assert ft.distance(0, 2) == 12.0
+
+
+def test_dragonfly_distance_classes():
+    df = DragonflyTopology(pes_per_router=2, routers_per_group=2,
+                           n_groups=2, d_router=1.0, d_local=2.0,
+                           d_global=10.0)
+    assert df.distance(0, 1) == 1.0        # same router
+    assert df.distance(0, 2) == 2.0        # same group
+    assert df.distance(0, 4) == 14.0       # l-g-l across groups
+
+
+# ------------------------------------------------------- matrix file I/O
+def test_matrix_from_metis_file(tmp_path):
+    topo = INSTANCES["torus"]
+    # encode the torus distance matrix as a metis graph (weight=distance)
+    from repro.core import from_dense
+    gD = from_dense(topo.distance_matrix())
+    path = tmp_path / "D.metis"
+    with open(path, "w") as fh:
+        write_metis(gD, fh)
+    m = MatrixTopology(file=str(path))
+    assert np.array_equal(m.distance_matrix(), topo.distance_matrix())
+
+
+def test_matrix_from_dense_text_and_npy(tmp_path):
+    D = INSTANCES["matrix"].D
+    txt = tmp_path / "D.txt"
+    np.savetxt(txt, D)
+    got = load_distance_matrix(txt)
+    assert np.allclose(got, D)
+    npy = tmp_path / "D.npy"
+    np.save(npy, D)
+    assert np.array_equal(load_distance_matrix(str(npy)), D)
+
+
+def test_matrix_validation():
+    with pytest.raises(ValueError, match="square"):
+        MatrixTopology(matrix=np.zeros((3, 4)))
+    bad = np.ones((3, 3))
+    with pytest.raises(ValueError, match="diagonal"):
+        MatrixTopology(matrix=bad)
+    asym = np.zeros((3, 3))
+    asym[0, 1] = 1.0
+    with pytest.raises(ValueError, match="symmetric"):
+        MatrixTopology(matrix=asym)
+    neg = np.zeros((3, 3))
+    neg[0, 1] = neg[1, 0] = -1.0
+    with pytest.raises(ValueError, match="non-negative"):
+        MatrixTopology(matrix=neg)
+
+
+# -------------------------------------------------------------- registry
+def test_registry_rejects_duplicates_and_unknowns():
+    from repro.topology import register_topology, resolve_topology
+    with pytest.raises(ValueError, match="already registered"):
+        register_topology("torus")(TorusTopology)
+    with pytest.raises(ValueError, match="unknown topology"):
+        resolve_topology("hypercube-of-dreams")
+    with pytest.raises(ValueError, match="unknown topology"):
+        TopologySpec(kind="nope").validate()
+
+
+def test_bottomup_requires_tree_family():
+    g = grid3d(4, 4, 4)
+    spec = MappingSpec(construction="hierarchybottomup",
+                       preconfiguration="fast")
+    with pytest.raises(ValueError, match="tree-family"):
+        Mapper(INSTANCES["torus"], spec).map(g)
+    # tree family (incl. fattree/dragonfly) works
+    res = Mapper(INSTANCES["fattree"], spec).map(g)
+    assert sorted(res.perm) == list(range(64))

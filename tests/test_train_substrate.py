@@ -1,6 +1,5 @@
 """Optimizer math, loss masking, data determinism, gradient compression."""
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
