@@ -1,0 +1,128 @@
+"""Engine benchmark — host vs device refinement on the mesh workload.
+
+Runs the same refinement problem (random construction on the
+mesh-collective traffic graph, same candidate-pair set, same sweep
+budget) through the host ``parallel_sweep_search`` driver and the
+device-resident ``repro.engine`` sweep loop, at fleet sizes
+n ∈ {256, 512, 1024} on tree and torus machine models, and writes
+``BENCH_engine.json``: wall-time, applied sweeps, per-sweep wall-time,
+and final objective per cell, plus the headline device-vs-host
+comparison (per-sweep speedup; device objective ≤ host).
+
+Device numbers are interpret-/CPU-mode when no TPU is attached — the
+comparison is conservative there (the jitted loop still amortizes; a
+real TPU widens the gap).
+
+    python -m benchmarks.bench_engine [--smoke] [--out BENCH_engine.json]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+from repro.core import qap_objective, tpu_v5e_fleet
+from repro.core.construction import construct
+from repro.core.local_search import communication_pairs, \
+    parallel_sweep_search
+from repro.engine import RefinementEngine
+from repro.topology import as_topology, tpu_v5e_torus
+
+from .bench_topology import mesh_workload
+
+MAX_SWEEPS = 64
+PAIR_DIST = 2
+
+
+def _machines(pods: int) -> dict:
+    return {"tree": tpu_v5e_fleet(pods=pods),
+            "torus": tpu_v5e_torus(pods=pods)}
+
+
+def _sweeps_of(stats) -> int:
+    return max(len(stats.objective_trace) - 1, 1)
+
+
+def run(report, smoke: bool = False, out: str = "BENCH_engine.json"):
+    pod_counts = [1] if smoke else [1, 2, 4]      # n = 256 · pods
+    cells, headline = [], []
+    for pods in pod_counts:
+        g = mesh_workload(pods)
+        pairs = communication_pairs(g, PAIR_DIST)
+        for tname, machine in _machines(pods).items():
+            topo = as_topology(machine)
+            perm0 = construct("random", g, topo, seed=0)
+            j0 = qap_objective(g, topo, perm0)
+
+            # ---- host reference driver
+            p_host = perm0.copy()
+            t0 = time.perf_counter()
+            st_host = parallel_sweep_search(g, topo, p_host, pairs,
+                                            max_sweeps=MAX_SWEEPS)
+            t_host = time.perf_counter() - t0
+
+            # ---- device engine (compile excluded: one warm-up run)
+            eng = RefinementEngine(topo, max_sweeps=MAX_SWEEPS)
+            eng.refine(g, perm0.copy(), pairs)
+            p_dev = perm0.copy()
+            t0 = time.perf_counter()
+            st_dev = eng.refine(g, p_dev, pairs)
+            t_dev = time.perf_counter() - t0
+
+            for engine, st, dt in (("host", st_host, t_host),
+                                   ("device", st_dev, t_dev)):
+                sweeps = _sweeps_of(st)
+                cells.append({
+                    "n": g.n, "topology": tname, "engine": engine,
+                    "pairs": int(len(pairs)), "seconds": dt,
+                    "sweeps": sweeps,
+                    "us_per_sweep": dt / sweeps * 1e6,
+                    "initial_objective": j0,
+                    "final_objective": st.final_objective,
+                })
+                report(f"engine/{tname}/n{g.n}/{engine}",
+                       dt / sweeps * 1e6,
+                       f"J={st.final_objective:.4e};sweeps={sweeps}")
+
+            tol = 1e-5 * max(1.0, abs(st_host.final_objective))
+            cmp = {
+                "n": g.n, "topology": tname,
+                "host_us_per_sweep": t_host / _sweeps_of(st_host) * 1e6,
+                "device_us_per_sweep": t_dev / _sweeps_of(st_dev) * 1e6,
+                "device_per_sweep_speedup":
+                    (t_host / _sweeps_of(st_host))
+                    / max(t_dev / _sweeps_of(st_dev), 1e-12),
+                "host_final_objective": st_host.final_objective,
+                "device_final_objective": st_dev.final_objective,
+                "device_objective_leq_host":
+                    st_dev.final_objective <= st_host.final_objective + tol,
+            }
+            cmp["device_wins_wall_time"] = cmp["device_per_sweep_speedup"] > 1
+            headline.append(cmp)
+            report(f"engine/{tname}/n{g.n}/speedup", 0,
+                   f"x{cmp['device_per_sweep_speedup']:.2f};"
+                   f"obj_leq={cmp['device_objective_leq_host']}")
+
+    payload = {"mode": "smoke" if smoke else "full",
+               "workload": "mesh-collectives",
+               "max_sweeps": MAX_SWEEPS, "pair_dist": PAIR_DIST,
+               "cells": cells, "headline": headline}
+    with open(out, "w") as fh:
+        json.dump(payload, fh, indent=2)
+    report("engine/json_written", 0, out)
+    return payload
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="single-pod fleet only (CI)")
+    ap.add_argument("--out", default="BENCH_engine.json")
+    args = ap.parse_args(argv)
+    run(lambda n, us, d: print(f"{n},{us:.0f},{d}", flush=True),
+        smoke=args.smoke, out=args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -7,8 +7,8 @@ import sys
 
 
 def main() -> None:
-    from . import (bench_construction, bench_kernels, bench_local_search,
-                   bench_mesh_mapping, bench_topology)
+    from . import (bench_construction, bench_engine, bench_kernels,
+                   bench_local_search, bench_mesh_mapping, bench_topology)
 
     def report(name: str, us: float, derived: str = ""):
         print(f"{name},{us:.0f},{derived}", flush=True)
@@ -21,6 +21,8 @@ def main() -> None:
     bench_mesh_mapping.run(report)
     # machine-model axis: writes BENCH_topology.json next to the CSV stream
     bench_topology.run(report, smoke=smoke)
+    # refinement-engine axis: writes BENCH_engine.json (host vs device)
+    bench_engine.run(report, smoke=smoke)
 
 
 if __name__ == "__main__":

@@ -11,6 +11,7 @@ Usage:
         [--distance_construction_algorithm=hierarchyonline]
         [--local_search_neighborhood=communication]
         [--communication_neighborhood_dist=10]
+        [--engine=host|device]          # host drivers vs jitted device sweep
         [--config=spec.json]            # load a MappingSpec (flags override)
         [--output_filename=permutation]
     python -m repro.cli.viem --list-algorithms
@@ -79,6 +80,10 @@ def main(argv=None):
                     default=None)
     ap.add_argument("--parallel_sweeps",
                     action=argparse.BooleanOptionalAction, default=None)
+    ap.add_argument("--engine", default=None, choices=["host", "device"],
+                    help="where the refinement loop runs: the reference "
+                         "host drivers, or the jitted device-resident "
+                         "sweep engine (repro.engine)")
     ap.add_argument("--output_filename", default="permutation")
     args = ap.parse_args(argv)
 

@@ -35,8 +35,9 @@ Modules:
 """
 
 from .construction import list_constructions, register_construction
-from .graph import CommGraph, GraphFormatError, from_dense, from_edges, \
-    grid3d, random_geometric, read_metis, validate, write_metis
+from .graph import CommGraph, DeviceGraph, GraphFormatError, device_pairs, \
+    from_dense, from_edges, grid3d, random_geometric, read_metis, validate, \
+    write_metis
 from .hierarchy import DistanceOracle, Hierarchy, supermuc_like, \
     tpu_v5e_fleet
 from .local_search import list_neighborhoods, register_neighborhood
@@ -46,7 +47,8 @@ from .objective import dense_gain_matrix, qap_objective, \
 from .spec import MappingSpec, TopologySpec
 
 __all__ = [
-    "CommGraph", "GraphFormatError", "from_dense", "from_edges", "grid3d",
+    "CommGraph", "DeviceGraph", "GraphFormatError", "device_pairs",
+    "from_dense", "from_edges", "grid3d",
     "random_geometric", "read_metis", "validate", "write_metis",
     "DistanceOracle", "Hierarchy", "supermuc_like", "tpu_v5e_fleet",
     "Mapper", "MapperService", "MappingResult", "MappingSpec",

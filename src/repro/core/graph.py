@@ -100,6 +100,121 @@ class CommGraph:
         )
 
 
+def csr_expand(xadj: np.ndarray, rows: np.ndarray
+               ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Loop-free flat expansion of CSR rows: for each r in ``rows`` (in
+    order, repeats allowed) the positions [xadj[r], xadj[r+1])
+    concatenated.  Returns ``(pos, off, cnt)`` — flat CSR positions,
+    within-row offsets, and per-row counts — the shared repeat/offset
+    idiom behind batched gains, frontier BFS, and the ELL conversion.
+    """
+    rows = np.asarray(rows, dtype=np.int64)
+    cnt = xadj[rows + 1] - xadj[rows]
+    total = int(cnt.sum())
+    if not total:
+        z = np.zeros(0, np.int64)
+        return z, z.copy(), cnt
+    ends = np.cumsum(cnt)
+    off = np.arange(total, dtype=np.int64) - np.repeat(ends - cnt, cnt)
+    return np.repeat(xadj[rows], cnt) + off, off, cnt
+
+
+# ------------------------------------------------------------- device arrays
+@dataclass
+class DeviceGraph:
+    """Device-resident view of a :class:`CommGraph` for the refinement
+    engine: fixed-width (ELL) neighbor rows plus a padded edge list, all
+    jnp arrays, so gains, objectives, and sweeps run without ragged
+    indexing or host round-trips.
+
+    Attributes:
+      nbr:  (n, K) int32 — neighbor ids; rows right-padded with the row's
+            own vertex id (safe for any D gather; the weight masks it out).
+      wgt:  (n, K) float32 — edge weights, 0.0 on padding.
+      eu/ev/ew: (E,) int32/int32/float32 — each undirected edge once
+            (u < v), padded with (0, 0, 0.0) entries (inert: w = 0).
+      n, num_edges: true (unpadded) sizes.
+
+    Padding invariants (relied on by the engine and tested):
+      * a padded neighbor slot contributes 0 to every pair gain (w = 0),
+      * a padded edge contributes 0 to the objective (w = 0),
+      * both are invariant under *further* padding, so batching graphs to
+        common (K, E) maxima leaves per-graph results unchanged.
+    """
+
+    nbr: object
+    wgt: object
+    eu: object
+    ev: object
+    ew: object
+    n: int
+    num_edges: int
+
+    @property
+    def max_deg(self) -> int:
+        return self.nbr.shape[1]
+
+    @classmethod
+    def from_comm(cls, g: "CommGraph", pad_deg_to: int = 8,
+                  pad_edges_to: int = 128) -> "DeviceGraph":
+        """Build the padded device arrays from a CSR graph.  ``pad_deg_to``
+        / ``pad_edges_to`` round K and E up so jit shapes bucket instead of
+        recompiling per graph."""
+        import jax.numpy as jnp
+        n = g.n
+        pos, cols, deg = csr_expand(g.xadj, np.arange(n))
+        k = int(deg.max(initial=0))
+        k = max(pad_deg_to, -(-max(k, 1) // pad_deg_to) * pad_deg_to)
+        nbr = np.repeat(np.arange(n, dtype=np.int32)[:, None], k, axis=1)
+        wgt = np.zeros((n, k), dtype=np.float32)
+        rows = np.repeat(np.arange(n), deg)
+        nbr[rows, cols] = g.adjncy[pos]
+        wgt[rows, cols] = g.adjwgt[pos]
+        u, v, w = g.edge_list()
+        e = max(pad_edges_to,
+                -(-max(len(u), 1) // pad_edges_to) * pad_edges_to)
+        pad = e - len(u)
+        return cls(
+            nbr=jnp.asarray(nbr), wgt=jnp.asarray(wgt),
+            eu=jnp.asarray(np.pad(u, (0, pad)).astype(np.int32)),
+            ev=jnp.asarray(np.pad(v, (0, pad)).astype(np.int32)),
+            ew=jnp.asarray(np.pad(w, (0, pad)).astype(np.float32)),
+            n=n, num_edges=len(u))
+
+    def pad_to(self, max_deg: int, num_edges: int) -> "DeviceGraph":
+        """Re-pad to a batch's common (K, E) — results are unchanged by
+        the extra inert padding (see class docstring)."""
+        import jax.numpy as jnp
+        if max_deg < self.max_deg or num_edges < self.eu.shape[0]:
+            raise ValueError("pad_to cannot shrink device arrays")
+        dk = max_deg - self.max_deg
+        de = num_edges - self.eu.shape[0]
+        row_ids = jnp.broadcast_to(
+            jnp.arange(self.n, dtype=jnp.int32)[:, None], (self.n, dk))
+        return DeviceGraph(
+            nbr=jnp.concatenate([self.nbr, row_ids], axis=1),
+            wgt=jnp.pad(self.wgt, ((0, 0), (0, dk))),
+            eu=jnp.pad(self.eu, (0, de)), ev=jnp.pad(self.ev, (0, de)),
+            ew=jnp.pad(self.ew, (0, de)),
+            n=self.n, num_edges=self.num_edges)
+
+
+def device_pairs(pairs: np.ndarray, pad_to: int = 128) -> tuple:
+    """Candidate pairs as device arrays: (us, vs) int32, right-padded with
+    (0, 0) entries to a ``pad_to`` multiple.  A u == v pair has exactly
+    zero gain and is never selected by the engine, so the padding is
+    inert (and invariant under further padding — batching-safe)."""
+    import jax.numpy as jnp
+    pairs = np.asarray(pairs, dtype=np.int64)
+    p = max(pad_to, -(-max(len(pairs), 1) // pad_to) * pad_to)
+    pad = p - len(pairs)
+    us = np.pad(pairs[:, 0] if len(pairs) else np.zeros(0, np.int64),
+                (0, pad)).astype(np.int32)
+    vs = np.pad(pairs[:, 1] if len(pairs) else np.zeros(0, np.int64),
+                (0, pad)).astype(np.int32)
+    return jnp.asarray(us), jnp.asarray(vs)
+
+
 # --------------------------------------------------------------------- build
 def from_edges(n: int, u: np.ndarray, v: np.ndarray, w: np.ndarray,
                vwgt: np.ndarray | None = None) -> CommGraph:

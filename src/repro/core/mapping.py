@@ -161,6 +161,8 @@ class Mapper:
         self.spec = (spec or MappingSpec()).validate()
         self.oracle, self._oracle_builds = self._claim_oracle()
         self._kernels = _KernelCache()
+        # device refinement engines, one per (kernel_params, max_sweeps)
+        self._engines: dict = {}
         # LRU-bounded: candidate-pair arrays can reach max_pairs entries
         # (~32 MB each), and serve() sessions are long-lived
         self._pair_cache: "OrderedDict[tuple, np.ndarray]" = OrderedDict()
@@ -198,18 +200,36 @@ class Mapper:
         return {
             "oracle_builds": self._oracle_builds,
             "kernel_compiles": self._kernels.compiles,
+            "engine_builds": len(self._engines),
             "pair_cache_hits": self._pair_hits,
             "requests": self._requests,
         }
 
+    def _engine(self, spec: MappingSpec):
+        """The session's device refinement engine for this spec — built
+        once per (topology kernel form, sweep budget) and reused by every
+        subsequent device-engine request (jax re-specializes per shape
+        under the hood, so same-shape graphs share one executable)."""
+        max_sweeps = 64 if spec.max_sweeps is None else spec.max_sweeps
+        key = (self.topology.kernel_params(), max_sweeps)
+        eng = self._engines.get(key)
+        if eng is None:
+            from ..engine import RefinementEngine
+            eng = RefinementEngine(self.topology, max_sweeps=max_sweeps)
+            self._engines[key] = eng
+        return eng
+
     def _pairs(self, g: CommGraph, spec: MappingSpec) -> np.ndarray:
         nb = resolve_neighborhood(spec.neighborhood)
-        key = (spec.neighborhood, spec.neighborhood_dist, spec.seed,
+        # unseeded (deterministic) generators share one cache entry
+        # across seeds — only genuinely randomized ones key on the seed
+        key = (spec.neighborhood, spec.neighborhood_dist,
+               spec.seed if nb.seeded else None,
                spec.max_pairs) + _structure_key(g, nb.weight_dependent)
         pairs = self._pair_cache.get(key)
         if pairs is None:
-            pairs = nb.pairs(g, dist=spec.neighborhood_dist, seed=spec.seed,
-                             max_pairs=spec.max_pairs)
+            pairs = nb.generate(g, dist=spec.neighborhood_dist,
+                                seed=spec.seed, max_pairs=spec.max_pairs)
             self._pair_cache[key] = pairs
             if len(self._pair_cache) > self._pair_cache_size:
                 self._pair_cache.popitem(last=False)
@@ -273,9 +293,34 @@ class Mapper:
             raise ValueError(f"map_many requires same-shape graphs; got "
                              f"process counts {sorted(ns)}")
         spec = self.spec if spec is None else spec.validate()
+        if spec.engine == "device" and spec.neighborhood is not None:
+            return self._map_many_device(graphs, spec)
         return [self._map_one(g, spec) for g in graphs]
 
-    def _map_one(self, g: CommGraph, spec: MappingSpec) -> MappingResult:
+    def _map_many_device(self, graphs, spec: MappingSpec
+                         ) -> list[MappingResult]:
+        """Batch path for the device engine: constructions and candidate
+        pairs per graph on host (cached as usual), then ONE vmapped
+        engine call refines the whole batch — no Python loop over sweeps
+        or graphs.  Padding to the batch's common shapes is inert, so
+        results match per-graph :meth:`map` calls."""
+        prepped = [self._construct(g, spec) for g in graphs]
+        perms = [perm for perm, _, _ in prepped]
+        # timed window matches _map_one's: pair generation + refinement
+        t1 = time.perf_counter()
+        pairs_list = [self._pairs(g, spec) for g in graphs]
+        stats_list = self._engine(spec).refine_batch(
+            graphs, perms, pairs_list, j0s=[j0 for _, _, j0 in prepped])
+        t_search = (time.perf_counter() - t1) / len(graphs)
+        return [self._finish(g, perm, j0, t_cons, t_search, stats, spec)
+                for g, (perm, t_cons, j0), stats
+                in zip(graphs, prepped, stats_list)]
+
+    def _construct(self, g: CommGraph, spec: MappingSpec
+                   ) -> tuple[np.ndarray, float, float]:
+        """Shared per-graph prep for the single and batch paths: size
+        check, request accounting, timed construction, and the initial
+        objective through the spec's backend."""
         if g.n != self.h.n_pe:
             raise ValueError(f"graph has {g.n} processes but the machine "
                              f"has {self.h.n_pe} PEs — they must match "
@@ -285,9 +330,28 @@ class Mapper:
         cfg = PartitionConfig.preconfiguration(spec.preconfiguration)
         t0 = time.perf_counter()
         perm = construct_fn(g, self.h, seed=spec.seed, cfg=cfg)
-        t_cons = time.perf_counter() - t0
-        j0 = self.objective(g, perm, spec)
+        return perm, time.perf_counter() - t0, self.objective(g, perm, spec)
 
+    def _finish(self, g: CommGraph, perm: np.ndarray, j0: float,
+                t_cons: float, t_search: float, stats: SearchStats | None,
+                spec: MappingSpec) -> MappingResult:
+        """Shared result assembly: the final objective is the search's
+        incremental host float64 value on the ``numpy`` backend
+        (legacy-identical) and recomputed through the session backend
+        otherwise, so j0 and jf stay comparable."""
+        if stats is None:
+            jf = j0
+        elif spec.backend == "numpy":
+            jf = stats.final_objective
+        else:
+            jf = self.objective(g, perm, spec)
+        return MappingResult(perm=perm, initial_objective=j0,
+                             final_objective=jf,
+                             construction_seconds=t_cons,
+                             search_seconds=t_search, search_stats=stats)
+
+    def _map_one(self, g: CommGraph, spec: MappingSpec) -> MappingResult:
+        perm, t_cons, j0 = self._construct(g, spec)
         stats = None
         t1 = time.perf_counter()
         if spec.neighborhood is not None:
@@ -295,7 +359,9 @@ class Mapper:
             pairs = self._pairs(g, spec)
             kw = {} if spec.max_sweeps is None else \
                 {"max_sweeps": spec.max_sweeps}
-            if spec.parallel_sweeps:
+            if spec.engine == "device":
+                stats = self._engine(spec).refine(g, perm, pairs, j0=j0)
+            elif spec.parallel_sweeps:
                 stats = parallel_sweep_search(g, self.h, perm, pairs,
                                               seed=spec.seed, **kw)
             else:
@@ -303,18 +369,7 @@ class Mapper:
                                        shuffle=nb.shuffle, seed=spec.seed,
                                        **kw)
         t_search = time.perf_counter() - t1
-        if stats is None:
-            jf = j0
-        elif spec.backend == "numpy":
-            jf = stats.final_objective   # incremental f64, legacy-identical
-        else:
-            # search drivers track the objective in host float64; recompute
-            # through the session backend so j0 and jf are comparable
-            jf = self.objective(g, perm, spec)
-        return MappingResult(perm=perm, initial_objective=j0,
-                             final_objective=jf,
-                             construction_seconds=t_cons,
-                             search_seconds=t_search, search_stats=stats)
+        return self._finish(g, perm, j0, t_cons, t_search, stats, spec)
 
     # --------------------------------------------------------------- serve
     def serve(self, requests: "queue.Queue | None" = None,

@@ -17,7 +17,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from .graph import CommGraph
+from .graph import CommGraph, csr_expand
 from .hierarchy import Hierarchy   # noqa: F401  (re-exported type hint)
 
 
@@ -73,14 +73,12 @@ def batched_swap_gains(g: CommGraph, h, perm: np.ndarray,
     pairs = np.asarray(pairs, dtype=np.int64)
     if len(pairs) == 0:
         return np.zeros(0)
-    deg = np.diff(g.xadj)
     us, vs = pairs[:, 0], pairs[:, 1]
 
     def side(a_arr, b_arr):
-        # flattened neighbor expansion for all a in a_arr
-        cnt = deg[a_arr]
-        idx = np.concatenate([np.arange(g.xadj[a], g.xadj[a + 1])
-                              for a in a_arr]) if cnt.sum() else np.zeros(0, np.int64)
+        # flattened neighbor expansion for all a in a_arr — one
+        # repeat/offset gather, no per-pair Python loop on this hot path
+        idx, _, cnt = csr_expand(g.xadj, a_arr)
         nb = g.adjncy[idx]
         w = g.adjwgt[idx]
         rep_a = np.repeat(a_arr, cnt)

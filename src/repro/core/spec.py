@@ -78,10 +78,15 @@ class MappingSpec:
 
     ``neighborhood=None`` skips local search (construction only).
     ``parallel_sweeps`` selects the TPU-adapted batched sweep over the
-    paper's sequential search.  ``backend`` selects how standalone objective
-    evaluations are computed: ``"numpy"`` (host, float64 — bit-identical to
-    the legacy ``map_processes`` path) or ``"pallas"`` (the Pallas edge-list
-    kernel, compiled once per session and cached by the :class:`Mapper`).
+    paper's sequential search.  ``engine`` selects where the refinement
+    loop runs: ``"host"`` (the reference numpy drivers) or ``"device"``
+    (the jitted :mod:`repro.engine` sweep loop — graph, perm, pairs, and
+    objective stay in device arrays until convergence; implies the
+    batched-sweep semantics, so ``parallel_sweeps`` is moot with it).
+    ``backend`` selects how standalone objective evaluations are computed:
+    ``"numpy"`` (host, float64 — bit-identical to the legacy
+    ``map_processes`` path) or ``"pallas"`` (the Pallas edge-list kernel,
+    compiled once per session and cached by the :class:`Mapper`).
     ``max_sweeps=None`` keeps each search driver's own default budget.
     """
 
@@ -90,6 +95,7 @@ class MappingSpec:
     neighborhood_dist: int = 10
     preconfiguration: str = "eco"
     parallel_sweeps: bool = False
+    engine: str = "host"
     backend: str = "numpy"
     seed: int = 0
     max_sweeps: int | None = None
@@ -118,6 +124,9 @@ class MappingSpec:
         if self.backend not in ("numpy", "pallas"):
             raise ValueError(f"unknown backend {self.backend!r}; "
                              f"choose from ['numpy', 'pallas']")
+        if self.engine not in ("host", "device"):
+            raise ValueError(f"unknown engine {self.engine!r}; "
+                             f"choose from ['host', 'device']")
         if self.neighborhood_dist < 1:
             raise ValueError("neighborhood_dist must be >= 1")
         if self.max_pairs < 1:
@@ -159,6 +168,7 @@ class MappingSpec:
         ("communication_neighborhood_dist", "neighborhood_dist"),
         ("preconfiguration_mapping", "preconfiguration"),
         ("parallel_sweeps", "parallel_sweeps"),
+        ("engine", "engine"),
         ("backend", "backend"),
         ("seed", "seed"),
     )

@@ -1,0 +1,64 @@
+"""Device-resident refinement engine: one jitted sweep loop.
+
+The guide's central speedup is the cheap incremental gain during
+pair-exchange local search (§2.1).  The host drivers in
+:mod:`repro.core.local_search` realize it as Python loops — every
+candidate gain, every verification, every swap syncs through the host.
+This package moves the *whole sweep loop* onto the device: graph,
+permutation, candidate pairs, gains, conflict resolution, and the
+objective all live in device arrays inside a single ``lax.while_loop``,
+and nothing returns to the host until the search has converged (or hit
+its sweep budget).  Following the sparse-gain formulation of Schulz &
+Träff (arXiv:1702.04164) and the delta-table style of Paul's robust tabu
+search for sparse QAP (arXiv:1009.4880), one sweep is:
+
+  1. **Gains** — the sparse O(deg) gain of every candidate pair at once,
+     via :mod:`repro.kernels.pair_gain` over the :class:`DeviceGraph`'s
+     padded ELL neighbor rows, using the machine topology's
+     ``kernel_params()`` distance form (in-register tree/torus closed
+     forms, or gathers against an explicit D).
+  2. **Conflict resolution** — simultaneous swaps may share endpoints, so
+     a greedy *maximal* matching selects, by gain priority, a set of
+     positive-gain pairs in which each process appears at most once:
+     rounds of locally-dominant pairs (highest gain among all eligible
+     candidates touching either endpoint, ties broken toward the lowest
+     pair index) with the matched vertices masked out between rounds,
+     until no eligible pair remains — the parallel equivalent of popping
+     a gain-ordered priority queue while skipping used vertices, realized
+     as scatter-max/scatter-min over the endpoint arrays inside a nested
+     ``while_loop``.  The globally best pair is always matched, so
+     progress is guaranteed.
+  3. **Apply + objective update** — the matching's swaps are applied with
+     one dual scatter, and the objective of the tentative permutation is
+     recomputed on device from the edge arrays (O(m), the same order as
+     the gain pass).  Disjoint swaps still *interact* (their processes
+     may communicate or share PE-adjacency), so the batch is accepted
+     only if the recomputed objective beats the best *single* swap;
+     otherwise the sweep falls back to applying just that best pair,
+     whose gain is exact in isolation, and updates the objective
+     incrementally (J ← J − gain).  Every sweep therefore drops the
+     carried objective by more than max(eps, best-gain − eps) — the
+     engine is monotone *by construction*, never does worse than
+     steepest descent per sweep, and terminates (objective bounded
+     below).  On the mesh-collective benchmark this lands 12–22% *below*
+     the host greedy driver's final objectives (BENCH_engine.json).
+
+The host drivers remain the semantic reference: the engine reaches a
+local optimum of exactly the same candidate neighborhood (no pair with
+gain > eps remains), which the parity tests check against
+``parallel_sweep_search`` on every topology backend.
+
+Batching: the whole sweep fn is shape-polymorphic and ``vmap``-able.
+``Mapper.map_many`` pads same-shape graphs to common (K, E, P) maxima —
+all three paddings are inert by construction (zero-weight neighbor slots,
+zero-weight edges, u == v pairs) — and runs the batch through one
+vmapped engine call instead of a Python loop.
+
+Select it per request with ``MappingSpec(engine="device")`` or
+``viem --engine=device``; ``engine="host"`` (the default) keeps the
+reference numpy drivers.
+"""
+
+from .sweep import EngineResult, RefinementEngine, refine
+
+__all__ = ["EngineResult", "RefinementEngine", "refine"]

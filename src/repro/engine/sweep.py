@@ -1,0 +1,313 @@
+"""The jitted sweep loop and its session wrapper (see package docstring).
+
+``_make_refine`` builds the pure device function — one ``lax.while_loop``
+from initial permutation to converged permutation — for one distance form;
+:class:`RefinementEngine` wraps it with host glue: DeviceGraph/pair
+conversion (cached per graph structure), jit/vmap executables (cached per
+shape by jax), eps selection, and :class:`SearchStats` reporting against
+host float64 objectives.
+"""
+
+from __future__ import annotations
+
+from collections import OrderedDict
+from dataclasses import dataclass
+
+import numpy as np
+
+from ..core.graph import CommGraph, DeviceGraph, device_pairs
+from ..core.local_search import SearchStats
+from ..core.objective import qap_objective
+
+# Gain/acceptance threshold relative to |J0|: must sit above the f32
+# noise of the device objective (~1e-7 · J0 for the edge-sum) while not
+# swallowing genuine gains — 1e-6 converges to the same optima as exact
+# thresholds on every benchmarked workload (see BENCH_engine.json).
+_EPS_REL = 1e-6
+
+
+def _make_refine(kind: str, params: tuple, max_sweeps: int,
+                 use_pallas: bool = False, interpret: bool = False):
+    """The device sweep fn for one distance form.
+
+    Signature: ``(nbr, wgt, eu, ev, ew, us, vs, perm0, D, eps) ->
+    (perm, trace, sweeps, swaps)`` — all jnp, no host syncs inside; the
+    trace is the carried objective after each sweep (NaN past
+    convergence).  Monotone by construction: every sweep either applies a
+    greedy maximal matching verified (against the recomputed device
+    objective) to beat the best single swap, or falls back to that best
+    pair with its exact incremental gain.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from ..kernels import pair_gain as pg
+
+    def gains_of(nbr, wgt, perm, us, vs, D):
+        if use_pallas:
+            return pg.pair_gains_pallas(kind, params, nbr, wgt, perm,
+                                        us, vs, D, interpret=interpret)
+        return pg.pair_gains(kind, params, nbr, wgt, perm, us, vs, D)
+
+    def refine_fn(nbr, wgt, eu, ev, ew, us, vs, perm0, D, eps):
+        n = perm0.shape[0]
+        p = us.shape[0]
+        idx = jnp.arange(p, dtype=jnp.int32)
+        oob = jnp.int32(n)                      # scatter-drop index
+
+        def objective(perm):
+            return pg.edge_objective(kind, params, eu, ev, ew, perm, D)
+
+        j0 = objective(perm0)
+        trace0 = jnp.full((max_sweeps + 1,), jnp.nan,
+                          jnp.float32).at[0].set(j0)
+
+        def cond(state):
+            perm, j, trace, sweeps, swaps, done = state
+            return (~done) & (sweeps < max_sweeps)
+
+        def body(state):
+            perm, j, trace, sweeps, swaps, done = state
+            g = gains_of(nbr, wgt, perm, us, vs, D)
+            best = jnp.argmax(g)                # first max → lowest index
+            gbest = g[best]
+            any_pos = gbest > eps
+
+            # ---- greedy maximal matching by gain priority: rounds of
+            # locally-dominant positive pairs (highest gain at both
+            # endpoints, ties → lowest index) until no eligible pair is
+            # left — the parallel equivalent of popping a gain-ordered
+            # priority queue while skipping used vertices
+            pos = g > eps
+
+            def match_round(mstate):
+                sel, used = mstate
+                elig = pos & ~used[us] & ~used[vs]
+                ge = jnp.where(elig, g, -jnp.inf)
+                vmax = jnp.full((n,), -jnp.inf, jnp.float32)
+                vmax = vmax.at[us].max(ge).at[vs].max(ge)
+                cand = elig & (ge >= vmax[us]) & (ge >= vmax[vs])
+                vmin = jnp.full((n,), p, jnp.int32)
+                masked_idx = jnp.where(cand, idx, p)
+                vmin = vmin.at[us].min(masked_idx).at[vs].min(masked_idx)
+                new = cand & (vmin[us] == idx) & (vmin[vs] == idx)
+                used = used.at[jnp.where(new, us, oob)].set(
+                    True, mode="drop")
+                used = used.at[jnp.where(new, vs, oob)].set(
+                    True, mode="drop")
+                return sel | new, used
+
+            def match_cond(mstate):
+                sel, used = mstate
+                return jnp.any(pos & ~used[us] & ~used[vs] & ~sel)
+
+            sel, _ = jax.lax.while_loop(
+                match_cond, match_round,
+                (jnp.zeros((p,), jnp.bool_), jnp.zeros((n,), jnp.bool_)))
+
+            # ---- apply the matching (each vertex in ≤ 1 selected pair)
+            pu, pv = perm[us], perm[vs]
+            perm_m = perm.at[jnp.where(sel, us, oob)].set(pv, mode="drop")
+            perm_m = perm_m.at[jnp.where(sel, vs, oob)].set(pu, mode="drop")
+            j_m = objective(perm_m)             # device O(m) — swaps of a
+            take = any_pos & (j_m < j - gbest)  # matching interact, verify
+
+            # ---- fallback: the single best pair, exact incremental gain
+            ub, vb = us[best], vs[best]
+            perm_f = perm.at[ub].set(perm[vb]).at[vb].set(perm[ub])
+            fall = any_pos & ~take
+
+            perm_n = jnp.where(take, perm_m, jnp.where(fall, perm_f, perm))
+            j_n = jnp.where(take, j_m, jnp.where(fall, j - gbest, j))
+            swaps_n = swaps + jnp.where(
+                take, jnp.sum(sel, dtype=jnp.int32),
+                jnp.where(fall, jnp.int32(1), jnp.int32(0)))
+            sweeps_n = jnp.where(any_pos, sweeps + 1, sweeps)
+            trace_n = trace.at[sweeps_n].set(j_n)
+            return perm_n, j_n, trace_n, sweeps_n, swaps_n, ~any_pos
+
+        state = (perm0, j0, trace0, jnp.int32(0), jnp.int32(0),
+                 jnp.bool_(False))
+        perm, j, trace, sweeps, swaps, _ = jax.lax.while_loop(
+            cond, body, state)
+        return perm, trace, sweeps, swaps
+
+    return refine_fn
+
+
+@dataclass
+class EngineResult:
+    """One device refinement: the final permutation plus host-facing
+    stats (objectives in host float64; the trace is the device f32
+    carry, one entry per applied sweep)."""
+    perm: np.ndarray
+    stats: SearchStats
+    sweeps: int
+
+
+class RefinementEngine:
+    """Compiled sweep-loop executables for one machine topology.
+
+    One instance per (``kernel_params()``, ``max_sweeps``) — the Mapper
+    keys its engine cache exactly so.  jax re-specializes the jitted fn
+    per array shape; :class:`DeviceGraph`/pair padding buckets shapes so
+    same-shape graphs share one executable.  ``use_pallas`` routes the
+    gain reduction through the hand-tiled Pallas kernel (default: only on
+    real TPU backends; the fused-jnp path is best everywhere else).
+    """
+
+    def __init__(self, topology, max_sweeps: int = 64,
+                 eps_rel: float = _EPS_REL, use_pallas: bool | None = None,
+                 interpret: bool | None = None):
+        import jax
+        import jax.numpy as jnp
+        kp = topology.kernel_params()
+        self.topology = topology
+        self.kind = kp[0]
+        self.max_sweeps = int(max_sweeps)
+        self.eps_rel = float(eps_rel)
+        on_tpu = jax.default_backend() == "tpu"
+        self.use_pallas = on_tpu if use_pallas is None else bool(use_pallas)
+        interpret = (not on_tpu) if interpret is None else bool(interpret)
+        if self.kind == "matrix":
+            params = ()
+            self._D = jnp.asarray(topology.matrix(), jnp.float32)
+        else:
+            params = kp[1:]
+            self._D = jnp.zeros((1, 1), jnp.float32)    # ignored dummy
+        fn = _make_refine(self.kind, params, self.max_sweeps,
+                          use_pallas=self.use_pallas, interpret=interpret)
+        self._refine = jax.jit(fn)
+        self._vrefine = jax.jit(jax.vmap(
+            fn, in_axes=(0, 0, 0, 0, 0, 0, 0, 0, None, 0)))
+        # device uploads keyed by full array content (LRU): graph ELL/edge
+        # arrays and candidate-pair arrays — long-lived serve() sessions
+        # re-map the same structures, and the pair arrays alone can reach
+        # ~32 MB (max_pairs entries), so neither re-transfers per request
+        self._dg_cache: "OrderedDict[tuple, DeviceGraph]" = OrderedDict()
+        self._pair_cache: "OrderedDict[tuple, tuple]" = OrderedDict()
+
+    # ------------------------------------------------------------- host glue
+    @staticmethod
+    def _lru_get(cache: OrderedDict, key: tuple, build, size: int = 16):
+        val = cache.get(key)
+        if val is None:
+            val = build()
+            cache[key] = val
+            if len(cache) > size:
+                cache.popitem(last=False)
+        else:
+            cache.move_to_end(key)
+        return val
+
+    def _device_graph(self, g: CommGraph) -> DeviceGraph:
+        key = (g.n, hash(g.xadj.tobytes()), hash(g.adjncy.tobytes()),
+               hash(np.asarray(g.adjwgt).tobytes()))
+        return self._lru_get(self._dg_cache, key,
+                             lambda: DeviceGraph.from_comm(g))
+
+    def _device_pairs(self, pairs: np.ndarray, pad_to: int = 128) -> tuple:
+        pairs = np.asarray(pairs)
+        key = (pad_to, pairs.shape[0], hash(pairs.tobytes()))
+        return self._lru_get(self._pair_cache, key,
+                             lambda: device_pairs(pairs, pad_to=pad_to))
+
+    def _eps(self, j0: float) -> float:
+        return self.eps_rel * max(1.0, abs(j0))
+
+    def _stats(self, g: CommGraph, perm: np.ndarray, j0: float,
+               trace: np.ndarray, sweeps: int, swaps: int,
+               n_pairs: int) -> SearchStats:
+        stats = SearchStats()
+        stats.initial_objective = j0
+        stats.final_objective = qap_objective(g, self.topology, perm)
+        stats.swaps = int(swaps)
+        # gain passes actually run: one per applied sweep, plus the final
+        # pass that found no positive gain when the loop converged before
+        # the budget — same accounting as parallel_sweep_search
+        passes = int(sweeps) + (1 if int(sweeps) < self.max_sweeps else 0)
+        stats.evaluated = passes * n_pairs
+        stats.objective_trace = [float(x) for x in trace[:int(sweeps) + 1]]
+        return stats
+
+    # ------------------------------------------------------------------ API
+    def refine(self, g: CommGraph, perm: np.ndarray, pairs: np.ndarray,
+               j0: float | None = None) -> SearchStats:
+        """Refine ``perm`` in place over the candidate ``pairs`` — the
+        device counterpart of ``parallel_sweep_search`` (one device
+        dispatch, no host syncs until convergence).  ``j0`` is the
+        caller's already-computed objective of ``perm`` (used for eps
+        scaling and the reported initial objective); omitted, it is
+        recomputed on host."""
+        import jax.numpy as jnp
+        if j0 is None:
+            j0 = qap_objective(g, self.topology, perm)
+        if len(pairs) == 0:
+            stats = SearchStats()
+            stats.initial_objective = stats.final_objective = j0
+            stats.objective_trace = [j0]
+            return stats
+        dg = self._device_graph(g)
+        us, vs = self._device_pairs(pairs)
+        out_perm, trace, sweeps, swaps = self._refine(
+            dg.nbr, dg.wgt, dg.eu, dg.ev, dg.ew, us, vs,
+            jnp.asarray(perm, jnp.int32), self._D,
+            jnp.float32(self._eps(j0)))
+        perm[:] = np.asarray(out_perm, dtype=perm.dtype)
+        return self._stats(g, perm, j0, np.asarray(trace), int(sweeps),
+                           int(swaps), len(pairs))
+
+    def refine_batch(self, graphs, perms, pairs_list,
+                     j0s=None) -> list[SearchStats]:
+        """One vmapped device call over a batch of same-shape graphs.
+
+        Per-graph arrays are padded to the batch's common (K, E, P)
+        maxima — inert by the DeviceGraph/pair padding invariants — so
+        each result matches the corresponding single :meth:`refine`.
+        ``j0s`` are the callers' already-computed initial objectives
+        (recomputed on host when omitted).
+        """
+        import jax.numpy as jnp
+        graphs = list(graphs)
+        if not graphs:
+            return []
+        if j0s is None:
+            j0s = [qap_objective(g, self.topology, p)
+                   for g, p in zip(graphs, perms)]
+        dgs = [self._device_graph(g) for g in graphs]
+        k_max = max(dg.max_deg for dg in dgs)
+        e_max = max(dg.eu.shape[0] for dg in dgs)
+        p_max = max(max((len(p) for p in pairs_list), default=1), 1)
+        p_max = -(-p_max // 128) * 128          # same bucketing as refine()
+        dgs = [dg.pad_to(k_max, e_max) for dg in dgs]
+        dev_pairs = [self._device_pairs(p, pad_to=p_max)
+                     for p in pairs_list]
+        stack = lambda xs: jnp.stack(xs)                      # noqa: E731
+        out_perm, trace, sweeps, swaps = self._vrefine(
+            stack([dg.nbr for dg in dgs]), stack([dg.wgt for dg in dgs]),
+            stack([dg.eu for dg in dgs]), stack([dg.ev for dg in dgs]),
+            stack([dg.ew for dg in dgs]),
+            stack([u for u, _ in dev_pairs]),
+            stack([v for _, v in dev_pairs]),
+            stack([jnp.asarray(p, jnp.int32) for p in perms]),
+            self._D,
+            jnp.asarray([self._eps(j) for j in j0s], jnp.float32))
+        out = []
+        for i, (g, perm) in enumerate(zip(graphs, perms)):
+            perm[:] = np.asarray(out_perm[i], dtype=perm.dtype)
+            out.append(self._stats(g, perm, j0s[i], np.asarray(trace[i]),
+                                   int(sweeps[i]), int(swaps[i]),
+                                   len(pairs_list[i])))
+        return out
+
+
+def refine(machine, g: CommGraph, perm: np.ndarray, pairs: np.ndarray,
+           max_sweeps: int = 64, **kw) -> EngineResult:
+    """One-shot convenience: build a :class:`RefinementEngine` over
+    ``machine`` (Hierarchy or any Topology) and refine ``perm`` in place.
+    Sessions should hold a ``Mapper`` (which caches engines) instead."""
+    from ..topology.base import as_topology
+    eng = RefinementEngine(as_topology(machine), max_sweeps=max_sweeps, **kw)
+    stats = eng.refine(g, perm, pairs)
+    return EngineResult(perm=perm, stats=stats,
+                        sweeps=max(len(stats.objective_trace) - 1, 0))

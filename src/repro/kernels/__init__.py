@@ -1,18 +1,22 @@
 """Pallas TPU kernels for the perf-critical hot spots (DESIGN §3):
 
   swap_gain        — full QAP pair-exchange gain matrix (MXU matmul form)
+  pair_gain        — sparse per-pair swap gains over padded ELL neighbor
+                     rows (the refinement engine's gain pass)
   qap_objective    — sparse edge-sum objective w/ in-register hierarchy oracle
   flash_attention  — fused causal/SWA attention forward (§Perf A3)
 
 Each kernel ships with a jit'd wrapper (ops.py) and a pure-jnp oracle
 (ref.py); CPU validation runs interpret=True (tests/test_kernels.py,
-tests/test_flash_kernel.py).
+tests/test_flash_kernel.py, tests/test_engine.py).
 """
 
 from . import ops, ref
 from .flash_attention import flash_attention_kernel
+from .pair_gain import edge_objective, pair_gains, pair_gains_pallas
 from .qap_objective import qap_objective_edges
 from .swap_gain import swap_gain_matrix
 
 __all__ = ["ops", "ref", "flash_attention_kernel", "qap_objective_edges",
-           "swap_gain_matrix"]
+           "swap_gain_matrix", "pair_gains", "pair_gains_pallas",
+           "edge_objective"]

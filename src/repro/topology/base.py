@@ -11,9 +11,12 @@ hooks the rest of the framework needs:
                        distance construction; small-n only).
   kernel_params()    — hashable descriptor of the device-side distance
                        representation.  ("tree", strides, dists) and
-                       ("torus", dims, weights) select closed-form Pallas
-                       oracle kernels; ("matrix", fingerprint) selects the
-                       gather path.  The Mapper keys its kernel cache on it.
+                       ("torus", dims, weights) select closed-form device
+                       oracles computed in-register; ("matrix",
+                       fingerprint) selects the gather path.  Both the
+                       Pallas objective/gain kernels and the refinement
+                       engine (``repro.engine``) consume it, and the
+                       Mapper keys its kernel and engine caches on it.
   split(pe_ids)      — the machine's natural recursive decomposition, used
                        by the top-down construction in place of hierarchy
                        factors.  Returns equal-size(±1) sub-groups of PE
@@ -70,8 +73,9 @@ class Topology(abc.ABC):
 
     def kernel_params(self) -> tuple:
         """Hashable device-side distance representation.  The default is
-        the explicit-matrix path: the Pallas objective gathers from the
-        materialized D (fingerprint keys the Mapper's kernel cache)."""
+        the explicit-matrix path: the Pallas objective and the refinement
+        engine gather from the materialized D (fingerprint keys the
+        Mapper's kernel and engine caches)."""
         return ("matrix", self._fingerprint())
 
     def split(self, pe_ids: np.ndarray) -> "list[np.ndarray] | None":
