@@ -1,0 +1,128 @@
+"""Multilevel benchmark — flat device engine vs the coarsen → map →
+uncoarsen V-cycle on the mesh-collective workload.
+
+Same refinement problem per cell (random construction seed, same
+candidate neighborhood, same device engine and sweep budget) run flat
+(PR 3 single-level pipeline) and through the multilevel V-cycle
+(:mod:`repro.multilevel`, eco knobs), at fleet sizes
+n ∈ {256, 1024, 4096} across tree / torus / matrix machine models.
+Writes ``BENCH_multilevel.json``: objective and wall-time per cell plus
+the headline per-(n, topology) comparison — the acceptance bar is
+multilevel objective ≤ flat at n ∈ {1024, 4096} on every topology, at
+comparable wall-time (the coarse levels must pay for themselves).
+
+Wall-times exclude compilation (one warm-up map per mapper) but include
+the V-cycle's coarsening, per-level pair generation, and coarsest-level
+construction: graph-side caches are cleared before the timed run so the
+multilevel pipeline pays its full per-graph cost honestly.
+
+    python -m benchmarks.bench_multilevel [--smoke] [--out ...]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+from repro.core import Mapper, MappingSpec, MultilevelSpec, tpu_v5e_fleet
+from repro.topology import MatrixTopology, tpu_v5e_torus
+
+from .bench_topology import mesh_workload
+
+MAX_SWEEPS = 64
+PAIR_DIST = 2
+
+
+def _machines(pods: int) -> dict:
+    torus = tpu_v5e_torus(pods=pods)
+    return {
+        "tree": tpu_v5e_fleet(pods=pods),
+        "torus": torus,
+        # explicit-matrix view of the torus: the general sparse-QAP path
+        "matrix": MatrixTopology(matrix=torus.distance_matrix()),
+    }
+
+
+def _timed_map(mapper: Mapper, g, spec: MappingSpec):
+    """One warmed, cache-honest map: compile on a warm-up run, then
+    clear the graph-side caches so the timed run pays pyramid build,
+    pair generation, and construction for real."""
+    mapper.map(g, spec=spec)                    # warm-up: compiles
+    mapper._pyramids._data.clear()
+    mapper._pair_cache._data.clear()
+    for eng in mapper._engines._data.values():
+        eng._dg_cache.clear()
+        eng._pair_cache.clear()
+    t0 = time.perf_counter()
+    res = mapper.map(g, spec=spec)
+    return res, time.perf_counter() - t0
+
+
+def run(report, smoke: bool = False, out: str = "BENCH_multilevel.json"):
+    pod_counts = [1] if smoke else [1, 4, 16]   # n = 256 · pods
+    flat = MappingSpec(construction="random", neighborhood="communication",
+                       neighborhood_dist=PAIR_DIST, preconfiguration="eco",
+                       engine="device", seed=0, max_sweeps=MAX_SWEEPS)
+    ml = flat.replace(multilevel=MultilevelSpec())      # eco: (4, 64)
+    cells, headline = [], []
+    for pods in pod_counts:
+        g = mesh_workload(pods)
+        for tname, machine in _machines(pods).items():
+            mapper = Mapper(machine, flat)
+            out_pair = {}
+            for mode, spec in (("flat", flat), ("multilevel", ml)):
+                res, dt = _timed_map(mapper, g, spec)
+                out_pair[mode] = (res, dt)
+                cells.append({
+                    "n": g.n, "topology": tname, "pipeline": mode,
+                    "seconds": dt,
+                    "initial_objective": res.initial_objective,
+                    "final_objective": res.final_objective,
+                })
+                report(f"multilevel/{tname}/n{g.n}/{mode}", dt * 1e6,
+                       f"J={res.final_objective:.4e}")
+            rf, tf = out_pair["flat"]
+            rm, tm = out_pair["multilevel"]
+            tol = 1e-5 * max(1.0, abs(rf.final_objective))
+            cmp = {
+                "n": g.n, "topology": tname,
+                "flat_J": rf.final_objective,
+                "multilevel_J": rm.final_objective,
+                "improvement": 1.0 - rm.final_objective /
+                    max(rf.final_objective, 1e-12),
+                "flat_seconds": tf, "multilevel_seconds": tm,
+                "ml_wall_over_flat": tm / max(tf, 1e-12),
+                "objective_leq_flat":
+                    rm.final_objective <= rf.final_objective + tol,
+            }
+            headline.append(cmp)
+            report(f"multilevel/{tname}/n{g.n}/headline", 0,
+                   f"improvement={cmp['improvement']:.1%};"
+                   f"wall_x{cmp['ml_wall_over_flat']:.2f};"
+                   f"leq={cmp['objective_leq_flat']}")
+
+    payload = {"mode": "smoke" if smoke else "full",
+               "workload": "mesh-collectives",
+               "max_sweeps": MAX_SWEEPS, "pair_dist": PAIR_DIST,
+               "multilevel": {"preconfiguration": "eco",
+                              "levels": 4, "coarsen_min": 64},
+               "cells": cells, "headline": headline}
+    with open(out, "w") as fh:
+        json.dump(payload, fh, indent=2)
+    report("multilevel/json_written", 0, out)
+    return payload
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="single-pod fleet only (CI)")
+    ap.add_argument("--out", default="BENCH_multilevel.json")
+    args = ap.parse_args(argv)
+    run(lambda n, us, d: print(f"{n},{us:.0f},{d}", flush=True),
+        smoke=args.smoke, out=args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -8,7 +8,8 @@ import sys
 
 def main() -> None:
     from . import (bench_construction, bench_engine, bench_kernels,
-                   bench_local_search, bench_mesh_mapping, bench_topology)
+                   bench_local_search, bench_mesh_mapping,
+                   bench_multilevel, bench_topology)
 
     def report(name: str, us: float, derived: str = ""):
         print(f"{name},{us:.0f},{derived}", flush=True)
@@ -23,6 +24,8 @@ def main() -> None:
     bench_topology.run(report, smoke=smoke)
     # refinement-engine axis: writes BENCH_engine.json (host vs device)
     bench_engine.run(report, smoke=smoke)
+    # multilevel axis: writes BENCH_multilevel.json (flat vs V-cycle)
+    bench_multilevel.run(report, smoke=smoke)
 
 
 if __name__ == "__main__":

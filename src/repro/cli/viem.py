@@ -12,6 +12,9 @@ Usage:
         [--local_search_neighborhood=communication]
         [--communication_neighborhood_dist=10]
         [--engine=host|device]          # host drivers vs jitted device sweep
+        [--multilevel] [--multilevel_levels=4] [--multilevel_coarsen_min=64]
+        [--preconfiguration={strong,eco,fast}]  # one flag: partition +
+                                        # engine sweeps + multilevel knobs
         [--config=spec.json]            # load a MappingSpec (flags override)
         [--output_filename=permutation]
     python -m repro.cli.viem --list-algorithms
@@ -67,8 +70,12 @@ def main(argv=None):
                     help="path to a MappingSpec JSON; explicit flags "
                          "override values from the file")
     ap.add_argument("--seed", type=int, default=None)
-    ap.add_argument("--preconfiguration_mapping", default=None,
-                    choices=["strong", "eco", "fast"])
+    ap.add_argument("--preconfiguration_mapping", "--preconfiguration",
+                    default=None, choices=["strong", "eco", "fast"],
+                    help="one coherent quality/speed knob: partitioner "
+                         "effort (seed trials, FM passes), device-engine "
+                         "sweep budget (32/64/128), and — with "
+                         "--multilevel — V-cycle depth (2/4/6 levels)")
     ap.add_argument("--construction_algorithm", default=None,
                     choices=list_constructions())
     ap.add_argument("--distance_construction_algorithm", default="hierarchy",
@@ -84,6 +91,17 @@ def main(argv=None):
                     help="where the refinement loop runs: the reference "
                          "host drivers, or the jitted device-resident "
                          "sweep engine (repro.engine)")
+    ap.add_argument("--multilevel",
+                    action=argparse.BooleanOptionalAction, default=None,
+                    help="coarsen → map → uncoarsen V-cycle over the "
+                         "device engine (repro.multilevel); knob "
+                         "defaults follow --preconfiguration")
+    ap.add_argument("--multilevel_levels", type=int, default=None,
+                    help="max V-cycle levels incl. the finest (1 = flat, "
+                         "bit-identical to the plain device engine)")
+    ap.add_argument("--multilevel_coarsen_min", type=int, default=None,
+                    help="stop contracting below this many coarse "
+                         "vertices")
     ap.add_argument("--output_filename", default="permutation")
     args = ap.parse_args(argv)
 

@@ -44,7 +44,7 @@ from .local_search import list_neighborhoods, register_neighborhood
 from .mapping import Mapper, MapperService, MappingResult, map_processes
 from .objective import dense_gain_matrix, qap_objective, \
     qap_objective_dense, swap_gain
-from .spec import MappingSpec, TopologySpec
+from .spec import MappingSpec, MultilevelSpec, TopologySpec
 
 __all__ = [
     "CommGraph", "DeviceGraph", "GraphFormatError", "device_pairs",
@@ -52,7 +52,7 @@ __all__ = [
     "random_geometric", "read_metis", "validate", "write_metis",
     "DistanceOracle", "Hierarchy", "supermuc_like", "tpu_v5e_fleet",
     "Mapper", "MapperService", "MappingResult", "MappingSpec",
-    "TopologySpec", "map_processes",
+    "MultilevelSpec", "TopologySpec", "map_processes",
     "list_constructions", "register_construction",
     "list_neighborhoods", "register_neighborhood",
     "dense_gain_matrix", "qap_objective", "qap_objective_dense", "swap_gain",

@@ -23,24 +23,16 @@ from typing import Callable
 
 import numpy as np
 
-from .graph import CommGraph, from_edges
+from .graph import CommGraph, contract
 from .hierarchy import Hierarchy
 from .partition import PartitionConfig, partition
 
 
 def quotient(g: CommGraph, labels: np.ndarray, k: int) -> CommGraph:
     """Cluster quotient graph: vertices = blocks, edge weights = summed
-    inter-block communication (the guide's `generate_model` semantics)."""
-    u, v, w = g.edge_list()
-    cu, cv = labels[u], labels[v]
-    keep = cu != cv
-    cu, cv, w = cu[keep], cv[keep], w[keep]
-    lo, hi = np.minimum(cu, cv), np.maximum(cu, cv)
-    vw = np.bincount(labels, weights=g.vwgt, minlength=k)
-    if len(lo) == 0:
-        return CommGraph(np.zeros(k + 1, np.int64), np.zeros(0, np.int64),
-                         np.zeros(0), vw)
-    return from_edges(k, lo, hi, w, vwgt=vw)
+    inter-block communication (the guide's `generate_model` semantics).
+    A thin alias of the shared :func:`repro.core.graph.contract`."""
+    return contract(g, labels, k)
 
 
 # ---------------------------------------------------------------- registry

@@ -100,6 +100,30 @@ class CommGraph:
         )
 
 
+def contract(g: CommGraph, labels: np.ndarray, k: int) -> CommGraph:
+    """Collapse ``g`` along a cluster labeling: vertices = clusters
+    ``0..k-1``, edge weight = summed inter-cluster communication,
+    intra-cluster edges dropped (no self-loops — the Metis invariant),
+    vertex weights summed per cluster.
+
+    The one edge-collapsing primitive behind the ``generate_model``
+    quotient (:func:`repro.core.construction.quotient`), the
+    partitioner's host coarsening, and the multilevel mapping V-cycle's
+    host-side graph assembly.
+    """
+    labels = np.asarray(labels, dtype=np.int64)
+    u, v, w = g.edge_list()
+    cu, cv = labels[u], labels[v]
+    keep = cu != cv
+    cu, cv, w = cu[keep], cv[keep], w[keep]
+    lo, hi = np.minimum(cu, cv), np.maximum(cu, cv)
+    vw = np.bincount(labels, weights=g.vwgt, minlength=k)
+    if len(lo) == 0:
+        return CommGraph(np.zeros(k + 1, np.int64), np.zeros(0, np.int64),
+                         np.zeros(0), vw)
+    return from_edges(k, lo, hi, w, vwgt=vw)
+
+
 def csr_expand(xadj: np.ndarray, rows: np.ndarray
                ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
     """Loop-free flat expansion of CSR rows: for each r in ``rows`` (in

@@ -67,6 +67,48 @@ class MappingResult:
         return 1.0 - self.final_objective / self.initial_objective
 
 
+# device-engine sweep budget per preconfiguration when the spec leaves
+# max_sweeps=None — the same flag that tunes the partitioner and the
+# multilevel pyramid (eco keeps the engine's historical default of 64)
+_PRECONF_SWEEPS = {"fast": 32, "eco": 64, "strong": 128}
+
+# default caps for the session caches (override via Mapper(cache_caps=...))
+_DEFAULT_CACHE_CAPS = {"pairs": 16, "engines": 8, "kernels": 32,
+                       "pyramids": 8}
+
+
+class _LRU:
+    """Bounded LRU mapping with visible accounting: ``builds`` counts
+    misses, ``hits`` counts reuses, ``evictions`` counts entries dropped
+    at the cap — all surfaced through ``Mapper.cache_info()`` so
+    long-lived ``serve()`` sessions can assert their memory stays
+    bounded as request shapes vary."""
+
+    def __init__(self, cap: int):
+        self.cap = int(cap)
+        self.builds = 0
+        self.hits = 0
+        self.evictions = 0
+        self._data: OrderedDict = OrderedDict()
+
+    def __len__(self) -> int:
+        return len(self._data)
+
+    def get_or_build(self, key, build):
+        val = self._data.get(key)
+        if val is not None:
+            self._data.move_to_end(key)
+            self.hits += 1
+            return val
+        val = build()
+        self.builds += 1
+        self._data[key] = val
+        while len(self._data) > self.cap:
+            self._data.popitem(last=False)
+            self.evictions += 1
+        return val
+
+
 # ------------------------------------------------------------- kernel cache
 class _KernelCache:
     """Session cache of jitted Pallas entry points, keyed by the static
@@ -74,11 +116,19 @@ class _KernelCache:
     + shapes).  ``compiles`` counts cache misses — the number of distinct
     kernel configurations this session prepared.  Each miss corresponds to
     at most one XLA compile on first call (jax's process-global jit cache
-    dedups across sessions), so it upper-bounds real compiles."""
+    dedups across sessions), so it upper-bounds real compiles.  LRU-
+    bounded: ``evictions`` counts entries dropped at the cap."""
 
-    def __init__(self):
-        self.compiles = 0
-        self._fns: dict[tuple, object] = {}
+    def __init__(self, cap: int = 32):
+        self._fns = _LRU(cap)
+
+    @property
+    def compiles(self) -> int:
+        return self._fns.builds
+
+    @property
+    def evictions(self) -> int:
+        return self._fns.evictions
 
     @staticmethod
     def _interpret() -> bool:
@@ -90,42 +140,37 @@ class _KernelCache:
         distance form: closed-form tree/torus oracles computed in-register,
         or the gather path against the materialized matrix."""
         kp = topology.kernel_params()
-        kind = kp[0]
         key = ("qap_edges", kp, int(n_edges))
-        fn = self._fns.get(key)
-        if fn is not None:
-            return fn
+        return self._fns.get_or_build(
+            key, lambda: self._build_objective_edges(topology, kp))
+
+    def _build_objective_edges(self, topology, kp):
         from ..kernels import qap_objective as qk
+        kind = kp[0]
         interpret = self._interpret()
         if kind == "tree":
             _, strides, dists = kp
-            fn = functools.partial(qk.qap_objective_edges, strides=strides,
-                                   dists=dists, interpret=interpret)
-        elif kind == "torus":
+            return functools.partial(qk.qap_objective_edges,
+                                     strides=strides, dists=dists,
+                                     interpret=interpret)
+        if kind == "torus":
             _, dims, weights = kp
-            fn = functools.partial(qk.qap_objective_edges_torus, dims=dims,
-                                   weights=weights, interpret=interpret)
-        elif kind == "matrix":
+            return functools.partial(qk.qap_objective_edges_torus,
+                                     dims=dims, weights=weights,
+                                     interpret=interpret)
+        if kind == "matrix":
             import jax.numpy as jnp
             D = jnp.asarray(topology.matrix(), jnp.float32)
-            fn = functools.partial(qk.qap_objective_edges_matrix, D=D,
-                                   interpret=interpret)
-        else:
-            raise ValueError(f"unknown kernel_params kind {kind!r}")
-        self._fns[key] = fn
-        self.compiles += 1
-        return fn
+            return functools.partial(qk.qap_objective_edges_matrix, D=D,
+                                     interpret=interpret)
+        raise ValueError(f"unknown kernel_params kind {kind!r}")
 
     def swap_gain_matrix(self, n: int):
-        key = ("swap_gain", int(n))
-        fn = self._fns.get(key)
-        if fn is None:
-            from ..kernels.swap_gain import swap_gain_matrix
-            fn = functools.partial(swap_gain_matrix,
-                                   interpret=self._interpret())
-            self._fns[key] = fn
-            self.compiles += 1
-        return fn
+        from ..kernels.swap_gain import swap_gain_matrix
+        return self._fns.get_or_build(
+            ("swap_gain", int(n)),
+            lambda: functools.partial(swap_gain_matrix,
+                                      interpret=self._interpret()))
 
 
 def _structure_key(g: CommGraph, with_weights: bool = False) -> tuple:
@@ -151,7 +196,8 @@ class Mapper:
     point of a session object over the one-shot :func:`map_processes`.
     """
 
-    def __init__(self, machine, spec: MappingSpec | None = None):
+    def __init__(self, machine, spec: MappingSpec | None = None,
+                 cache_caps: dict | None = None):
         from ..topology.base import as_topology
         self.topology = as_topology(machine)
         # `h` is the machine handle threaded through constructions, search
@@ -160,14 +206,30 @@ class Mapper:
         self.h = self.topology
         self.spec = (spec or MappingSpec()).validate()
         self.oracle, self._oracle_builds = self._claim_oracle()
-        self._kernels = _KernelCache()
-        # device refinement engines, one per (kernel_params, max_sweeps)
-        self._engines: dict = {}
-        # LRU-bounded: candidate-pair arrays can reach max_pairs entries
-        # (~32 MB each), and serve() sessions are long-lived
-        self._pair_cache: "OrderedDict[tuple, np.ndarray]" = OrderedDict()
-        self._pair_cache_size = 16
-        self._pair_hits = 0
+        # every session cache is LRU-bounded (serve() sessions are
+        # long-lived and must not grow without limit as shapes vary);
+        # caps are per-cache configurable, evictions visible in
+        # cache_info()
+        caps = dict(_DEFAULT_CACHE_CAPS)
+        if cache_caps:
+            unknown = sorted(set(cache_caps) - set(caps))
+            if unknown:
+                raise ValueError(f"unknown cache_caps keys {unknown}; "
+                                 f"known: {sorted(caps)}")
+            caps.update(cache_caps)
+        self._kernels = _KernelCache(cap=caps["kernels"])
+        # device refinement engines, one per (kernel_params, max_sweeps) —
+        # the multilevel V-cycle adds one per coarse level
+        self._engines = _LRU(caps["engines"])
+        # candidate-pair arrays can reach max_pairs entries (~32 MB each)
+        self._pair_cache = _LRU(caps["pairs"])
+        # multilevel level pyramids, one per (graph structure+weights,
+        # V-cycle knobs, neighborhood knobs)
+        self._pyramids = _LRU(caps["pyramids"])
+        # machine-side coarse models (graph-independent): level l pairs
+        # the PEs (2b, 2b+1) of level l-1 — grown lazily, shared by every
+        # pyramid over this machine
+        self._ml_machines: list = [self.topology]
         self._requests = 0
 
     @classmethod
@@ -195,29 +257,47 @@ class Mapper:
     # ------------------------------------------------------------- caching
     def cache_info(self) -> dict:
         """Counters for the session's amortized state: how many distance
-        oracles were built and kernels compiled on this session's behalf,
-        plus candidate-pair cache hits and requests served."""
+        oracles were built, kernels compiled, engines constructed, and
+        pyramids coarsened on this session's behalf, plus cache hits,
+        LRU evictions, and requests served."""
         return {
             "oracle_builds": self._oracle_builds,
             "kernel_compiles": self._kernels.compiles,
-            "engine_builds": len(self._engines),
-            "pair_cache_hits": self._pair_hits,
+            "kernel_evictions": self._kernels.evictions,
+            "engine_builds": self._engines.builds,
+            "engine_evictions": self._engines.evictions,
+            "pair_cache_hits": self._pair_cache.hits,
+            "pair_cache_evictions": self._pair_cache.evictions,
+            "pyramid_builds": self._pyramids.builds,
+            "pyramid_hits": self._pyramids.hits,
+            "pyramid_evictions": self._pyramids.evictions,
             "requests": self._requests,
         }
 
-    def _engine(self, spec: MappingSpec):
+    def _sweep_budget(self, spec: MappingSpec) -> int:
+        """Device-engine sweep budget: the spec's explicit ``max_sweeps``,
+        else the preconfiguration's (fast 32, eco 64, strong 128)."""
+        if spec.max_sweeps is not None:
+            return spec.max_sweeps
+        return _PRECONF_SWEEPS.get(spec.preconfiguration, 64)
+
+    def _engine(self, spec: MappingSpec, machine=None):
         """The session's device refinement engine for this spec — built
-        once per (topology kernel form, sweep budget) and reused by every
+        once per (machine kernel form, sweep budget) and reused by every
         subsequent device-engine request (jax re-specializes per shape
-        under the hood, so same-shape graphs share one executable)."""
-        max_sweeps = 64 if spec.max_sweeps is None else spec.max_sweeps
-        key = (self.topology.kernel_params(), max_sweeps)
-        eng = self._engines.get(key)
-        if eng is None:
+        under the hood, so same-shape graphs share one executable).
+        ``machine`` defaults to the session topology; the multilevel
+        V-cycle passes its coarse machines, whose engines land in the
+        same LRU cache."""
+        machine = self.topology if machine is None else machine
+        max_sweeps = self._sweep_budget(spec)
+        key = (machine.kernel_params(), max_sweeps)
+
+        def build():
             from ..engine import RefinementEngine
-            eng = RefinementEngine(self.topology, max_sweeps=max_sweeps)
-            self._engines[key] = eng
-        return eng
+            return RefinementEngine(machine, max_sweeps=max_sweeps)
+
+        return self._engines.get_or_build(key, build)
 
     def _pairs(self, g: CommGraph, spec: MappingSpec) -> np.ndarray:
         nb = resolve_neighborhood(spec.neighborhood)
@@ -226,17 +306,10 @@ class Mapper:
         key = (spec.neighborhood, spec.neighborhood_dist,
                spec.seed if nb.seeded else None,
                spec.max_pairs) + _structure_key(g, nb.weight_dependent)
-        pairs = self._pair_cache.get(key)
-        if pairs is None:
-            pairs = nb.generate(g, dist=spec.neighborhood_dist,
-                                seed=spec.seed, max_pairs=spec.max_pairs)
-            self._pair_cache[key] = pairs
-            if len(self._pair_cache) > self._pair_cache_size:
-                self._pair_cache.popitem(last=False)
-        else:
-            self._pair_cache.move_to_end(key)
-            self._pair_hits += 1
-        return pairs
+        return self._pair_cache.get_or_build(
+            key, lambda: nb.generate(g, dist=spec.neighborhood_dist,
+                                     seed=spec.seed,
+                                     max_pairs=spec.max_pairs))
 
     # ----------------------------------------------------------- objective
     def objective(self, g: CommGraph, perm: np.ndarray,
@@ -293,6 +366,9 @@ class Mapper:
             raise ValueError(f"map_many requires same-shape graphs; got "
                              f"process counts {sorted(ns)}")
         spec = self.spec if spec is None else spec.validate()
+        ml = spec.resolved_multilevel()
+        if ml is not None:
+            return self._map_many_multilevel(graphs, spec, ml)
         if spec.engine == "device" and spec.neighborhood is not None:
             return self._map_many_device(graphs, spec)
         return [self._map_one(g, spec) for g in graphs]
@@ -321,10 +397,7 @@ class Mapper:
         """Shared per-graph prep for the single and batch paths: size
         check, request accounting, timed construction, and the initial
         objective through the spec's backend."""
-        if g.n != self.h.n_pe:
-            raise ValueError(f"graph has {g.n} processes but the machine "
-                             f"has {self.h.n_pe} PEs — they must match "
-                             f"(guide §4.1)")
+        self._check_size(g)
         self._requests += 1
         construct_fn = resolve_construction(spec.construction)
         cfg = PartitionConfig.preconfiguration(spec.preconfiguration)
@@ -350,7 +423,96 @@ class Mapper:
                              construction_seconds=t_cons,
                              search_seconds=t_search, search_stats=stats)
 
+    # ------------------------------------------------------------ multilevel
+    def _check_size(self, g: CommGraph) -> None:
+        if g.n != self.h.n_pe:
+            raise ValueError(f"graph has {g.n} processes but the machine "
+                             f"has {self.h.n_pe} PEs — they must match "
+                             f"(guide §4.1)")
+
+    def _coarse_machines(self, depth: int) -> list:
+        """The machine-side pyramid up to ``depth`` levels, grown lazily
+        and shared by every graph pyramid over this machine."""
+        from ..multilevel.coarsen import coarsen_machine
+        while len(self._ml_machines) < depth:
+            self._ml_machines.append(coarsen_machine(self._ml_machines[-1]))
+        return self._ml_machines[:depth]
+
+    def _pyramid(self, g: CommGraph, spec: MappingSpec,
+                 ml: tuple[int, int]) -> list:
+        """The graph-side level pyramid, LRU-cached per (graph structure
+        *and weights* — the heavy-edge matching reads them, V-cycle
+        knobs, neighborhood knobs)."""
+        from ..multilevel.coarsen import build_pyramid, pyramid_depth
+        levels, cmin = ml
+        machines = self._coarse_machines(pyramid_depth(g.n, levels, cmin))
+        if spec.neighborhood is None:
+            nb = None
+            pair_fn = lambda gg: np.zeros((0, 2), np.int64)  # noqa: E731
+        else:
+            nb = resolve_neighborhood(spec.neighborhood)
+            pair_fn = lambda gg: nb.generate(       # noqa: E731
+                gg, dist=spec.neighborhood_dist, seed=spec.seed,
+                max_pairs=spec.max_pairs)
+        key = (("pyramid", levels, cmin, spec.neighborhood,
+                spec.neighborhood_dist, spec.max_pairs,
+                spec.seed if (nb is not None and nb.seeded) else None)
+               + _structure_key(g, with_weights=True))
+        return self._pyramids.get_or_build(
+            key, lambda: build_pyramid(g, machines, levels, cmin, pair_fn))
+
+    def _map_one_multilevel(self, g: CommGraph, spec: MappingSpec,
+                            ml: tuple[int, int]) -> MappingResult:
+        """The coarsen → map → uncoarsen V-cycle (:mod:`repro.multilevel`):
+        construction runs on the coarsest level, the device engine
+        refines every level on the way down.  The reported initial
+        objective is the projected (pre-refinement) finest-level
+        objective — the multilevel construction's value."""
+        from ..multilevel import vcycle_map
+        self._check_size(g)
+        self._requests += 1
+        pyramid = self._pyramid(g, spec, ml)
+        cfg = PartitionConfig.preconfiguration(spec.preconfiguration)
+        construct_fn = resolve_construction(spec.construction)
+        t0 = time.perf_counter()
+        res = vcycle_map(
+            pyramid, lambda m: self._engine(spec, m), construct_fn, cfg,
+            seed=spec.seed,
+            objective0=lambda gg, pp: self.objective(gg, pp, spec))
+        t_search = time.perf_counter() - t0 - res.construction_seconds
+        return self._finish(g, res.perm, res.initial_objective,
+                            res.construction_seconds, t_search, res.stats,
+                            spec)
+
+    def _map_many_multilevel(self, graphs, spec: MappingSpec,
+                             ml: tuple[int, int]) -> list[MappingResult]:
+        """Batched V-cycles: the forced perfect pairing gives every
+        same-n graph the same level geometry, so each level's refinement
+        runs as ONE vmapped engine call across the whole batch."""
+        from ..multilevel import vcycle_map_batch
+        for g in graphs:
+            self._check_size(g)
+        self._requests += len(graphs)
+        pyramids = [self._pyramid(g, spec, ml) for g in graphs]
+        cfg = PartitionConfig.preconfiguration(spec.preconfiguration)
+        construct_fn = resolve_construction(spec.construction)
+        t0 = time.perf_counter()
+        results = vcycle_map_batch(
+            pyramids, lambda m: self._engine(spec, m), construct_fn, cfg,
+            seed=spec.seed,
+            objective0=lambda gg, pp: self.objective(gg, pp, spec))
+        elapsed = (time.perf_counter() - t0) / len(graphs)
+        return [self._finish(g, r.perm, r.initial_objective,
+                             r.construction_seconds,
+                             elapsed - r.construction_seconds, r.stats,
+                             spec)
+                for g, r in zip(graphs, results)]
+
+    # ------------------------------------------------------------- flat map
     def _map_one(self, g: CommGraph, spec: MappingSpec) -> MappingResult:
+        ml = spec.resolved_multilevel()
+        if ml is not None:
+            return self._map_one_multilevel(g, spec, ml)
         perm, t_cons, j0 = self._construct(g, spec)
         stats = None
         t1 = time.perf_counter()

@@ -28,7 +28,7 @@ from dataclasses import dataclass
 
 import numpy as np
 
-from .graph import CommGraph, from_edges
+from .graph import CommGraph, contract
 
 
 @dataclass(frozen=True)
@@ -86,22 +86,11 @@ def _heavy_edge_matching(g: CommGraph, rng: np.random.Generator) -> np.ndarray:
 
 def _contract(g: CommGraph, match: np.ndarray
               ) -> tuple[CommGraph, np.ndarray]:
-    """Contract matched pairs; returns (coarse graph, fine->coarse map)."""
-    n = g.n
-    rep = np.minimum(np.arange(n), match)       # pair representative
+    """Contract matched pairs; returns (coarse graph, fine->coarse map).
+    Edge collapsing is the shared :func:`repro.core.graph.contract`."""
+    rep = np.minimum(np.arange(g.n), match)     # pair representative
     uniq, cmap = np.unique(rep, return_inverse=True)
-    nc = len(uniq)
-    u, v, w = g.edge_list()
-    cu, cv = cmap[u], cmap[v]
-    keep = cu != cv
-    cu, cv, w = cu[keep], cv[keep], w[keep]
-    lo, hi = np.minimum(cu, cv), np.maximum(cu, cv)
-    vw = np.zeros(nc)
-    np.add.at(vw, cmap, g.vwgt)
-    if len(lo) == 0:
-        return CommGraph(np.zeros(nc + 1, np.int64), np.zeros(0, np.int64),
-                         np.zeros(0), vw), cmap
-    return from_edges(nc, lo, hi, w, vwgt=vw), cmap
+    return contract(g, cmap, len(uniq)), cmap
 
 
 # ------------------------------------------------------ initial bisection

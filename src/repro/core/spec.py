@@ -72,6 +72,61 @@ class TopologySpec:
         return cls(kind=topology.kind, params=topology.spec_params())
 
 
+# --preconfiguration → V-cycle knobs: (levels, coarsen_min).  The same
+# flag that tunes the internal partitioner (seed trials, FM passes) and
+# the device engine's sweep budget also scales the multilevel pyramid —
+# one flag, coherent partition/engine/multilevel settings.
+_ML_PRECONF = {
+    "fast": (2, 128),
+    "eco": (4, 64),
+    "strong": (6, 32),
+}
+
+
+@dataclass(frozen=True)
+class MultilevelSpec:
+    """V-cycle knobs for the multilevel mapping subsystem
+    (:mod:`repro.multilevel`).
+
+    ``levels`` is the maximum number of graph scales including the finest
+    (1 = no coarsening: the parity escape hatch — bit-for-bit the flat
+    device engine); ``coarsen_min`` stops contraction once the coarse
+    level would drop below that many vertices.  Fields left ``None``
+    resolve from the spec's ``preconfiguration``
+    (fast → (2, 128), eco → (4, 64), strong → (6, 32)).
+    """
+
+    levels: int | None = None
+    coarsen_min: int | None = None
+
+    def validate(self) -> "MultilevelSpec":
+        if self.levels is not None and self.levels < 1:
+            raise ValueError("multilevel levels must be None or >= 1")
+        if self.coarsen_min is not None and self.coarsen_min < 2:
+            raise ValueError("multilevel coarsen_min must be None or >= 2")
+        return self
+
+    def resolve(self, preconfiguration: str) -> tuple[int, int]:
+        """Concrete ``(levels, coarsen_min)`` for a preconfiguration."""
+        d_levels, d_cmin = _ML_PRECONF.get(preconfiguration,
+                                           _ML_PRECONF["eco"])
+        return (self.levels if self.levels is not None else d_levels,
+                self.coarsen_min if self.coarsen_min is not None
+                else d_cmin)
+
+    def to_dict(self) -> dict:
+        return {"levels": self.levels, "coarsen_min": self.coarsen_min}
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "MultilevelSpec":
+        known = {"levels", "coarsen_min"}
+        unknown = sorted(set(d) - known)
+        if unknown:
+            raise ValueError(f"unknown MultilevelSpec keys {unknown}; "
+                             f"known keys: {sorted(known)}")
+        return cls(levels=d.get("levels"), coarsen_min=d.get("coarsen_min"))
+
+
 @dataclass(frozen=True)
 class MappingSpec:
     """Declarative description of one mapping computation (guide §4.1).
@@ -87,7 +142,13 @@ class MappingSpec:
     ``"numpy"`` (host, float64 — bit-identical to the legacy
     ``map_processes`` path) or ``"pallas"`` (the Pallas edge-list kernel,
     compiled once per session and cached by the :class:`Mapper`).
-    ``max_sweeps=None`` keeps each search driver's own default budget.
+    ``max_sweeps=None`` keeps each search driver's own default budget
+    (for the device engine the budget then follows ``preconfiguration``:
+    fast 32, eco 64, strong 128 sweeps).  ``multilevel`` enables the
+    coarsen → map → uncoarsen V-cycle over the device engine
+    (:mod:`repro.multilevel`); ``None`` (the default) keeps the flat
+    single-level pipeline, and ``MultilevelSpec(levels=1)`` is
+    bit-for-bit identical to it.
     """
 
     construction: str = "hierarchytopdown"
@@ -101,6 +162,7 @@ class MappingSpec:
     max_sweeps: int | None = None
     max_pairs: int = 2_000_000
     topology: TopologySpec | None = None
+    multilevel: MultilevelSpec | None = None
 
     def __post_init__(self):
         if self.neighborhood in _NONE_ALIASES:
@@ -108,6 +170,9 @@ class MappingSpec:
         if isinstance(self.topology, dict):
             object.__setattr__(self, "topology",
                                TopologySpec.from_dict(self.topology))
+        if isinstance(self.multilevel, dict):
+            object.__setattr__(self, "multilevel",
+                               MultilevelSpec.from_dict(self.multilevel))
 
     # ------------------------------------------------------------ validation
     def validate(self) -> "MappingSpec":
@@ -135,6 +200,14 @@ class MappingSpec:
             raise ValueError("max_sweeps must be None or >= 0")
         if self.topology is not None:
             self.topology.validate()
+        if self.multilevel is not None:
+            self.multilevel.validate()
+            if self.engine != "device" and \
+                    self.multilevel.resolve(self.preconfiguration)[0] > 1:
+                raise ValueError(
+                    "multilevel mapping runs the device refinement "
+                    "engine at every level; set engine='device' "
+                    "(or pass --engine=device)")
         return self
 
     # ------------------------------------------------------- dict/json forms
@@ -142,7 +215,19 @@ class MappingSpec:
         d = dataclasses.asdict(self)
         if self.topology is not None:
             d["topology"] = self.topology.to_dict()
+        if self.multilevel is not None:
+            d["multilevel"] = self.multilevel.to_dict()
         return d
+
+    # -------------------------------------------------------- resolution
+    def resolved_multilevel(self) -> "tuple[int, int] | None":
+        """Concrete V-cycle knobs ``(levels, coarsen_min)``, or ``None``
+        when the spec maps flat (no multilevel block, or an escape-hatch
+        ``levels=1``)."""
+        if self.multilevel is None:
+            return None
+        levels, cmin = self.multilevel.resolve(self.preconfiguration)
+        return None if levels <= 1 else (levels, cmin)
 
     @classmethod
     def from_dict(cls, d: dict) -> "MappingSpec":
@@ -186,6 +271,25 @@ class MappingSpec:
             val = getattr(args, flag, None)
             if val is not None:
                 overrides[field] = val
+        ml_on = getattr(args, "multilevel", None)
+        ml_levels = getattr(args, "multilevel_levels", None)
+        ml_cmin = getattr(args, "multilevel_coarsen_min", None)
+        if ml_on is False:
+            overrides["multilevel"] = None           # --no-multilevel
+        elif ml_on or ml_levels is not None or ml_cmin is not None:
+            ml = spec.multilevel or MultilevelSpec()
+            if ml_levels is not None or ml_cmin is not None:
+                ml = dataclasses.replace(
+                    ml,
+                    levels=ml_levels if ml_levels is not None else ml.levels,
+                    coarsen_min=(ml_cmin if ml_cmin is not None
+                                 else ml.coarsen_min))
+            overrides["multilevel"] = ml
+            # the V-cycle runs over the device engine; an explicit
+            # --engine still wins (validate() rejects host + multilevel)
+            if getattr(args, "engine", None) is None and \
+                    spec.engine == "host":
+                overrides["engine"] = "device"
         return spec.replace(**overrides) if overrides else spec
 
     def replace(self, **changes) -> "MappingSpec":

@@ -1,0 +1,160 @@
+"""Device-side graph coarsening: heavy-edge matching + edge collapsing.
+
+The multilevel V-cycle (:mod:`repro.multilevel`) contracts the
+communication graph level by level.  Both halves of one contraction run
+as fixed-shape, padding-inert jnp ops over the padded edge arrays of a
+:class:`~repro.core.graph.DeviceGraph` (``eu``/``ev``/``ew``, each
+undirected edge once, zero-weight padding):
+
+  1. **Matching** — greedy *maximal* matching by the classic heavy-edge
+     rating r(e) = w(e) / min(deg u, deg v) (the sorted-rating rule of the
+     host partitioner, guide §2.2), realized with the refinement engine's
+     conflict-matching pattern: rounds of locally-dominant edges (highest
+     rating at both endpoints, ties toward the lowest edge index) selected
+     via scatter-max / scatter-min inside a ``lax.while_loop``.  Leftover
+     unmatched vertices are then force-paired in index order, so the
+     matching is a *perfect pairing* whenever n is even — every coarse
+     vertex aggregates exactly two fine vertices, which is what lets the
+     V-cycle pair the machine side symmetrically and keep permutation
+     projection a bijection at every level.
+  2. **Collapsing** — map edge endpoints through the coarse labels, kill
+     intra-pair edges and padding (weight → 0), then merge duplicate
+     coarse edges by a sort + segment-sum: sort the (lo·n + hi) keys,
+     segment ids from run heads, one ``scatter-add`` of the sorted
+     weights.  Output arrays keep the padded length E; dead slots carry
+     (0, 0, 0.0) — inert under any distance form, and invariant under
+     *further* edge padding (live keys sort before the sentinel, so their
+     segment ids — and hence the live prefix of the output — do not move).
+
+Everything is shape-static and jittable; the host only syncs at level
+boundaries to assemble the next level's :class:`CommGraph` (sparse-gain
+economics per Paul's robust tabu search for sparse QAP: the coarse levels
+shrink both n and the padded ELL degree, so they are cheap).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# int32 edge keys are lo*n + hi with a sentinel at n*n: n must stay below
+# floor(sqrt(2^31 - 1)); the host wrappers enforce it.
+MAX_N = 46_340
+
+
+def edge_ratings(eu: jax.Array, ev: jax.Array, ew: jax.Array,
+                 n: int) -> jax.Array:
+    """Heavy-edge ratings r(e) = w(e) / min(deg u, deg v); padding
+    (w = 0) rates 0.  Degrees are counted from the live edges."""
+    live = (ew > 0).astype(jnp.float32)
+    deg = jnp.zeros((n,), jnp.float32).at[eu].add(live).at[ev].add(live)
+    mindeg = jnp.maximum(jnp.minimum(deg[eu], deg[ev]), 1.0)
+    return jnp.where(ew > 0, ew / mindeg, 0.0)
+
+
+def heavy_edge_matching(eu: jax.Array, ev: jax.Array, ew: jax.Array,
+                        n: int) -> jax.Array:
+    """Perfect pairing of ``n`` (even) vertices: greedy maximal matching
+    by heavy-edge rating priority, then forced index-order pairing of the
+    leftovers.  Returns ``match`` (n,) int32 — an involution with
+    ``match[u] != u`` for every vertex."""
+    e = eu.shape[0]
+    rating = edge_ratings(eu, ev, ew, n)
+    pos = rating > 0
+    idx = jnp.arange(e, dtype=jnp.int32)
+    oob = jnp.int32(n)                           # scatter-drop index
+
+    def cond(state):
+        match, used = state
+        return jnp.any(pos & ~used[eu] & ~used[ev])
+
+    def body(state):
+        match, used = state
+        elig = pos & ~used[eu] & ~used[ev]
+        re = jnp.where(elig, rating, -jnp.inf)
+        vmax = jnp.full((n,), -jnp.inf, jnp.float32)
+        vmax = vmax.at[eu].max(re).at[ev].max(re)
+        cand = elig & (re >= vmax[eu]) & (re >= vmax[ev])
+        vmin = jnp.full((n,), e, jnp.int32)
+        masked_idx = jnp.where(cand, idx, e)
+        vmin = vmin.at[eu].min(masked_idx).at[ev].min(masked_idx)
+        new = cand & (vmin[eu] == idx) & (vmin[ev] == idx)
+        match = match.at[jnp.where(new, eu, oob)].set(
+            ev.astype(jnp.int32), mode="drop")
+        match = match.at[jnp.where(new, ev, oob)].set(
+            eu.astype(jnp.int32), mode="drop")
+        used = used.at[jnp.where(new, eu, oob)].set(True, mode="drop")
+        used = used.at[jnp.where(new, ev, oob)].set(True, mode="drop")
+        return match, used
+
+    match0 = jnp.arange(n, dtype=jnp.int32)
+    match, used = jax.lax.while_loop(
+        cond, body, (match0, jnp.zeros((n,), jnp.bool_)))
+
+    # forced pairing: the unmatched vertices, in index order, pair up
+    # consecutively (rank r partners rank r^1) — n even keeps their count
+    # even, so nobody is left single
+    free = ~used
+    rank = jnp.cumsum(free.astype(jnp.int32)) - 1
+    byrank = jnp.zeros((n,), jnp.int32).at[
+        jnp.where(free, rank, oob)].set(match0, mode="drop")
+    return jnp.where(free, byrank[rank ^ 1], match)
+
+
+def labels_of_matching(match: jax.Array) -> jax.Array:
+    """Coarse labels of a perfect pairing: pairs are numbered by the
+    order of their smaller endpoint, so labels are 0..n/2-1 and
+    deterministic.  (n,) int32."""
+    n = match.shape[0]
+    ids = jnp.arange(n, dtype=match.dtype)
+    rep = jnp.minimum(ids, match)
+    is_rep = rep == ids
+    lab_of_rep = jnp.cumsum(is_rep.astype(jnp.int32)) - 1
+    return lab_of_rep[rep]
+
+
+def contract_edges(eu: jax.Array, ev: jax.Array, ew: jax.Array,
+                   labels: jax.Array, n: int
+                   ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Segment-sum edge collapsing: coarse edge arrays of the same padded
+    length E, duplicate coarse edges merged, intra-cluster edges
+    (self-loops) and padding dead (endpoints (0, 0), weight 0.0).  The
+    live prefix is invariant under further (0, 0, 0.0) edge padding."""
+    e = eu.shape[0]
+    lu, lv = labels[eu], labels[ev]
+    lo, hi = jnp.minimum(lu, lv), jnp.maximum(lu, lv)
+    dead = (lu == lv) | (ew <= 0)
+    sentinel = jnp.int32(n) * jnp.int32(n)
+    key = jnp.where(dead, sentinel, lo.astype(jnp.int32) * n + hi)
+    order = jnp.argsort(key, stable=True)
+    key_s, w_s = key[order], jnp.where(dead, 0.0, ew)[order]
+    head = jnp.concatenate([jnp.ones((1,), jnp.bool_),
+                            key_s[1:] != key_s[:-1]])
+    seg = jnp.cumsum(head.astype(jnp.int32)) - 1
+    wsum = jnp.zeros((e,), ew.dtype).at[seg].add(w_s)
+    # every element of a segment carries the same key, so scatter-max is
+    # a deterministic "set"
+    keyrep = jnp.zeros((e,), jnp.int32).at[seg].max(key_s)
+    live = (keyrep != sentinel) & (wsum > 0)
+    out_u = jnp.where(live, keyrep // n, 0).astype(eu.dtype)
+    out_v = jnp.where(live, keyrep % n, 0).astype(ev.dtype)
+    return out_u, out_v, jnp.where(live, wsum, 0.0)
+
+
+def contract_vwgt(vwgt: jax.Array, labels: jax.Array) -> jax.Array:
+    """Per-cluster summed vertex weights, fixed output shape (n,) —
+    entries at and beyond the cluster count are zero."""
+    n = vwgt.shape[0]
+    return jnp.zeros((n,), vwgt.dtype).at[labels].add(vwgt)
+
+
+def coarsen_arrays(eu: jax.Array, ev: jax.Array, ew: jax.Array,
+                   vwgt: jax.Array) -> tuple:
+    """One full device contraction step: matching → labels → collapsed
+    edges + vertex weights.  Returns ``(labels, ceu, cev, cew, cvw)``;
+    jit this once per (E, n) shape bucket."""
+    n = vwgt.shape[0]
+    match = heavy_edge_matching(eu, ev, ew, n)
+    labels = labels_of_matching(match)
+    ceu, cev, cew = contract_edges(eu, ev, ew, labels, n)
+    return labels, ceu, cev, cew, contract_vwgt(vwgt, labels)

@@ -1,0 +1,117 @@
+"""The V-cycle: construct at the coarsest level, refine while projecting
+down.  Pure orchestration — pyramids come from :mod:`.coarsen`, per-level
+refinement is the device :class:`~repro.engine.RefinementEngine` (host
+syncs only at level boundaries), and the Mapper supplies cached engines.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from ..core.local_search import SearchStats
+from ..core.objective import qap_objective
+from .coarsen import Level, project_perm
+
+
+@dataclass
+class VCycleResult:
+    """``perm`` plus host-facing accounting: the finest level's
+    refinement stats, the projected (pre-refinement) finest objective as
+    the initial objective, and the per-level refined objectives
+    (coarsest → finest) for diagnostics."""
+    perm: np.ndarray
+    initial_objective: float
+    stats: SearchStats
+    construction_seconds: float
+    level_objectives: list[float] = field(default_factory=list)
+
+
+def _construct_coarsest(level: Level, construct_fn, cfg, seed: int
+                        ) -> np.ndarray:
+    return construct_fn(level.graph, level.machine, seed=seed, cfg=cfg)
+
+
+def vcycle_map(pyramid: list[Level], engine_of, construct_fn, cfg,
+               seed: int = 0, objective0=None) -> VCycleResult:
+    """Run one V-cycle over a built pyramid (finest first).
+
+    ``engine_of(machine)`` returns the refinement engine for a level's
+    machine (the Mapper's engine cache); ``construct_fn(g, machine, *,
+    seed, cfg)`` maps the coarsest level; ``objective0(graph, perm)``
+    scores the finest level (defaults to the host float64 objective).
+    """
+    coarsest = pyramid[-1]
+    t0 = time.perf_counter()
+    perm = _construct_coarsest(coarsest, construct_fn, cfg, seed)
+    t_cons = time.perf_counter() - t0
+
+    level_objectives: list[float] = []
+    stats = SearchStats()
+    j0_fine = 0.0
+    for lvl in range(len(pyramid) - 1, -1, -1):
+        level = pyramid[lvl]
+        if lvl == 0:
+            j0_fine = (qap_objective(level.graph, level.machine, perm)
+                       if objective0 is None else
+                       objective0(level.graph, perm))
+            jl = j0_fine
+        else:
+            jl = qap_objective(level.graph, level.machine, perm)
+        stats = engine_of(level.machine).refine(level.graph, perm,
+                                                level.pairs, j0=jl)
+        level_objectives.append(stats.final_objective)
+        if lvl > 0:
+            perm = project_perm(perm, level.fine_u, level.fine_v)
+    return VCycleResult(perm=perm, initial_objective=j0_fine, stats=stats,
+                        construction_seconds=t_cons,
+                        level_objectives=level_objectives)
+
+
+def vcycle_map_batch(pyramids: list[list[Level]], engine_of, construct_fn,
+                     cfg, seed: int = 0,
+                     objective0=None) -> list[VCycleResult]:
+    """Batched V-cycles over same-n graphs: the forced perfect pairing
+    makes every pyramid the same depth with the same level sizes, so each
+    level's refinement across the whole batch is ONE vmapped engine call
+    (``refine_batch``) — the multilevel counterpart of
+    ``Mapper._map_many_device``.  Per-graph results match single
+    :func:`vcycle_map` calls up to the engine's batching invariants."""
+    if not pyramids:
+        return []
+    depths = {len(p) for p in pyramids}
+    if len(depths) != 1:
+        raise ValueError(f"batched V-cycles need one pyramid depth, "
+                         f"got {sorted(depths)}")
+    t0 = time.perf_counter()
+    perms = [_construct_coarsest(p[-1], construct_fn, cfg, seed)
+             for p in pyramids]
+    t_cons = (time.perf_counter() - t0) / len(pyramids)
+
+    level_objectives = [[] for _ in pyramids]
+    stats_list = [SearchStats() for _ in pyramids]
+    j0_fine = [0.0] * len(pyramids)
+    for lvl in range(depths.pop() - 1, -1, -1):
+        levels = [p[lvl] for p in pyramids]
+        if lvl == 0 and objective0 is not None:
+            j0s = [objective0(lv.graph, perm)
+                   for lv, perm in zip(levels, perms)]
+        else:
+            j0s = [qap_objective(lv.graph, lv.machine, perm)
+                   for lv, perm in zip(levels, perms)]
+        if lvl == 0:
+            j0_fine = j0s
+        stats_list = engine_of(levels[0].machine).refine_batch(
+            [lv.graph for lv in levels], perms,
+            [lv.pairs for lv in levels], j0s=j0s)
+        for i, st in enumerate(stats_list):
+            level_objectives[i].append(st.final_objective)
+        if lvl > 0:
+            perms = [project_perm(perm, lv.fine_u, lv.fine_v)
+                     for lv, perm in zip(levels, perms)]
+    return [VCycleResult(perm=perm, initial_objective=j0, stats=st,
+                         construction_seconds=t_cons, level_objectives=lo)
+            for perm, j0, st, lo
+            in zip(perms, j0_fine, stats_list, level_objectives)]

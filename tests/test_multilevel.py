@@ -1,0 +1,365 @@
+"""Multilevel mapping subsystem: device contraction-kernel invariants,
+the shared `core.graph.contract` helper (quotient/partitioner
+unification), V-cycle guarantees (bijection at every level, levels=1
+bit-parity with the flat engine, multilevel ≤ flat on fixed seeds),
+batched V-cycles, spec/CLI plumbing, preconfiguration wiring, and the
+LRU-bounded Mapper caches."""
+
+import argparse
+
+import numpy as np
+import pytest
+
+from repro.core import (Hierarchy, Mapper, MappingSpec, MultilevelSpec,
+                        from_edges, grid3d, qap_objective, random_geometric)
+from repro.core.construction import quotient
+from repro.core.graph import CommGraph, contract
+from repro.core.partition import _contract, _heavy_edge_matching
+from repro.multilevel import coarsen_graph, coarsen_machine, \
+    project_perm, pyramid_depth
+from repro.topology import TorusTopology, TreeTopology
+
+H64 = Hierarchy((4, 4, 4), (1.0, 10.0, 100.0))
+
+
+def _pad_edges(g, extra=0):
+    import jax.numpy as jnp
+    u, v, w = g.edge_list()
+    e = max(128, -(-max(len(u), 1) // 128) * 128) + extra
+    pad = e - len(u)
+    return (jnp.asarray(np.pad(u, (0, pad)).astype(np.int32)),
+            jnp.asarray(np.pad(v, (0, pad)).astype(np.int32)),
+            jnp.asarray(np.pad(w, (0, pad)).astype(np.float32)))
+
+
+# ----------------------------------------------------- shared contract()
+def _quotient_reference(g, labels, k):
+    """The pre-unification quotient implementation (bit-parity oracle)."""
+    u, v, w = g.edge_list()
+    cu, cv = labels[u], labels[v]
+    keep = cu != cv
+    cu, cv, w = cu[keep], cv[keep], w[keep]
+    lo, hi = np.minimum(cu, cv), np.maximum(cu, cv)
+    vw = np.bincount(labels, weights=g.vwgt, minlength=k)
+    if len(lo) == 0:
+        return CommGraph(np.zeros(k + 1, np.int64), np.zeros(0, np.int64),
+                         np.zeros(0), vw)
+    return from_edges(k, lo, hi, w, vwgt=vw)
+
+
+@pytest.mark.parametrize("seed", [0, 3])
+def test_shared_contract_is_bit_identical_to_quotient(seed):
+    g = random_geometric(48, 0.3, seed=seed)
+    rng = np.random.default_rng(seed)
+    labels = rng.integers(0, 6, size=g.n)
+    for got in (contract(g, labels, 6), quotient(g, labels, 6)):
+        want = _quotient_reference(g, labels, 6)
+        assert np.array_equal(got.xadj, want.xadj)
+        assert np.array_equal(got.adjncy, want.adjncy)
+        assert np.array_equal(got.adjwgt, want.adjwgt)
+        assert np.array_equal(got.vwgt, want.vwgt)
+
+
+def test_partitioner_contract_uses_shared_helper():
+    g = random_geometric(40, 0.3, seed=2)
+    match = _heavy_edge_matching(g, np.random.default_rng(0))
+    coarse, cmap = _contract(g, match)
+    rep = np.minimum(np.arange(g.n), match)
+    uniq, labels = np.unique(rep, return_inverse=True)
+    want = _quotient_reference(g, labels, len(uniq))
+    assert np.array_equal(coarse.xadj, want.xadj)
+    assert np.array_equal(coarse.adjncy, want.adjncy)
+    assert np.array_equal(coarse.adjwgt, want.adjwgt)
+    assert np.array_equal(coarse.vwgt, want.vwgt)
+    assert np.array_equal(cmap, labels)
+
+
+# --------------------------------------------- device contraction kernel
+@pytest.mark.parametrize("seed", [1, 5])
+def test_device_matching_is_perfect_pairing(seed):
+    from repro.kernels import contract as ck
+    g = random_geometric(64, 0.25, seed=seed)
+    eu, ev, ew = _pad_edges(g)
+    match = np.asarray(ck.heavy_edge_matching(eu, ev, ew, g.n))
+    assert np.all(match != np.arange(g.n))          # nobody self-matched
+    assert np.all(match[match] == np.arange(g.n))   # involution
+    labels = np.asarray(ck.labels_of_matching(
+        ck.heavy_edge_matching(eu, ev, ew, g.n)))
+    assert np.all(np.bincount(labels, minlength=g.n // 2) == 2)
+
+
+def test_device_contraction_invariants():
+    from repro.kernels import contract as ck
+    g = random_geometric(64, 0.25, seed=7)
+    eu, ev, ew = _pad_edges(g)
+    import jax.numpy as jnp
+    vw = jnp.asarray(g.vwgt.astype(np.float32))
+    labels, ceu, cev, cew, cvw = [
+        np.asarray(x) for x in ck.coarsen_arrays(eu, ev, ew, vw)]
+    nc = g.n // 2
+    live = cew > 0
+    # self-loops dropped: no live coarse edge joins a cluster to itself
+    assert np.all(ceu[live] != cev[live])
+    # total edge weight conserved: inter-cluster + dropped intra = total
+    u, v, w = g.edge_list()
+    intra = w[labels[u] == labels[v]].sum()
+    assert cew.sum() + intra == pytest.approx(w.sum(), rel=1e-6)
+    # vertex weights summed per cluster; beyond nc all zero
+    want_vw = np.bincount(labels, weights=g.vwgt, minlength=g.n)
+    assert cvw == pytest.approx(want_vw)
+    assert np.all(cvw[nc:] == 0.0)
+    # matches the host-side collapse of the same labeling exactly
+    host = contract(g, labels.astype(np.int64), nc)
+    hu, hv, hw = host.edge_list()
+    got = sorted(zip(ceu[live].tolist(), cev[live].tolist(),
+                     cew[live].tolist()))
+    want = sorted(zip(hu.tolist(), hv.tolist(), hw.tolist()))
+    assert [(a, b) for a, b, _ in got] == [(x, y) for x, y, _ in want]
+    assert [c for _, _, c in got] == pytest.approx(
+        [z for _, _, z in want], rel=1e-5)
+
+
+def test_device_contraction_is_padding_inert():
+    from repro.kernels import contract as ck
+    import jax.numpy as jnp
+    g = grid3d(4, 4, 2)
+    eu, ev, ew = _pad_edges(g)
+    labels = ck.labels_of_matching(ck.heavy_edge_matching(eu, ev, ew, g.n))
+    base = [np.asarray(x) for x in ck.contract_edges(eu, ev, ew, labels,
+                                                     g.n)]
+    eu2, ev2, ew2 = (jnp.pad(eu, (0, 256)), jnp.pad(ev, (0, 256)),
+                     jnp.pad(ew, (0, 256)))
+    big = [np.asarray(x) for x in ck.contract_edges(eu2, ev2, ew2, labels,
+                                                    g.n)]
+    e = len(base[0])
+    assert np.array_equal(big[0][:e], base[0])
+    assert np.array_equal(big[1][:e], base[1])
+    assert np.allclose(big[2][:e], base[2])
+    assert np.all(big[2][e:] == 0.0)                # extra slots stay inert
+
+
+def test_coarsen_graph_rejects_odd_and_keeps_weights():
+    with pytest.raises(ValueError, match="odd"):
+        coarsen_graph(grid3d(3, 3, 3))
+    g = random_geometric(32, 0.3, seed=4)
+    coarse, fine_u, fine_v = coarsen_graph(g)
+    assert coarse.n == 16
+    assert np.all(fine_u < fine_v)
+    members = np.sort(np.concatenate([fine_u, fine_v]))
+    assert np.array_equal(members, np.arange(32))   # a perfect pairing
+    assert coarse.vwgt.sum() == pytest.approx(g.vwgt.sum())
+
+
+# ------------------------------------------------------- machine pyramid
+def test_coarsen_machine_pairs_siblings():
+    h = TreeTopology(hierarchy=Hierarchy((2, 2), (1.0, 10.0)))
+    coarse = coarsen_machine(h)
+    assert coarse.n_pe == 2
+    # PEs (0,1) and (2,3) are sibling pairs: every cross distance is the
+    # top-level 10, so the coarse distance is exactly 10
+    assert coarse.distance(0, 1) == pytest.approx(10.0)
+    assert coarse.distance(0, 0) == 0.0
+
+
+def test_coarsen_machine_survives_non_representable_weights():
+    # the four cross distances of (a, b) and (b, a) sum in different
+    # orders; without explicit symmetrization the ULP mismatch trips
+    # MatrixTopology's exact-symmetry validation (regression)
+    coarse = coarsen_machine(TorusTopology((8, 8), (1.1, 0.3)))
+    assert coarse.n_pe == 32
+
+
+def test_coarsen_machine_torus_last_axis_neighbors():
+    t = TorusTopology((4, 4), (1.0, 1.0))
+    coarse = coarsen_machine(t)
+    assert coarse.n_pe == 8
+    D = coarse.matrix()
+    assert np.array_equal(D, D.T)
+    assert np.all(np.diag(D) == 0.0)
+    assert np.all(D[~np.eye(8, dtype=bool)] > 0)
+
+
+def test_pyramid_depth_rules():
+    assert pyramid_depth(64, levels=4, coarsen_min=8) == 4   # budget binds
+    assert pyramid_depth(64, levels=10, coarsen_min=16) == 3  # 64→32→16
+    assert pyramid_depth(63, levels=4, coarsen_min=8) == 1   # odd: flat
+    assert pyramid_depth(64, levels=1, coarsen_min=2) == 1   # escape hatch
+
+
+# ------------------------------------------------------------ the V-cycle
+def _ml_spec(**kw):
+    base = dict(construction="random", neighborhood="communication",
+                neighborhood_dist=2, preconfiguration="eco",
+                engine="device", seed=1,
+                multilevel=MultilevelSpec(levels=3, coarsen_min=8))
+    base.update(kw)
+    return MappingSpec(**base)
+
+
+def test_projection_is_bijection_at_every_level():
+    spec = _ml_spec()
+    mapper = Mapper(H64, spec)
+    g = grid3d(4, 4, 4)
+    pyramid = mapper._pyramid(g, spec, spec.resolved_multilevel())
+    assert len(pyramid) == 3
+    rng = np.random.default_rng(0)
+    perm = rng.permutation(pyramid[-1].graph.n).astype(np.int64)
+    for lvl in range(len(pyramid) - 1, 0, -1):
+        level = pyramid[lvl]
+        assert sorted(perm.tolist()) == list(range(level.graph.n))
+        assert level.graph.n == level.machine.n_pe
+        perm = project_perm(perm, level.fine_u, level.fine_v)
+    assert sorted(perm.tolist()) == list(range(g.n))
+
+
+def test_levels_one_reproduces_flat_engine_bit_for_bit():
+    flat = _ml_spec(multilevel=None)
+    hatch = _ml_spec(multilevel=MultilevelSpec(levels=1))
+    g = grid3d(4, 4, 4)
+    rf = Mapper(H64, flat).map(g)
+    r1 = Mapper(H64, hatch).map(g)
+    assert np.array_equal(r1.perm, rf.perm)
+    assert r1.final_objective == rf.final_objective
+    assert r1.initial_objective == rf.initial_objective
+
+
+@pytest.mark.parametrize("machine", ["tree", "torus"])
+def test_multilevel_beats_or_matches_flat(machine):
+    topo = H64 if machine == "tree" else TorusTopology((8, 8))
+    g = grid3d(4, 4, 4)
+    flat = _ml_spec(multilevel=None)
+    rf = Mapper(topo, flat).map(g)
+    rm = Mapper(topo, _ml_spec()).map(g)
+    tol = 1e-6 * max(1.0, abs(rf.final_objective))
+    assert rm.final_objective <= rf.final_objective + tol
+    assert sorted(rm.perm.tolist()) == list(range(g.n))
+    assert rm.final_objective == pytest.approx(
+        qap_objective(g, Mapper(topo, flat).topology, rm.perm), rel=1e-9)
+
+
+def test_multilevel_map_is_deterministic_and_caches_pyramid():
+    spec = _ml_spec()
+    mapper = Mapper(H64, spec)
+    g = grid3d(4, 4, 4)
+    r1 = mapper.map(g)
+    r2 = mapper.map(g)
+    assert np.array_equal(r1.perm, r2.perm)
+    info = mapper.cache_info()
+    assert info["pyramid_builds"] == 1
+    assert info["pyramid_hits"] == 1
+    # one engine per level (tree + 2 coarse matrix machines), all cached
+    assert info["engine_builds"] == 3
+
+
+def test_multilevel_map_many_matches_single_maps():
+    spec = _ml_spec()
+    graphs = []
+    for i in range(3):
+        g = grid3d(4, 4, 4)
+        g.adjwgt = g.adjwgt * (1.0 + 0.5 * i)
+        graphs.append(g)
+    batch = Mapper(H64, spec).map_many(graphs)
+    singles = [Mapper(H64, spec).map(g) for g in graphs]
+    for got, want in zip(batch, singles):
+        assert got.final_objective == pytest.approx(want.final_objective,
+                                                    rel=1e-5)
+        assert sorted(got.perm.tolist()) == list(range(64))
+
+
+def test_multilevel_neighborhood_none_still_maps():
+    spec = _ml_spec(neighborhood=None)
+    res = Mapper(H64, spec).map(grid3d(4, 4, 4))
+    assert sorted(res.perm.tolist()) == list(range(64))
+
+
+# ------------------------------------------------------ spec/CLI plumbing
+def test_multilevel_spec_round_trip_and_unknown_keys():
+    spec = _ml_spec()
+    again = MappingSpec.from_json(spec.to_json())
+    assert again == spec
+    assert again.multilevel == MultilevelSpec(levels=3, coarsen_min=8)
+    with pytest.raises(ValueError, match="unknown MultilevelSpec keys"):
+        MappingSpec.from_dict({"multilevel": {"depth": 3}})
+    with pytest.raises(ValueError, match="levels"):
+        MappingSpec(engine="device",
+                    multilevel=MultilevelSpec(levels=0)).validate()
+    with pytest.raises(ValueError, match="coarsen_min"):
+        MappingSpec(engine="device",
+                    multilevel=MultilevelSpec(coarsen_min=1)).validate()
+    with pytest.raises(ValueError, match="device"):
+        MappingSpec(engine="host",
+                    multilevel=MultilevelSpec()).validate()
+
+
+def test_multilevel_flags_imply_device_engine():
+    ns = argparse.Namespace(multilevel=True)
+    spec = MappingSpec.from_flags(ns)
+    assert spec.engine == "device"
+    assert spec.multilevel == MultilevelSpec()
+    ns = argparse.Namespace(multilevel_levels=2, multilevel_coarsen_min=16)
+    spec = MappingSpec.from_flags(ns)
+    assert spec.multilevel == MultilevelSpec(levels=2, coarsen_min=16)
+    # an explicit --engine=host wins (and validate() then rejects it)
+    ns = argparse.Namespace(multilevel=True, engine="host")
+    assert MappingSpec.from_flags(ns).engine == "host"
+    # --no-multilevel clears a config-file multilevel block
+    base = _ml_spec()
+    ns = argparse.Namespace(multilevel=False)
+    assert MappingSpec.from_flags(ns, base=base).multilevel is None
+
+
+def test_preconfiguration_resolves_vcycle_and_sweep_knobs():
+    assert MultilevelSpec().resolve("fast") == (2, 128)
+    assert MultilevelSpec().resolve("eco") == (4, 64)
+    assert MultilevelSpec().resolve("strong") == (6, 32)
+    assert MultilevelSpec(levels=3).resolve("strong") == (3, 32)
+    assert MultilevelSpec(coarsen_min=4).resolve("fast") == (2, 4)
+    mapper = Mapper(H64)
+    for name, sweeps in (("fast", 32), ("eco", 64), ("strong", 128)):
+        assert mapper._sweep_budget(
+            MappingSpec(preconfiguration=name)) == sweeps
+    assert mapper._sweep_budget(MappingSpec(max_sweeps=7)) == 7
+    # levels=1 via preconfiguration still counts as flat
+    assert MappingSpec(
+        engine="device",
+        multilevel=MultilevelSpec(levels=1)).resolved_multilevel() is None
+    got = MappingSpec(engine="device", preconfiguration="fast",
+                      multilevel=MultilevelSpec()).resolved_multilevel()
+    assert got == (2, 128)
+
+
+# ----------------------------------------------------- LRU-bounded caches
+def test_engine_cache_is_bounded_with_visible_evictions():
+    spec = MappingSpec(construction="random", neighborhood="communication",
+                       neighborhood_dist=2, preconfiguration="fast",
+                       engine="device", seed=0)
+    mapper = Mapper(H64, spec, cache_caps={"engines": 2})
+    g = grid3d(4, 4, 4)
+    for sweeps in (2, 3, 4):        # three distinct engine keys, cap 2
+        mapper.map(g, spec=spec.replace(max_sweeps=sweeps))
+    info = mapper.cache_info()
+    assert info["engine_builds"] == 3
+    assert info["engine_evictions"] == 1
+    assert len(mapper._engines) == 2
+    with pytest.raises(ValueError, match="cache_caps"):
+        Mapper(H64, spec, cache_caps={"nope": 1})
+
+
+def test_pair_and_pyramid_caches_evict_at_cap():
+    spec = _ml_spec()
+    mapper = Mapper(H64, spec, cache_caps={"pairs": 2, "pyramids": 1})
+    graphs = []
+    for i in range(3):
+        g = grid3d(4, 4, 4)
+        g.adjwgt = g.adjwgt * (i + 1.0)
+        graphs.append(g)
+    for g in graphs:
+        mapper.map(g)
+    info = mapper.cache_info()
+    # pyramids key on weights: three builds through a cap-1 cache
+    assert info["pyramid_builds"] == 3
+    assert info["pyramid_evictions"] == 2
+    assert len(mapper._pyramids) == 1
+    # candidate pairs of the V-cycle live inside the pyramid entries (one
+    # set per level), so the separate pair cache stays within its cap
+    assert len(mapper._pair_cache) <= 2
