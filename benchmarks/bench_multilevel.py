@@ -46,14 +46,10 @@ def _machines(pods: int) -> dict:
 
 def _timed_map(mapper: Mapper, g, spec: MappingSpec):
     """One warmed, cache-honest map: compile on a warm-up run, then
-    clear the graph-side caches so the timed run pays pyramid build,
-    pair generation, and construction for real."""
+    clear the plan's graph-side caches so the timed run pays pyramid
+    build, pair generation, and construction for real."""
     mapper.map(g, spec=spec)                    # warm-up: compiles
-    mapper._pyramids._data.clear()
-    mapper._pair_cache._data.clear()
-    for eng in mapper._engines._data.values():
-        eng._dg_cache.clear()
-        eng._pair_cache.clear()
+    mapper.lower_for(g, spec).clear_request_caches()
     t0 = time.perf_counter()
     res = mapper.map(g, spec=spec)
     return res, time.perf_counter() - t0

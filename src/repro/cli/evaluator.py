@@ -54,13 +54,17 @@ def main(argv=None):
         try:
             spec = MappingSpec.from_json(
                 Path(args.compare_spec).read_text()).validate()
-            res = Mapper(topo, spec).map(g)
+            # staged explicitly so the plan geometry is reportable
+            plan = Mapper(topo, spec).lower_for(g)
+            res = plan.execute(g)
         except (ValueError, OSError) as exc:
             sys.exit(f"evaluator: {exc}")
         ratio = j / res.final_objective if res.final_objective else \
             float("inf")
         print(f"viem[{spec.construction}+{spec.neighborhood}] "
               f"J = {res.final_objective:.6g}")
+        print(f"viem plan           = bucket {plan.bucket.tag()}, "
+              f"{len(plan.machines)} level(s), engine={spec.engine}")
         print(f"given/viem ratio    = {ratio:.3f}")
 
 

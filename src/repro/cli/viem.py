@@ -12,6 +12,7 @@ Usage:
         [--local_search_neighborhood=communication]
         [--communication_neighborhood_dist=10]
         [--engine=host|device]          # host drivers vs jitted device sweep
+        [--explain]                     # lower only; print plan.describe()
         [--multilevel] [--multilevel_levels=4] [--multilevel_coarsen_min=64]
         [--preconfiguration={strong,eco,fast}]  # one flag: partition +
                                         # engine sweeps + multilevel knobs
@@ -91,6 +92,11 @@ def main(argv=None):
                     help="where the refinement loop runs: the reference "
                          "host drivers, or the jitted device-resident "
                          "sweep engine (repro.engine)")
+    ap.add_argument("--explain", action="store_true",
+                    help="lower the plan for this graph WITHOUT executing "
+                         "and pretty-print plan.describe(): levels, "
+                         "padded shape bucket, kernel form per level, "
+                         "engine sweep budgets")
     ap.add_argument("--multilevel",
                     action=argparse.BooleanOptionalAction, default=None,
                     help="coarsen → map → uncoarsen V-cycle over the "
@@ -126,9 +132,14 @@ def main(argv=None):
     if g.n != topo.n_pe:
         sys.exit(f"viem: model has {g.n} vertices but the machine "
                  f"specifies {topo.n_pe} PEs — they must match (guide §4.1)")
+    mapper = Mapper(topo, spec)
+    if args.explain:
+        import json
+        print(json.dumps(mapper.lower_for(g).describe(), indent=2))
+        return
     # `hierarchyonline` vs `hierarchy` is a memory/speed knob; the oracle
     # is online in both cases here and they agree bit-for-bit (tested).
-    res = Mapper(topo, spec).map(g)
+    res = mapper.map(g)
     np.savetxt(args.output_filename, res.perm, fmt="%d")
     print(f"machine topology     = {topo.kind} ({topo.n_pe} PEs)")
     print(f"initial objective  J = {res.initial_objective:.6g}")

@@ -1,29 +1,35 @@
 """VieM core: sparse quadratic assignment process mapping (the paper's
 contribution), reimplemented as a composable, registry-driven library.
 
-The public API is declarative: describe *what* mapping you want in a
-frozen, serializable :class:`MappingSpec`, then run it through a
-:class:`Mapper` session that owns the machine :class:`Hierarchy` and
-amortizes its distance oracle, compiled Pallas kernels, and candidate
-neighborhoods across requests::
+The public API is declarative and staged: describe *what* mapping you
+want in a frozen, serializable :class:`MappingSpec`, lower it into a
+:class:`MappingPlan` (the AOT artifact: machine oracle, level geometry,
+compiled kernels and jitted engine executables), then execute graphs
+through the plan — or let a :class:`Mapper` session fetch-or-lower plans
+for you::
 
-    from repro.core import Hierarchy, Mapper, MappingSpec, grid3d
+    from repro.core import Hierarchy, Mapper, MappingSpec, ShapeBucket, grid3d
 
     h = Hierarchy.from_strings("16:8:4", "1:10:100")
     spec = MappingSpec(neighborhood="communication", neighborhood_dist=10)
     mapper = Mapper(h, spec)
-    result = mapper.map(grid3d(8, 8, 8))     # one request
-    results = mapper.map_many(graphs)        # same-shape batch, shared setup
+    plan = mapper.lower(ShapeBucket.of(g))   # stage 1: AOT lower
+    result = plan.execute(g)                 # stage 2: zero-recompile run
+    result = mapper.map(grid3d(8, 8, 8))     # thin wrapper over both
+    results = mapper.map_many(graphs)        # one plan, one vmapped batch
     service = mapper.serve()                 # request-queue serving hook
 
-Algorithms are pluggable through registries — ``@register_construction``
-and ``@register_neighborhood`` make third-party strategies addressable
-from specs and the CLI without touching core dispatch.
+Plans serialize (``plan.to_json()`` / ``MappingPlan.load``) and rebuild
+in a fresh process, reproducing mappings bit-for-bit.  Algorithms are
+pluggable through registries — ``@register_construction`` and
+``@register_neighborhood`` make third-party strategies addressable from
+specs and the CLI without touching core dispatch.
 
 Modules:
-  spec         — MappingSpec: one config language for CLI/launch/benchmarks
-  mapping      — Mapper sessions, MapperService queue serving,
-                 map_processes() (deprecated one-shot shim)
+  spec         — MappingSpec/PlanSpec/ShapeBucket: one config language
+                 for CLI/launch/benchmarks
+  plan         — MappingPlan: the lowered AOT artifact + execute hot path
+  mapping      — Mapper sessions (one LRU plan cache), MapperService queue
   graph        — CSR communication graphs, Metis IO, generators
   hierarchy    — hierarchical topologies + cached online distance oracle
   objective    — sparse QAP objective, O(deg) swap gains, dense gain matrix
@@ -41,18 +47,21 @@ from .graph import CommGraph, DeviceGraph, GraphFormatError, device_pairs, \
 from .hierarchy import DistanceOracle, Hierarchy, supermuc_like, \
     tpu_v5e_fleet
 from .local_search import list_neighborhoods, register_neighborhood
-from .mapping import Mapper, MapperService, MappingResult, map_processes
+from .mapping import Mapper, MapperService
 from .objective import dense_gain_matrix, qap_objective, \
     qap_objective_dense, swap_gain
-from .spec import MappingSpec, MultilevelSpec, TopologySpec
+from .plan import MappingPlan, MappingResult
+from .spec import MappingSpec, MultilevelSpec, PlanSpec, ShapeBucket, \
+    TopologySpec
 
 __all__ = [
     "CommGraph", "DeviceGraph", "GraphFormatError", "device_pairs",
     "from_dense", "from_edges", "grid3d",
     "random_geometric", "read_metis", "validate", "write_metis",
     "DistanceOracle", "Hierarchy", "supermuc_like", "tpu_v5e_fleet",
-    "Mapper", "MapperService", "MappingResult", "MappingSpec",
-    "MultilevelSpec", "TopologySpec", "map_processes",
+    "Mapper", "MapperService", "MappingPlan", "MappingResult",
+    "MappingSpec", "MultilevelSpec", "PlanSpec", "ShapeBucket",
+    "TopologySpec",
     "list_constructions", "register_construction",
     "list_neighborhoods", "register_neighborhood",
     "dense_gain_matrix", "qap_objective", "qap_objective_dense", "swap_gain",

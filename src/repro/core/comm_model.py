@@ -15,7 +15,7 @@ the per-device-pair traffic graph under ring collective algorithms:
 
 The result is *sparse* (rings and small cliques — the paper's sparsity
 assumption holds by construction for mesh-parallel programs), symmetric,
-and ready for ``map_processes``.
+and ready for ``Mapper.map`` (or a pre-lowered ``MappingPlan``).
 """
 
 from __future__ import annotations

@@ -1,21 +1,25 @@
-"""Top-level mapping API — `Mapper` sessions driven by `MappingSpec`.
+"""Top-level mapping API — `Mapper` sessions driven by `MappingSpec`,
+staged through `MappingPlan` artifacts.
 
     spec = MappingSpec(neighborhood="communication", neighborhood_dist=10)
-    mapper = Mapper(machine, spec)    # machine: Hierarchy or any Topology
-    result = mapper.map(g)            # one graph
-    results = mapper.map_many(gs)     # same-shape batch, shared setup
-    service = mapper.serve()          # request-queue serving hook
+    mapper = Mapper(machine, spec)        # machine: Hierarchy or Topology
+    plan = mapper.lower(ShapeBucket.of(g))   # stage 1: AOT lower
+    result = plan.execute(g)                 # stage 2: zero-recompile run
+    result = mapper.map(g)                # thin wrapper: lower-or-fetch
+    results = mapper.map_many(gs)         # one plan, one vmapped batch
+    service = mapper.serve()              # request-queue serving hook
 
 A `Mapper` owns one machine model — a legacy :class:`Hierarchy` (wrapped
 into the ``tree`` topology, bit-for-bit identical) or any registered
-:class:`~repro.topology.Topology` (torus, fattree, dragonfly, explicit
-matrix, third-party) — and amortizes everything that does not depend on
-the individual graph across requests: the machine's distance oracle
-(built once per machine instance), compiled Pallas kernels (swap-gain
-matrix, edge-list QAP objective — one entry per topology kernel form ×
-shape), and candidate-pair neighborhoods (cached per graph structure).
-`cache_info()` exposes hit/build counters so callers can assert the
-amortization actually happened.
+:class:`~repro.topology.Topology` — plus ONE LRU cache of lowered
+:class:`~repro.core.plan.MappingPlan` artifacts keyed by (seed-free
+spec, :class:`ShapeBucket`).  Everything a plan amortizes (distance
+oracle, jitted engine executables per level, Pallas kernels, coarse
+machines, candidate-pair sets) lives inside the plan; ``map`` and
+``map_many`` just fetch-or-lower the right plan and call ``execute``.
+``cache_info()`` exposes the plan cache (hits/builds/evictions, plus a
+per-bucket breakdown) and aggregated per-plan counters so callers can
+assert the amortization actually happened.
 
 Algorithms are resolved through the registries in
 :mod:`repro.core.construction`, :mod:`repro.core.local_search`, and
@@ -24,164 +28,35 @@ construction, communication neighborhood with distance 10, eco
 preconfiguration, online distances).  ``Mapper.from_spec(spec)`` builds
 the machine from the spec's serialized :class:`TopologySpec`.
 
-:func:`map_processes` survives as a deprecated shim over
-``Mapper(h, MappingSpec(...)).map(g)`` — identical results, one-shot setup.
+The high-throughput, shape-bucketed serving front end
+(:class:`~repro.launch.serve.MappingService`) batches same-bucket
+requests through ``plan.execute_batch``; the in-core
+:class:`MapperService` below is the simple one-at-a-time queue hook.
 """
 
 from __future__ import annotations
 
-import functools
 import itertools
+import json
 import queue
 import threading
-import time
-import warnings
-from collections import OrderedDict
-from dataclasses import dataclass
+from collections import Counter
 
 import numpy as np
 
-from .construction import resolve_construction
 from .graph import CommGraph
-from .hierarchy import Hierarchy
-from .local_search import (SearchStats, _cyclic_search,
-                           parallel_sweep_search, resolve_neighborhood)
-from .objective import dense_gain_matrix, qap_objective
-from .partition import PartitionConfig
-from .spec import MappingSpec
+from .plan import MappingPlan, MappingResult, _LRU
+from .spec import MappingSpec, ShapeBucket
 
+__all__ = ["Mapper", "MapperService", "MappingResult", "MappingPlan",
+           "ShapeBucket"]
 
-@dataclass
-class MappingResult:
-    perm: np.ndarray
-    initial_objective: float
-    final_objective: float
-    construction_seconds: float
-    search_seconds: float
-    search_stats: SearchStats | None
-
-    @property
-    def improvement(self) -> float:
-        if self.initial_objective == 0:
-            return 0.0
-        return 1.0 - self.final_objective / self.initial_objective
-
-
-# device-engine sweep budget per preconfiguration when the spec leaves
-# max_sweeps=None — the same flag that tunes the partitioner and the
-# multilevel pyramid (eco keeps the engine's historical default of 64)
-_PRECONF_SWEEPS = {"fast": 32, "eco": 64, "strong": 128}
-
-# default caps for the session caches (override via Mapper(cache_caps=...))
-_DEFAULT_CACHE_CAPS = {"pairs": 16, "engines": 8, "kernels": 32,
+# default caps for the session caches (override via Mapper(cache_caps=...)):
+# "plans" bounds the Mapper's one plan LRU; "engines" bounds the shared
+# engine pool plans draw from; "pairs"/"pyramids" bound each plan's
+# per-request graph-content caches
+_DEFAULT_CACHE_CAPS = {"plans": 8, "engines": 8, "pairs": 16,
                        "pyramids": 8}
-
-
-class _LRU:
-    """Bounded LRU mapping with visible accounting: ``builds`` counts
-    misses, ``hits`` counts reuses, ``evictions`` counts entries dropped
-    at the cap — all surfaced through ``Mapper.cache_info()`` so
-    long-lived ``serve()`` sessions can assert their memory stays
-    bounded as request shapes vary."""
-
-    def __init__(self, cap: int):
-        self.cap = int(cap)
-        self.builds = 0
-        self.hits = 0
-        self.evictions = 0
-        self._data: OrderedDict = OrderedDict()
-
-    def __len__(self) -> int:
-        return len(self._data)
-
-    def get_or_build(self, key, build):
-        val = self._data.get(key)
-        if val is not None:
-            self._data.move_to_end(key)
-            self.hits += 1
-            return val
-        val = build()
-        self.builds += 1
-        self._data[key] = val
-        while len(self._data) > self.cap:
-            self._data.popitem(last=False)
-            self.evictions += 1
-        return val
-
-
-# ------------------------------------------------------------- kernel cache
-class _KernelCache:
-    """Session cache of jitted Pallas entry points, keyed by the static
-    arguments that force a recompile (the topology's ``kernel_params()``
-    + shapes).  ``compiles`` counts cache misses — the number of distinct
-    kernel configurations this session prepared.  Each miss corresponds to
-    at most one XLA compile on first call (jax's process-global jit cache
-    dedups across sessions), so it upper-bounds real compiles.  LRU-
-    bounded: ``evictions`` counts entries dropped at the cap."""
-
-    def __init__(self, cap: int = 32):
-        self._fns = _LRU(cap)
-
-    @property
-    def compiles(self) -> int:
-        return self._fns.builds
-
-    @property
-    def evictions(self) -> int:
-        return self._fns.evictions
-
-    @staticmethod
-    def _interpret() -> bool:
-        import jax
-        return jax.default_backend() != "tpu"
-
-    def objective_edges(self, topology, n_edges: int):
-        """Edge-list objective entry for the topology's device-side
-        distance form: closed-form tree/torus oracles computed in-register,
-        or the gather path against the materialized matrix."""
-        kp = topology.kernel_params()
-        key = ("qap_edges", kp, int(n_edges))
-        return self._fns.get_or_build(
-            key, lambda: self._build_objective_edges(topology, kp))
-
-    def _build_objective_edges(self, topology, kp):
-        from ..kernels import qap_objective as qk
-        kind = kp[0]
-        interpret = self._interpret()
-        if kind == "tree":
-            _, strides, dists = kp
-            return functools.partial(qk.qap_objective_edges,
-                                     strides=strides, dists=dists,
-                                     interpret=interpret)
-        if kind == "torus":
-            _, dims, weights = kp
-            return functools.partial(qk.qap_objective_edges_torus,
-                                     dims=dims, weights=weights,
-                                     interpret=interpret)
-        if kind == "matrix":
-            import jax.numpy as jnp
-            D = jnp.asarray(topology.matrix(), jnp.float32)
-            return functools.partial(qk.qap_objective_edges_matrix, D=D,
-                                     interpret=interpret)
-        raise ValueError(f"unknown kernel_params kind {kind!r}")
-
-    def swap_gain_matrix(self, n: int):
-        from ..kernels.swap_gain import swap_gain_matrix
-        return self._fns.get_or_build(
-            ("swap_gain", int(n)),
-            lambda: functools.partial(swap_gain_matrix,
-                                      interpret=self._interpret()))
-
-
-def _structure_key(g: CommGraph, with_weights: bool = False) -> tuple:
-    """Adjacency-structure fingerprint; weights are included only for
-    neighborhoods that declare ``weight_dependent`` (none of the built-ins
-    read them, so same-structure batches share one candidate set)."""
-    key = (g.n, int(g.xadj[-1]), hash(g.xadj.tobytes()),
-           hash(g.adjncy.tobytes()))
-    if with_weights:
-        key += (hash(np.asarray(g.adjwgt).tobytes()),)
-    return key
 
 
 # ------------------------------------------------------------------ session
@@ -190,10 +65,11 @@ class Mapper:
 
     ``machine`` is a legacy :class:`Hierarchy` (wrapped into the ``tree``
     topology — results bit-for-bit identical) or any
-    :class:`~repro.topology.Topology`.  Construction cost (oracle build,
-    kernel compiles, neighborhood pair generation) is paid once and reused
-    by every subsequent ``map`` / ``map_many`` / ``serve`` request — the
-    point of a session object over the one-shot :func:`map_processes`.
+    :class:`~repro.topology.Topology`.  The session stages every request
+    through the ``lower → MappingPlan → execute`` pipeline: ``lower``
+    pays all graph-independent cost once per (spec, bucket) and the plan
+    cache hands the compiled artifact back to every subsequent request —
+    the point of a session object.
     """
 
     def __init__(self, machine, spec: MappingSpec | None = None,
@@ -206,10 +82,6 @@ class Mapper:
         self.h = self.topology
         self.spec = (spec or MappingSpec()).validate()
         self.oracle, self._oracle_builds = self._claim_oracle()
-        # every session cache is LRU-bounded (serve() sessions are
-        # long-lived and must not grow without limit as shapes vary);
-        # caps are per-cache configurable, evictions visible in
-        # cache_info()
         caps = dict(_DEFAULT_CACHE_CAPS)
         if cache_caps:
             unknown = sorted(set(cache_caps) - set(caps))
@@ -217,20 +89,46 @@ class Mapper:
                 raise ValueError(f"unknown cache_caps keys {unknown}; "
                                  f"known: {sorted(caps)}")
             caps.update(cache_caps)
-        self._kernels = _KernelCache(cap=caps["kernels"])
-        # device refinement engines, one per (kernel_params, max_sweeps) —
-        # the multilevel V-cycle adds one per coarse level
-        self._engines = _LRU(caps["engines"])
-        # candidate-pair arrays can reach max_pairs entries (~32 MB each)
-        self._pair_cache = _LRU(caps["pairs"])
-        # multilevel level pyramids, one per (graph structure+weights,
-        # V-cycle knobs, neighborhood knobs)
-        self._pyramids = _LRU(caps["pyramids"])
-        # machine-side coarse models (graph-independent): level l pairs
-        # the PEs (2b, 2b+1) of level l-1 — grown lazily, shared by every
-        # pyramid over this machine
+        self._plan_caps = {"pairs": caps["pairs"],
+                          "pyramids": caps["pyramids"]}
+        # THE session cache: lowered plans keyed by (seed-free spec,
+        # bucket).  Evicted plans retire their counters into _retired so
+        # cache_info() stays monotone.
+        self._retired: Counter = Counter()
+        self._plans = _LRU(caps["plans"], on_evict=self._retire_plan)
+        # engines are bucket-agnostic compiled resources (the bucket is
+        # a per-call argument), so plans over the same (machine kernel
+        # form, sweep budget) share one instance — without this, mixed
+        # tight-bucket traffic rotating past the plan cap would rebuild
+        # jit wrappers (and re-trace) on every lower.  LRU-bounded like
+        # every session cache (live plans keep their engine references
+        # even past a pool eviction; the pool only controls sharing).
+        self._engine_pool = _LRU(caps["engines"])
+        # machine-side coarse pyramid (graph-independent, fixed by the
+        # topology): grown lazily, shared by every multilevel plan
         self._ml_machines: list = [self.topology]
         self._requests = 0
+
+    def _shared_engine(self, machine, max_sweeps: int):
+        """Plan engine factory: one RefinementEngine per (machine kernel
+        form — content-fingerprinted for matrices, sweep budget), shared
+        by every plan this session lowers.  Returns (engine, built)."""
+        from ..engine import RefinementEngine
+        before = self._engine_pool.builds
+        eng = self._engine_pool.get_or_build(
+            (machine.kernel_params(), int(max_sweeps)),
+            lambda: RefinementEngine(machine, max_sweeps=max_sweeps))
+        return eng, self._engine_pool.builds > before
+
+    def _coarse_machines(self, depth: int) -> list:
+        """The machine-side pyramid up to ``depth`` levels — level l
+        pairs the PEs (2b, 2b+1) of level l-1.  Coarsening materializes
+        O(n²) coarse distance matrices, so the chain is built once per
+        session and shared by every plan over this machine."""
+        from ..multilevel.coarsen import coarsen_machine
+        while len(self._ml_machines) < depth:
+            self._ml_machines.append(coarsen_machine(self._ml_machines[-1]))
+        return self._ml_machines[:depth]
 
     @classmethod
     def from_spec(cls, spec: MappingSpec) -> "Mapper":
@@ -254,109 +152,127 @@ class Mapper:
         topo._oracle_claimed = True
         return topo, 0 if already else 1
 
+    # ------------------------------------------------------------ stage 1
+    def bucket_of(self, g: CommGraph,
+                  schedule: str = "tight") -> ShapeBucket:
+        """The :class:`ShapeBucket` this graph pads into under
+        ``schedule`` (``tight`` reproduces the exact per-graph device
+        shapes; ``pow2`` is the coarse serving schedule)."""
+        return ShapeBucket.of(g, schedule=schedule)
+
+    def lower(self, bucket: ShapeBucket | None,
+              spec: MappingSpec | None = None) -> MappingPlan:
+        """Stage 1: fetch-or-build the lowered :class:`MappingPlan` for
+        (spec, bucket).  The plan cache key drops the spec's seed — the
+        seed is a runtime input of ``plan.execute`` and shares the
+        compiled artifact across values."""
+        spec = self.spec if spec is None else spec.validate()
+        return self._plans.get_or_build(
+            self._plan_key(spec, bucket),
+            lambda: MappingPlan(self.topology, spec, bucket,
+                                cache_caps=self._plan_caps,
+                                engine_factory=self._shared_engine,
+                                machine_factory=self._coarse_machines))
+
+    def lower_for(self, g: CommGraph, spec: MappingSpec | None = None,
+                  schedule: str = "tight") -> MappingPlan:
+        """``lower`` with the bucket derived from a concrete graph."""
+        self._check_size(g)
+        return self.lower(self.bucket_of(g, schedule=schedule), spec)
+
+    @staticmethod
+    def _plan_key(spec: MappingSpec, bucket: ShapeBucket | None) -> tuple:
+        d = spec.to_dict()
+        d.pop("seed")
+        return (json.dumps(d, sort_keys=True), bucket)
+
+    def _retire_plan(self, plan: MappingPlan) -> None:
+        self._retired.update(plan.cache_info())
+
     # ------------------------------------------------------------- caching
     def cache_info(self) -> dict:
-        """Counters for the session's amortized state: how many distance
-        oracles were built, kernels compiled, engines constructed, and
-        pyramids coarsened on this session's behalf, plus cache hits,
-        LRU evictions, and requests served."""
+        """Session amortization counters: the plan cache
+        (builds = lowers, hits, evictions, per-bucket breakdown) plus the
+        per-plan counters aggregated across live and retired plans —
+        engines constructed, kernels compiled, candidate-pair and pyramid
+        cache traffic — and requests served."""
+        agg = Counter(self._retired)
+        per_bucket: dict = {}
+        # snapshot first: a MappingService worker may lower/evict plans
+        # concurrently with a monitoring thread calling cache_info(),
+        # and list() of the dict view is atomic under the GIL while the
+        # explicit loop below is not
+        for (spec_key, bucket), plan in list(self._plans.items()):
+            info = plan.cache_info()
+            agg.update(info)
+            tag = "dynamic" if bucket is None else bucket.tag()
+            while tag in per_bucket:
+                tag += "'"               # same bucket, different spec
+            per_bucket[tag] = info
         return {
             "oracle_builds": self._oracle_builds,
-            "kernel_compiles": self._kernels.compiles,
-            "kernel_evictions": self._kernels.evictions,
-            "engine_builds": self._engines.builds,
-            "engine_evictions": self._engines.evictions,
-            "pair_cache_hits": self._pair_cache.hits,
-            "pair_cache_evictions": self._pair_cache.evictions,
-            "pyramid_builds": self._pyramids.builds,
-            "pyramid_hits": self._pyramids.hits,
-            "pyramid_evictions": self._pyramids.evictions,
+            "plan_builds": self._plans.builds,
+            "plan_hits": self._plans.hits,
+            "plan_evictions": self._plans.evictions,
+            "plans": per_bucket,
+            "engine_pool_evictions": self._engine_pool.evictions,
+            "engine_builds": agg["engine_builds"],
+            "kernel_compiles": agg["kernel_compiles"],
+            "pair_cache_builds": agg["pair_builds"],
+            "pair_cache_hits": agg["pair_hits"],
+            "pair_cache_evictions": agg["pair_evictions"],
+            "pyramid_builds": agg["pyramid_builds"],
+            "pyramid_hits": agg["pyramid_hits"],
+            "pyramid_evictions": agg["pyramid_evictions"],
             "requests": self._requests,
         }
 
-    def _sweep_budget(self, spec: MappingSpec) -> int:
-        """Device-engine sweep budget: the spec's explicit ``max_sweeps``,
-        else the preconfiguration's (fast 32, eco 64, strong 128)."""
-        if spec.max_sweeps is not None:
-            return spec.max_sweeps
-        return _PRECONF_SWEEPS.get(spec.preconfiguration, 64)
-
-    def _engine(self, spec: MappingSpec, machine=None):
-        """The session's device refinement engine for this spec — built
-        once per (machine kernel form, sweep budget) and reused by every
-        subsequent device-engine request (jax re-specializes per shape
-        under the hood, so same-shape graphs share one executable).
-        ``machine`` defaults to the session topology; the multilevel
-        V-cycle passes its coarse machines, whose engines land in the
-        same LRU cache."""
-        machine = self.topology if machine is None else machine
-        max_sweeps = self._sweep_budget(spec)
-        key = (machine.kernel_params(), max_sweeps)
-
-        def build():
-            from ..engine import RefinementEngine
-            return RefinementEngine(machine, max_sweeps=max_sweeps)
-
-        return self._engines.get_or_build(key, build)
-
-    def _pairs(self, g: CommGraph, spec: MappingSpec) -> np.ndarray:
-        nb = resolve_neighborhood(spec.neighborhood)
-        # unseeded (deterministic) generators share one cache entry
-        # across seeds — only genuinely randomized ones key on the seed
-        key = (spec.neighborhood, spec.neighborhood_dist,
-               spec.seed if nb.seeded else None,
-               spec.max_pairs) + _structure_key(g, nb.weight_dependent)
-        return self._pair_cache.get_or_build(
-            key, lambda: nb.generate(g, dist=spec.neighborhood_dist,
-                                     seed=spec.seed,
-                                     max_pairs=spec.max_pairs))
-
     # ----------------------------------------------------------- objective
+    def _eval_plan(self, spec: MappingSpec) -> MappingPlan:
+        """A lean evaluation-only plan (no engines, no pyramid, dynamic
+        bucket — one entry shared across every graph shape): standalone
+        objective/gain evaluations only depend on (machine, backend), so
+        they must not lower full pipelines that would churn hot serving
+        plans out of the cache."""
+        spec = spec.replace(neighborhood=None, engine="host",
+                            multilevel=None, parallel_sweeps=False)
+        return self.lower(None, spec)
+
     def objective(self, g: CommGraph, perm: np.ndarray,
                   spec: MappingSpec | None = None) -> float:
         """J(C, D, Π) via the spec's backend: ``numpy`` host evaluation or
-        the cached Pallas edge-list kernel (``pallas``)."""
-        spec = spec or self.spec
-        if spec.backend == "pallas":
-            u, v, w = g.edge_list()
-            fn = self._kernels.objective_edges(self.topology, len(u))
-            perm = np.asarray(perm, dtype=np.int64)
-            return float(fn(perm[u].astype(np.int32),
-                            perm[v].astype(np.int32),
-                            w.astype(np.float32)))
-        return qap_objective(g, self.h, perm)
+        the plan's compiled Pallas edge-list kernel (``pallas``)."""
+        spec = self.spec if spec is None else spec.validate()
+        return self._eval_plan(spec).objective(g, perm)
 
     def gain_matrix(self, g: CommGraph, perm: np.ndarray,
                     spec: MappingSpec | None = None) -> np.ndarray:
         """Full pair-exchange gain matrix via the spec's backend (dense —
-        small/medium n).  The pallas path reuses the session's cached
-        distance matrix and compiled swap-gain kernel."""
-        spec = spec or self.spec
-        perm = np.asarray(perm, dtype=np.int64)
-        D = self.oracle.matrix()
-        if spec.backend == "pallas":
-            C = g.to_dense()
-            B = D[np.ix_(perm, perm)]
-            fn = self._kernels.swap_gain_matrix(g.n)
-            return np.asarray(fn(C, B))
-        return dense_gain_matrix(g.to_dense(), D, perm)
+        small/medium n)."""
+        spec = self.spec if spec is None else spec.validate()
+        return self._eval_plan(spec).gain_matrix(g, perm)
 
     # ----------------------------------------------------------------- map
     def map(self, g: CommGraph, spec: MappingSpec | None = None
             ) -> MappingResult:
-        """Compute a process→PE mapping for one graph."""
+        """Compute a process→PE mapping for one graph: lower-or-fetch the
+        plan for the graph's tight bucket, then ``execute`` — stage 2 is
+        the whole per-request cost."""
         spec = self.spec if spec is None else spec.validate()
-        return self._map_one(g, spec)
+        self._check_size(g)
+        self._requests += 1
+        plan = self.lower(self.bucket_of(g), spec)
+        return plan.execute(g, seed=spec.seed)
 
     def map_many(self, graphs, spec: MappingSpec | None = None
                  ) -> list[MappingResult]:
-        """Map a batch of same-shape graphs through one session.
+        """Map a batch of graphs through one plan.
 
         Graphs must agree on process count (and therefore PE count); the
-        hierarchy oracle, compiled kernels, and — for structurally
-        identical graphs — the candidate-pair neighborhoods are computed
-        once and shared across the whole batch.  Results are identical to
-        per-graph :meth:`map` calls.
+        batch is lowered into the union bucket, so device-engine batches
+        run as ONE vmapped executable call.  Results are identical to
+        per-graph :meth:`map` calls up to the engine's inert-padding
+        invariants.
         """
         graphs = list(graphs)
         if not graphs:
@@ -366,172 +282,20 @@ class Mapper:
             raise ValueError(f"map_many requires same-shape graphs; got "
                              f"process counts {sorted(ns)}")
         spec = self.spec if spec is None else spec.validate()
-        ml = spec.resolved_multilevel()
-        if ml is not None:
-            return self._map_many_multilevel(graphs, spec, ml)
-        if spec.engine == "device" and spec.neighborhood is not None:
-            return self._map_many_device(graphs, spec)
-        return [self._map_one(g, spec) for g in graphs]
+        for g in graphs:
+            self._check_size(g)
+        self._requests += len(graphs)
+        bucket = self.bucket_of(graphs[0])
+        for g in graphs[1:]:
+            bucket = bucket.union(self.bucket_of(g))
+        return self.lower(bucket, spec).execute_batch(graphs,
+                                                      seed=spec.seed)
 
-    def _map_many_device(self, graphs, spec: MappingSpec
-                         ) -> list[MappingResult]:
-        """Batch path for the device engine: constructions and candidate
-        pairs per graph on host (cached as usual), then ONE vmapped
-        engine call refines the whole batch — no Python loop over sweeps
-        or graphs.  Padding to the batch's common shapes is inert, so
-        results match per-graph :meth:`map` calls."""
-        prepped = [self._construct(g, spec) for g in graphs]
-        perms = [perm for perm, _, _ in prepped]
-        # timed window matches _map_one's: pair generation + refinement
-        t1 = time.perf_counter()
-        pairs_list = [self._pairs(g, spec) for g in graphs]
-        stats_list = self._engine(spec).refine_batch(
-            graphs, perms, pairs_list, j0s=[j0 for _, _, j0 in prepped])
-        t_search = (time.perf_counter() - t1) / len(graphs)
-        return [self._finish(g, perm, j0, t_cons, t_search, stats, spec)
-                for g, (perm, t_cons, j0), stats
-                in zip(graphs, prepped, stats_list)]
-
-    def _construct(self, g: CommGraph, spec: MappingSpec
-                   ) -> tuple[np.ndarray, float, float]:
-        """Shared per-graph prep for the single and batch paths: size
-        check, request accounting, timed construction, and the initial
-        objective through the spec's backend."""
-        self._check_size(g)
-        self._requests += 1
-        construct_fn = resolve_construction(spec.construction)
-        cfg = PartitionConfig.preconfiguration(spec.preconfiguration)
-        t0 = time.perf_counter()
-        perm = construct_fn(g, self.h, seed=spec.seed, cfg=cfg)
-        return perm, time.perf_counter() - t0, self.objective(g, perm, spec)
-
-    def _finish(self, g: CommGraph, perm: np.ndarray, j0: float,
-                t_cons: float, t_search: float, stats: SearchStats | None,
-                spec: MappingSpec) -> MappingResult:
-        """Shared result assembly: the final objective is the search's
-        incremental host float64 value on the ``numpy`` backend
-        (legacy-identical) and recomputed through the session backend
-        otherwise, so j0 and jf stay comparable."""
-        if stats is None:
-            jf = j0
-        elif spec.backend == "numpy":
-            jf = stats.final_objective
-        else:
-            jf = self.objective(g, perm, spec)
-        return MappingResult(perm=perm, initial_objective=j0,
-                             final_objective=jf,
-                             construction_seconds=t_cons,
-                             search_seconds=t_search, search_stats=stats)
-
-    # ------------------------------------------------------------ multilevel
     def _check_size(self, g: CommGraph) -> None:
         if g.n != self.h.n_pe:
             raise ValueError(f"graph has {g.n} processes but the machine "
                              f"has {self.h.n_pe} PEs — they must match "
                              f"(guide §4.1)")
-
-    def _coarse_machines(self, depth: int) -> list:
-        """The machine-side pyramid up to ``depth`` levels, grown lazily
-        and shared by every graph pyramid over this machine."""
-        from ..multilevel.coarsen import coarsen_machine
-        while len(self._ml_machines) < depth:
-            self._ml_machines.append(coarsen_machine(self._ml_machines[-1]))
-        return self._ml_machines[:depth]
-
-    def _pyramid(self, g: CommGraph, spec: MappingSpec,
-                 ml: tuple[int, int]) -> list:
-        """The graph-side level pyramid, LRU-cached per (graph structure
-        *and weights* — the heavy-edge matching reads them, V-cycle
-        knobs, neighborhood knobs)."""
-        from ..multilevel.coarsen import build_pyramid, pyramid_depth
-        levels, cmin = ml
-        machines = self._coarse_machines(pyramid_depth(g.n, levels, cmin))
-        if spec.neighborhood is None:
-            nb = None
-            pair_fn = lambda gg: np.zeros((0, 2), np.int64)  # noqa: E731
-        else:
-            nb = resolve_neighborhood(spec.neighborhood)
-            pair_fn = lambda gg: nb.generate(       # noqa: E731
-                gg, dist=spec.neighborhood_dist, seed=spec.seed,
-                max_pairs=spec.max_pairs)
-        key = (("pyramid", levels, cmin, spec.neighborhood,
-                spec.neighborhood_dist, spec.max_pairs,
-                spec.seed if (nb is not None and nb.seeded) else None)
-               + _structure_key(g, with_weights=True))
-        return self._pyramids.get_or_build(
-            key, lambda: build_pyramid(g, machines, levels, cmin, pair_fn))
-
-    def _map_one_multilevel(self, g: CommGraph, spec: MappingSpec,
-                            ml: tuple[int, int]) -> MappingResult:
-        """The coarsen → map → uncoarsen V-cycle (:mod:`repro.multilevel`):
-        construction runs on the coarsest level, the device engine
-        refines every level on the way down.  The reported initial
-        objective is the projected (pre-refinement) finest-level
-        objective — the multilevel construction's value."""
-        from ..multilevel import vcycle_map
-        self._check_size(g)
-        self._requests += 1
-        pyramid = self._pyramid(g, spec, ml)
-        cfg = PartitionConfig.preconfiguration(spec.preconfiguration)
-        construct_fn = resolve_construction(spec.construction)
-        t0 = time.perf_counter()
-        res = vcycle_map(
-            pyramid, lambda m: self._engine(spec, m), construct_fn, cfg,
-            seed=spec.seed,
-            objective0=lambda gg, pp: self.objective(gg, pp, spec))
-        t_search = time.perf_counter() - t0 - res.construction_seconds
-        return self._finish(g, res.perm, res.initial_objective,
-                            res.construction_seconds, t_search, res.stats,
-                            spec)
-
-    def _map_many_multilevel(self, graphs, spec: MappingSpec,
-                             ml: tuple[int, int]) -> list[MappingResult]:
-        """Batched V-cycles: the forced perfect pairing gives every
-        same-n graph the same level geometry, so each level's refinement
-        runs as ONE vmapped engine call across the whole batch."""
-        from ..multilevel import vcycle_map_batch
-        for g in graphs:
-            self._check_size(g)
-        self._requests += len(graphs)
-        pyramids = [self._pyramid(g, spec, ml) for g in graphs]
-        cfg = PartitionConfig.preconfiguration(spec.preconfiguration)
-        construct_fn = resolve_construction(spec.construction)
-        t0 = time.perf_counter()
-        results = vcycle_map_batch(
-            pyramids, lambda m: self._engine(spec, m), construct_fn, cfg,
-            seed=spec.seed,
-            objective0=lambda gg, pp: self.objective(gg, pp, spec))
-        elapsed = (time.perf_counter() - t0) / len(graphs)
-        return [self._finish(g, r.perm, r.initial_objective,
-                             r.construction_seconds,
-                             elapsed - r.construction_seconds, r.stats,
-                             spec)
-                for g, r in zip(graphs, results)]
-
-    # ------------------------------------------------------------- flat map
-    def _map_one(self, g: CommGraph, spec: MappingSpec) -> MappingResult:
-        ml = spec.resolved_multilevel()
-        if ml is not None:
-            return self._map_one_multilevel(g, spec, ml)
-        perm, t_cons, j0 = self._construct(g, spec)
-        stats = None
-        t1 = time.perf_counter()
-        if spec.neighborhood is not None:
-            nb = resolve_neighborhood(spec.neighborhood)
-            pairs = self._pairs(g, spec)
-            kw = {} if spec.max_sweeps is None else \
-                {"max_sweeps": spec.max_sweeps}
-            if spec.engine == "device":
-                stats = self._engine(spec).refine(g, perm, pairs, j0=j0)
-            elif spec.parallel_sweeps:
-                stats = parallel_sweep_search(g, self.h, perm, pairs,
-                                              seed=spec.seed, **kw)
-            else:
-                stats = _cyclic_search(g, self.h, perm, pairs,
-                                       shuffle=nb.shuffle, seed=spec.seed,
-                                       **kw)
-        t_search = time.perf_counter() - t1
-        return self._finish(g, perm, j0, t_cons, t_search, stats, spec)
 
     # --------------------------------------------------------------- serve
     def serve(self, requests: "queue.Queue | None" = None,
@@ -542,8 +306,9 @@ class Mapper:
 
 class MapperService:
     """Request-queue serving hook: a daemon thread drains graphs through
-    one :class:`Mapper` session, so hierarchy-oracle and kernel setup are
-    paid once for the whole queue (wired into ``repro.launch.serve``).
+    one :class:`Mapper` session, so plan lowering (oracle, kernels,
+    engines) is paid once for the whole queue.  For shape-bucketed
+    dynamic batching use :class:`repro.launch.serve.MappingService`.
 
     ``submit(g)`` returns a ticket; ``(ticket, MappingResult)`` tuples (or
     ``(ticket, Exception)`` on per-request failure) arrive on ``results``.
@@ -598,30 +363,3 @@ class MapperService:
 
     def __exit__(self, *exc):
         self.close()
-
-
-# ------------------------------------------------------------- legacy shim
-def map_processes(g: CommGraph, h: Hierarchy,
-                  construction_algorithm: str = "hierarchytopdown",
-                  local_search_neighborhood: str | None = "communication",
-                  communication_neighborhood_dist: int = 10,
-                  preconfiguration_mapping: str = "eco",
-                  parallel_sweeps: bool = False,
-                  seed: int = 0) -> MappingResult:
-    """Deprecated one-shot API — use ``Mapper(h, MappingSpec(...)).map(g)``.
-
-    Results are identical; the session API additionally amortizes oracle,
-    kernel, and neighborhood setup across calls."""
-    warnings.warn(
-        "map_processes() is deprecated; build a MappingSpec and use "
-        "Mapper(h, spec).map(g) — identical results, reusable session "
-        "state. map_processes() will be removed in a future release.",
-        DeprecationWarning, stacklevel=2)
-    spec = MappingSpec(
-        construction=construction_algorithm,
-        neighborhood=local_search_neighborhood,
-        neighborhood_dist=communication_neighborhood_dist,
-        preconfiguration=preconfiguration_mapping,
-        parallel_sweeps=parallel_sweeps,
-        seed=seed)
-    return Mapper(h, spec).map(g)

@@ -1,0 +1,539 @@
+"""`MappingPlan` — the frozen AOT artifact between ``Mapper.lower()`` and
+the zero-recompile ``execute()`` hot path.
+
+The guide's workflow is "build the machine model once, map many
+communication graphs against it"; the staged API makes that split
+explicit:
+
+    plan = mapper.lower(ShapeBucket.of(g))      # AOT: resolve + compile
+    result = plan.execute(g)                    # hot path: pad + run
+    results = plan.execute_batch(graphs)        # one vmapped device call
+
+``lower`` resolves *everything* that does not depend on the individual
+graph — the construction/neighborhood registry handles, the partition
+config, the multilevel machine pyramid and its coarse machines, one
+:class:`~repro.engine.RefinementEngine` per level (jitted executables),
+and the Pallas objective kernel for the ``pallas`` backend — so
+``execute`` does no registry resolution, no cache lookups, and no
+host-side reconstruction: it pads the graph into the plan's
+:class:`~repro.core.spec.ShapeBucket` (inert by the DeviceGraph padding
+invariants, so results are bit-identical to exact shapes) and runs the
+compiled pipeline.  The seed is a *runtime* input (``execute(g, seed=)``)
+— nothing compiled depends on it — which is why a Mapper session keys
+its plan cache on the seed-free spec.
+
+A plan is portable: ``to_json()``/``save()`` serialize its
+:class:`~repro.core.spec.PlanSpec` (spec + machine model + bucket), and
+``from_json()``/``load()``/pickle rebuild the live plan — same machine,
+same level geometry, same kernel forms — in a fresh process, reproducing
+the original mappings bit-for-bit.  ``describe()`` reports what was
+compiled without executing anything (the ``viem --explain`` surface).
+"""
+
+from __future__ import annotations
+
+import json
+import time
+from collections import OrderedDict
+from dataclasses import dataclass
+
+import numpy as np
+
+from .construction import resolve_construction
+from .graph import CommGraph
+from .local_search import (SearchStats, _cyclic_search,
+                           parallel_sweep_search, resolve_neighborhood)
+from .objective import dense_gain_matrix, qap_objective
+from .partition import PartitionConfig
+from .spec import MappingSpec, PlanSpec, ShapeBucket, TopologySpec
+
+
+@dataclass
+class MappingResult:
+    perm: np.ndarray
+    initial_objective: float
+    final_objective: float
+    construction_seconds: float
+    search_seconds: float
+    search_stats: SearchStats | None
+
+    @property
+    def improvement(self) -> float:
+        if self.initial_objective == 0:
+            return 0.0
+        return 1.0 - self.final_objective / self.initial_objective
+
+
+# device-engine sweep budget per preconfiguration when the spec leaves
+# max_sweeps=None — the same flag that tunes the partitioner and the
+# multilevel pyramid (eco keeps the engine's historical default of 64)
+_PRECONF_SWEEPS = {"fast": 32, "eco": 64, "strong": 128}
+
+
+def sweep_budget(spec: MappingSpec) -> int:
+    """Device-engine sweep budget: the spec's explicit ``max_sweeps``,
+    else the preconfiguration's (fast 32, eco 64, strong 128)."""
+    if spec.max_sweeps is not None:
+        return spec.max_sweeps
+    return _PRECONF_SWEEPS.get(spec.preconfiguration, 64)
+
+
+class _LRU:
+    """Bounded LRU mapping with visible accounting: ``builds`` counts
+    misses, ``hits`` counts reuses, ``evictions`` counts entries dropped
+    at the cap — surfaced through ``cache_info()`` so long-lived serving
+    sessions can assert their memory stays bounded as requests vary."""
+
+    def __init__(self, cap: int, on_evict=None):
+        self.cap = int(cap)
+        self.builds = 0
+        self.hits = 0
+        self.evictions = 0
+        self._on_evict = on_evict
+        self._data: OrderedDict = OrderedDict()
+
+    def __len__(self) -> int:
+        return len(self._data)
+
+    def values(self):
+        return self._data.values()
+
+    def items(self):
+        return self._data.items()
+
+    def clear(self):
+        self._data.clear()
+
+    def get_or_build(self, key, build):
+        val = self._data.get(key)
+        if val is not None:
+            self._data.move_to_end(key)
+            self.hits += 1
+            return val
+        val = build()
+        self.builds += 1
+        self._data[key] = val
+        while len(self._data) > self.cap:
+            _, dropped = self._data.popitem(last=False)
+            self.evictions += 1
+            if self._on_evict is not None:
+                self._on_evict(dropped)
+        return val
+
+
+def _structure_key(g: CommGraph, with_weights: bool = False) -> tuple:
+    """Adjacency-structure fingerprint; weights are included only for
+    neighborhoods that declare ``weight_dependent`` (none of the built-ins
+    read them, so same-structure requests share one candidate set)."""
+    key = (g.n, int(g.xadj[-1]), hash(g.xadj.tobytes()),
+           hash(g.adjncy.tobytes()))
+    if with_weights:
+        key += (hash(np.asarray(g.adjwgt).tobytes()),)
+    return key
+
+
+def build_objective_kernel(topology, interpret: bool | None = None):
+    """The edge-list QAP objective entry for the topology's device-side
+    distance form: closed-form tree/torus oracles computed in-register,
+    or the gather path against the materialized matrix."""
+    import functools
+
+    from ..kernels import qap_objective as qk
+    if interpret is None:
+        import jax
+        interpret = jax.default_backend() != "tpu"
+    kp = topology.kernel_params()
+    kind = kp[0]
+    if kind == "tree":
+        _, strides, dists = kp
+        return functools.partial(qk.qap_objective_edges, strides=strides,
+                                 dists=dists, interpret=interpret)
+    if kind == "torus":
+        _, dims, weights = kp
+        return functools.partial(qk.qap_objective_edges_torus, dims=dims,
+                                 weights=weights, interpret=interpret)
+    if kind == "matrix":
+        import jax.numpy as jnp
+        D = jnp.asarray(topology.matrix(), jnp.float32)
+        return functools.partial(qk.qap_objective_edges_matrix, D=D,
+                                 interpret=interpret)
+    raise ValueError(f"unknown kernel_params kind {kind!r}")
+
+
+_PLAN_CACHE_CAPS = {"pairs": 16, "pyramids": 8}
+
+
+class MappingPlan:
+    """One lowered (machine × spec × bucket) pipeline — see module
+    docstring.  Build via ``Mapper.lower(...)`` (session-cached) or
+    directly; rebuild a serialized plan with ``from_dict``/``load``."""
+
+    def __init__(self, machine, spec: MappingSpec | None = None,
+                 bucket: ShapeBucket | None = None,
+                 cache_caps: dict | None = None, engine_factory=None,
+                 machine_factory=None):
+        from ..topology.base import as_topology
+        self.topology = as_topology(machine)
+        self.spec = (spec or MappingSpec()).validate()
+        self.bucket = None if bucket is None else bucket.validate()
+        caps = dict(_PLAN_CACHE_CAPS)
+        caps.update(cache_caps or {})
+        # --- stage 1 (lower): resolve every handle the hot path needs
+        self._construct = resolve_construction(self.spec.construction)
+        self._cfg = PartitionConfig.preconfiguration(
+            self.spec.preconfiguration)
+        self._nb = (None if self.spec.neighborhood is None else
+                    resolve_neighborhood(self.spec.neighborhood))
+        self.max_sweeps = sweep_budget(self.spec)
+        self._ml = self.spec.resolved_multilevel()
+        # machine-side level pyramid: level l pairs the PEs (2b, 2b+1)
+        # of level l-1 (graph-independent, fixed by n and the V-cycle
+        # knobs — what makes the level geometry part of the AOT
+        # artifact).  ``machine_factory(depth)`` lets a Mapper session
+        # share the chain across plans (coarsening materializes O(n²)
+        # coarse distance matrices); a standalone plan builds its own.
+        machines = [self.topology]
+        if self._ml is not None:
+            from ..multilevel.coarsen import coarsen_machine, pyramid_depth
+            depth = pyramid_depth(self.topology.n_pe, *self._ml)
+            if machine_factory is not None:
+                machines = list(machine_factory(depth))
+            else:
+                for _ in range(depth - 1):
+                    machines.append(coarsen_machine(machines[-1]))
+        self.machines = machines
+        # one jitted engine per level (device engine only); jax compiles
+        # lazily on the first execute, then every same-bucket request
+        # reuses the executable.  ``engine_factory(machine, max_sweeps)
+        # -> (engine, built)`` lets a Mapper session pool engines across
+        # plans (they are bucket-agnostic — the bucket is a per-call
+        # argument), with ``built`` telling this plan whether to count
+        # the construction; a standalone plan builds its own.
+        self.engine_builds = 0
+        self.engines = None
+        if self.spec.engine == "device":
+            if engine_factory is None:
+                from ..engine import RefinementEngine
+
+                def engine_factory(m, sweeps):
+                    return RefinementEngine(m, max_sweeps=sweeps), True
+            self.engines = []
+            for m in machines:
+                eng, built = engine_factory(m, self.max_sweeps)
+                self.engine_builds += bool(built)
+                self.engines.append(eng)
+        self.kernel_compiles = 0
+        self._objective_fn = None
+        if self.spec.backend == "pallas":
+            self._objective_fn = build_objective_kernel(self.topology)
+            self.kernel_compiles += 1
+        self._swap_gain_fn = None
+        # --- per-request state (graph-content keyed, LRU-bounded)
+        self._pairs_lru = _LRU(caps["pairs"])
+        self._pyramids = _LRU(caps["pyramids"])
+        self.executes = 0
+
+    # -------------------------------------------------------------- describe
+    def describe(self) -> dict:
+        """Structured report of what was lowered/compiled — per level:
+        size, machine kind, device kernel form, sweep budget."""
+        n = self.topology.n_pe
+        levels = []
+        for i, m in enumerate(self.machines):
+            levels.append({
+                "level": i,
+                "n": n >> i,
+                "machine_kind": m.kind,
+                "kernel_form": m.kernel_params()[0],
+                "engine_compiled": self.engines is not None,
+                "max_sweeps": (self.max_sweeps if self.engines is not None
+                               else self.spec.max_sweeps),
+            })
+        return {
+            "machine": {"kind": self.topology.kind, "n_pe": n},
+            "bucket": None if self.bucket is None else self.bucket.to_dict(),
+            "construction": self.spec.construction,
+            "neighborhood": self.spec.neighborhood,
+            "neighborhood_dist": self.spec.neighborhood_dist,
+            "preconfiguration": self.spec.preconfiguration,
+            "engine": self.spec.engine,
+            "backend": self.spec.backend,
+            "multilevel": (None if self._ml is None else
+                           {"levels": self._ml[0],
+                            "coarsen_min": self._ml[1]}),
+            "levels": levels,
+            "compiled": {"engines": self.engine_builds,
+                         "kernels": self.kernel_compiles},
+        }
+
+    def cache_info(self) -> dict:
+        return {
+            "engine_builds": self.engine_builds,
+            "kernel_compiles": self.kernel_compiles,
+            "pair_builds": self._pairs_lru.builds,
+            "pair_hits": self._pairs_lru.hits,
+            "pair_evictions": self._pairs_lru.evictions,
+            "pyramid_builds": self._pyramids.builds,
+            "pyramid_hits": self._pyramids.hits,
+            "pyramid_evictions": self._pyramids.evictions,
+            "executes": self.executes,
+        }
+
+    def clear_request_caches(self) -> None:
+        """Drop all per-request state (candidate pairs, pyramids, device
+        uploads) while keeping the compiled artifacts — benchmarks use
+        this to time the full per-graph cost honestly."""
+        self._pairs_lru.clear()
+        self._pyramids.clear()
+        for eng in (self.engines or []):
+            eng._dg_cache.clear()
+            eng._pair_cache.clear()
+
+    # --------------------------------------------------------- serialization
+    def plan_spec(self) -> PlanSpec:
+        """The serializable identity (spec + machine + bucket)."""
+        mspec = self.spec
+        if mspec.topology is None:
+            mspec = mspec.replace(topology=TopologySpec.of(self.topology))
+        return PlanSpec(mapping=mspec, bucket=self.bucket).validate()
+
+    def to_dict(self) -> dict:
+        return self.plan_spec().to_dict()
+
+    def to_json(self) -> str:
+        return json.dumps(self.to_dict(), indent=2)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "MappingPlan":
+        ps = PlanSpec.from_dict(d).validate()
+        return cls(ps.mapping.topology.build(), ps.mapping, ps.bucket)
+
+    @classmethod
+    def from_json(cls, text: str) -> "MappingPlan":
+        return cls.from_dict(json.loads(text))
+
+    def save(self, path) -> None:
+        with open(path, "w") as fh:
+            fh.write(self.to_json())
+
+    @classmethod
+    def load(cls, path) -> "MappingPlan":
+        with open(path) as fh:
+            return cls.from_json(fh.read())
+
+    def __reduce__(self):
+        return (_plan_from_dict, (self.to_dict(),))
+
+    # ------------------------------------------------------------- hot path
+    def _check(self, g: CommGraph) -> None:
+        if g.n != self.topology.n_pe:
+            raise ValueError(f"graph has {g.n} processes but the machine "
+                             f"has {self.topology.n_pe} PEs — they must "
+                             f"match (guide §4.1)")
+        if self.bucket is not None and not self.bucket.admits(g):
+            raise ValueError(
+                f"graph (max_deg="
+                f"{int(np.diff(g.xadj).max(initial=0))}, "
+                f"E={g.num_edges}) exceeds the plan bucket "
+                f"{self.bucket.tag()} — lower a larger plan")
+
+    def _pairs(self, g: CommGraph, seed: int) -> np.ndarray:
+        nb = self._nb
+        # unseeded (deterministic) generators share one cache entry
+        # across seeds — only genuinely randomized ones key on the seed
+        key = ((seed if nb.seeded else None,)
+               + _structure_key(g, nb.weight_dependent))
+        return self._pairs_lru.get_or_build(
+            key, lambda: nb.generate(g, dist=self.spec.neighborhood_dist,
+                                     seed=seed,
+                                     max_pairs=self.spec.max_pairs))
+
+    def objective(self, g: CommGraph, perm: np.ndarray) -> float:
+        """J(C, D, Π) via the plan's backend: host numpy float64, or the
+        Pallas edge-list kernel compiled at lower time."""
+        if self._objective_fn is not None:
+            u, v, w = g.edge_list()
+            perm = np.asarray(perm, dtype=np.int64)
+            return float(self._objective_fn(perm[u].astype(np.int32),
+                                            perm[v].astype(np.int32),
+                                            w.astype(np.float32)))
+        return qap_objective(g, self.topology, perm)
+
+    def gain_matrix(self, g: CommGraph, perm: np.ndarray) -> np.ndarray:
+        """Full pair-exchange gain matrix via the plan's backend (dense —
+        small/medium n)."""
+        perm = np.asarray(perm, dtype=np.int64)
+        D = self.topology.matrix()
+        if self.spec.backend == "pallas":
+            if self._swap_gain_fn is None:
+                import functools
+
+                import jax
+
+                from ..kernels.swap_gain import swap_gain_matrix
+                self._swap_gain_fn = functools.partial(
+                    swap_gain_matrix,
+                    interpret=jax.default_backend() != "tpu")
+                self.kernel_compiles += 1
+            C = g.to_dense()
+            B = D[np.ix_(perm, perm)]
+            return np.asarray(self._swap_gain_fn(C, B))
+        return dense_gain_matrix(g.to_dense(), D, perm)
+
+    def _construct_one(self, g: CommGraph, seed: int
+                       ) -> tuple[np.ndarray, float, float]:
+        t0 = time.perf_counter()
+        perm = self._construct(g, self.topology, seed=seed, cfg=self._cfg)
+        return perm, time.perf_counter() - t0, self.objective(g, perm)
+
+    def _finish(self, g: CommGraph, perm: np.ndarray, j0: float,
+                t_cons: float, t_search: float,
+                stats: SearchStats | None) -> MappingResult:
+        """Result assembly: the final objective is the search's
+        incremental host float64 value on the ``numpy`` backend
+        (legacy-identical) and recomputed through the plan backend
+        otherwise, so j0 and jf stay comparable."""
+        if stats is None:
+            jf = j0
+        elif self.spec.backend == "numpy":
+            jf = stats.final_objective
+        else:
+            jf = self.objective(g, perm)
+        return MappingResult(perm=perm, initial_objective=j0,
+                             final_objective=jf,
+                             construction_seconds=t_cons,
+                             search_seconds=t_search, search_stats=stats)
+
+    def execute(self, g: CommGraph, seed: int | None = None
+                ) -> MappingResult:
+        """Map one graph through the lowered pipeline.  ``seed`` is the
+        runtime seed (defaults to the plan spec's) — it steers the
+        construction and any seeded neighborhood, never the compiled
+        artifacts."""
+        seed = self.spec.seed if seed is None else int(seed)
+        self._check(g)
+        self.executes += 1
+        if self._ml is not None:
+            return self._execute_multilevel(g, seed)
+        perm, t_cons, j0 = self._construct_one(g, seed)
+        stats = None
+        t1 = time.perf_counter()
+        if self._nb is not None:
+            pairs = self._pairs(g, seed)
+            kw = {} if self.spec.max_sweeps is None else \
+                {"max_sweeps": self.spec.max_sweeps}
+            if self.spec.engine == "device":
+                stats = self.engines[0].refine(g, perm, pairs, j0=j0,
+                                               bucket=self.bucket)
+            elif self.spec.parallel_sweeps:
+                stats = parallel_sweep_search(g, self.topology, perm,
+                                              pairs, seed=seed, **kw)
+            else:
+                stats = _cyclic_search(g, self.topology, perm, pairs,
+                                       shuffle=self._nb.shuffle,
+                                       seed=seed, **kw)
+        t_search = time.perf_counter() - t1
+        return self._finish(g, perm, j0, t_cons, t_search, stats)
+
+    def execute_batch(self, graphs, seed: int | None = None
+                      ) -> list[MappingResult]:
+        """Map a batch through one vmapped device dispatch per level.
+
+        Every graph must fit the plan bucket (they need not be
+        structurally identical — padding into the common bucket is
+        inert), so the whole batch shares the compiled executables."""
+        graphs = list(graphs)
+        if not graphs:
+            return []
+        seed = self.spec.seed if seed is None else int(seed)
+        if self._ml is not None:
+            for g in graphs:
+                self._check(g)
+            self.executes += len(graphs)
+            return self._execute_batch_multilevel(graphs, seed)
+        if self.spec.engine != "device" or self._nb is None:
+            return [self.execute(g, seed=seed) for g in graphs]
+        for g in graphs:
+            self._check(g)
+        self.executes += len(graphs)
+        # duplicate lanes (the service pads batches by cycling its tick's
+        # graphs) share one construction; every lane still gets its own
+        # perm array because the engine refines in place
+        memo: dict = {}
+        prepped = []
+        for g in graphs:
+            hit = memo.get(id(g))
+            if hit is None:
+                hit = memo[id(g)] = self._construct_one(g, seed)
+            else:
+                hit = (hit[0].copy(), hit[1], hit[2])
+            prepped.append(hit)
+        perms = [perm for perm, _, _ in prepped]
+        # timed window matches execute()'s: pair generation + refinement
+        t1 = time.perf_counter()
+        pairs_list = [self._pairs(g, seed) for g in graphs]
+        stats_list = self.engines[0].refine_batch(
+            graphs, perms, pairs_list, j0s=[j0 for _, _, j0 in prepped],
+            bucket=self.bucket)
+        t_search = (time.perf_counter() - t1) / len(graphs)
+        return [self._finish(g, perm, j0, t_cons, t_search, stats)
+                for g, (perm, t_cons, j0), stats
+                in zip(graphs, prepped, stats_list)]
+
+    # ------------------------------------------------------------ multilevel
+    def _pyramid(self, g: CommGraph, seed: int) -> list:
+        """The graph-side level pyramid, LRU-cached per (graph structure
+        *and weights* — the heavy-edge matching reads them, seed for
+        seeded neighborhoods)."""
+        from ..multilevel.coarsen import build_pyramid
+        levels, cmin = self._ml
+        if self._nb is None:
+            pair_fn = lambda gg: np.zeros((0, 2), np.int64)  # noqa: E731
+            skey = None
+        else:
+            nb = self._nb
+            pair_fn = lambda gg: nb.generate(        # noqa: E731
+                gg, dist=self.spec.neighborhood_dist, seed=seed,
+                max_pairs=self.spec.max_pairs)
+            skey = seed if nb.seeded else None
+        key = (("pyramid", skey)
+               + _structure_key(g, with_weights=True))
+        return self._pyramids.get_or_build(
+            key, lambda: build_pyramid(g, self.machines, levels, cmin,
+                                       pair_fn))
+
+    def _execute_multilevel(self, g: CommGraph, seed: int) -> MappingResult:
+        """The coarsen → map → uncoarsen V-cycle (:mod:`repro.multilevel`)
+        over the plan's per-level engines; the reported initial objective
+        is the projected (pre-refinement) finest-level objective."""
+        from ..multilevel import vcycle_map
+        pyramid = self._pyramid(g, seed)
+        t0 = time.perf_counter()
+        res = vcycle_map(pyramid, self.engines, self._construct, self._cfg,
+                         seed=seed, objective0=self.objective,
+                         bucket=self.bucket)
+        t_search = time.perf_counter() - t0 - res.construction_seconds
+        return self._finish(g, res.perm, res.initial_objective,
+                            res.construction_seconds, t_search, res.stats)
+
+    def _execute_batch_multilevel(self, graphs, seed: int
+                                  ) -> list[MappingResult]:
+        """Batched V-cycles: the forced perfect pairing gives every
+        same-n graph the same level geometry, so each level's refinement
+        runs as ONE vmapped engine call across the whole batch."""
+        from ..multilevel import vcycle_map_batch
+        pyramids = [self._pyramid(g, seed) for g in graphs]
+        t0 = time.perf_counter()
+        results = vcycle_map_batch(
+            pyramids, self.engines, self._construct, self._cfg, seed=seed,
+            objective0=self.objective, bucket=self.bucket)
+        elapsed = (time.perf_counter() - t0) / len(graphs)
+        return [self._finish(g, r.perm, r.initial_objective,
+                             r.construction_seconds,
+                             elapsed - r.construction_seconds, r.stats)
+                for g, r in zip(graphs, results)]
+
+
+def _plan_from_dict(d: dict) -> MappingPlan:
+    """Module-level pickle entry (``MappingPlan.__reduce__``)."""
+    return MappingPlan.from_dict(d)

@@ -72,6 +72,127 @@ class TopologySpec:
         return cls(kind=topology.kind, params=topology.spec_params())
 
 
+# ----------------------------------------------------------- shape buckets
+# base quanta for the padded device shapes — the DeviceGraph/device_pairs
+# padding defaults, so a "tight" bucket reproduces the pre-plan shapes
+# bit-for-bit
+_DEG_BASE = 8
+_EDGE_BASE = 128
+_PAIR_BASE = 128
+
+
+def bucket_round(x: int, schedule: str, base: int) -> int:
+    """Round a raw size up by a bucket schedule.
+
+    ``"tight"`` → the next multiple of ``base`` (the device-array padding
+    quantum — exactly the shapes the engine would pick per graph);
+    ``"pow2"`` → the next power of two, at least ``base`` (few, coarse
+    buckets — the serving default, so mixed traffic collapses onto a
+    handful of compiled executables); ``"mult:<k>"`` → the next multiple
+    of ``k`` (a custom linear schedule).
+    """
+    x = max(int(x), 1)
+    if schedule == "tight":
+        return max(base, -(-x // base) * base)
+    if schedule == "pow2":
+        return max(base, 1 << (x - 1).bit_length())
+    if schedule.startswith("mult:"):
+        k = int(schedule.split(":", 1)[1])
+        if k < 1:
+            raise ValueError(f"mult bucket schedule needs k >= 1, got {k}")
+        # never below the tight rounding: device arrays are padded to
+        # ``base`` quanta regardless, and a bucket smaller than that
+        # padding could not hold the graph it was derived from
+        return max(-(-x // k) * k, max(base, -(-x // base) * base))
+    raise ValueError(f"unknown bucket schedule {schedule!r}; choose "
+                     f"'tight', 'pow2', or 'mult:<k>'")
+
+
+@dataclass(frozen=True)
+class ShapeBucket:
+    """Padded device-shape geometry of a :class:`~repro.core.plan.MappingPlan`.
+
+    ``max_deg`` (K) and ``num_edges`` (E) fix the ELL neighbor width and
+    padded edge-list length every graph is padded into; ``num_pairs`` (P)
+    fixes the candidate-pair length, or ``None`` to round each request's
+    pair count by ``schedule`` (pairs are generated per request, so their
+    count is not known at lower time).  Padding into a bucket is inert —
+    the DeviceGraph/pair padding invariants guarantee results identical
+    to exact shapes — so the only effect of a coarser schedule is fewer
+    distinct compiled executables.
+    """
+
+    max_deg: int
+    num_edges: int
+    num_pairs: int | None = None
+    schedule: str = "tight"
+
+    def validate(self) -> "ShapeBucket":
+        if self.max_deg < 1 or self.num_edges < 1:
+            raise ValueError("ShapeBucket sizes must be >= 1")
+        if self.num_pairs is not None and self.num_pairs < 1:
+            raise ValueError("ShapeBucket num_pairs must be None or >= 1")
+        bucket_round(1, self.schedule, 1)    # schedule name check
+        return self
+
+    @classmethod
+    def of(cls, g, schedule: str = "tight",
+           num_pairs: int | None = None) -> "ShapeBucket":
+        """The bucket a graph pads into under ``schedule``."""
+        import numpy as np
+        deg = int(np.diff(g.xadj).max(initial=0))
+        return cls(
+            max_deg=bucket_round(deg, schedule, _DEG_BASE),
+            num_edges=bucket_round(g.num_edges, schedule, _EDGE_BASE),
+            num_pairs=(None if num_pairs is None else
+                       bucket_round(num_pairs, schedule, _PAIR_BASE)),
+            schedule=schedule)
+
+    def admits(self, g) -> bool:
+        """Whether the graph fits this bucket's padded shapes."""
+        import numpy as np
+        return (int(np.diff(g.xadj).max(initial=0)) <= self.max_deg
+                and g.num_edges <= self.num_edges)
+
+    def union(self, other: "ShapeBucket") -> "ShapeBucket":
+        """Elementwise-max bucket admitting everything both admit."""
+        pairs = (None if self.num_pairs is None or other.num_pairs is None
+                 else max(self.num_pairs, other.num_pairs))
+        return ShapeBucket(max(self.max_deg, other.max_deg),
+                           max(self.num_edges, other.num_edges),
+                           pairs, self.schedule)
+
+    def pair_pad(self, n_pairs: int) -> int:
+        """Padded pair-array length for a request with ``n_pairs``
+        candidates: the fixed P when set, else the schedule's rounding."""
+        if self.num_pairs is not None:
+            if n_pairs > self.num_pairs:
+                raise ValueError(f"{n_pairs} candidate pairs exceed the "
+                                 f"plan bucket's num_pairs="
+                                 f"{self.num_pairs}")
+            return self.num_pairs
+        return bucket_round(n_pairs, self.schedule, _PAIR_BASE)
+
+    def tag(self) -> str:
+        p = "dyn" if self.num_pairs is None else str(self.num_pairs)
+        return f"K{self.max_deg}:E{self.num_edges}:P{p}"
+
+    def to_dict(self) -> dict:
+        return {"max_deg": self.max_deg, "num_edges": self.num_edges,
+                "num_pairs": self.num_pairs, "schedule": self.schedule}
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "ShapeBucket":
+        known = {"max_deg", "num_edges", "num_pairs", "schedule"}
+        unknown = sorted(set(d) - known)
+        if unknown:
+            raise ValueError(f"unknown ShapeBucket keys {unknown}; "
+                             f"known keys: {sorted(known)}")
+        return cls(max_deg=d["max_deg"], num_edges=d["num_edges"],
+                   num_pairs=d.get("num_pairs"),
+                   schedule=d.get("schedule", "tight"))
+
+
 # --preconfiguration → V-cycle knobs: (levels, coarsen_min).  The same
 # flag that tunes the internal partitioner (seed trials, FM passes) and
 # the device engine's sweep budget also scales the multilevel pyramid —
@@ -139,9 +260,9 @@ class MappingSpec:
     objective stay in device arrays until convergence; implies the
     batched-sweep semantics, so ``parallel_sweeps`` is moot with it).
     ``backend`` selects how standalone objective evaluations are computed:
-    ``"numpy"`` (host, float64 — bit-identical to the legacy
-    ``map_processes`` path) or ``"pallas"`` (the Pallas edge-list kernel,
-    compiled once per session and cached by the :class:`Mapper`).
+    ``"numpy"`` (host, float64 — bit-identical to the legacy pre-session
+    path) or ``"pallas"`` (the Pallas edge-list kernel, compiled at
+    ``lower`` time and carried by the :class:`MappingPlan`).
     ``max_sweeps=None`` keeps each search driver's own default budget
     (for the device engine the budget then follows ``preconfiguration``:
     fast 32, eco 64, strong 128 sweeps).  ``multilevel`` enables the
@@ -294,3 +415,57 @@ class MappingSpec:
 
     def replace(self, **changes) -> "MappingSpec":
         return dataclasses.replace(self, **changes)
+
+
+@dataclass(frozen=True)
+class PlanSpec:
+    """The serializable identity of a :class:`~repro.core.plan.MappingPlan`:
+    the full :class:`MappingSpec` (machine model included as its
+    :class:`TopologySpec`) plus the :class:`ShapeBucket` the plan was
+    lowered for.  ``MappingPlan.from_dict`` / ``.load`` rebuild the live
+    plan — topology, level pyramid machines, kernels, jitted engine
+    executables — from this spec alone, which is what makes plans
+    pickle/JSON-portable across processes.
+    """
+
+    mapping: MappingSpec
+    bucket: ShapeBucket | None = None
+
+    def __post_init__(self):
+        if isinstance(self.mapping, dict):
+            object.__setattr__(self, "mapping",
+                               MappingSpec.from_dict(self.mapping))
+        if isinstance(self.bucket, dict):
+            object.__setattr__(self, "bucket",
+                               ShapeBucket.from_dict(self.bucket))
+
+    def validate(self) -> "PlanSpec":
+        self.mapping.validate()
+        if self.mapping.topology is None:
+            raise ValueError(
+                "PlanSpec needs the machine model inside the MappingSpec "
+                "(spec.topology) so the plan can be rebuilt on load")
+        if self.bucket is not None:
+            self.bucket.validate()
+        return self
+
+    def to_dict(self) -> dict:
+        return {"mapping": self.mapping.to_dict(),
+                "bucket": None if self.bucket is None
+                else self.bucket.to_dict()}
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "PlanSpec":
+        known = {"mapping", "bucket"}
+        unknown = sorted(set(d) - known)
+        if unknown:
+            raise ValueError(f"unknown PlanSpec keys {unknown}; "
+                             f"known keys: {sorted(known)}")
+        return cls(mapping=d["mapping"], bucket=d.get("bucket"))
+
+    def to_json(self) -> str:
+        return json.dumps(self.to_dict(), indent=2)
+
+    @classmethod
+    def from_json(cls, text: str) -> "PlanSpec":
+        return cls.from_dict(json.loads(text))

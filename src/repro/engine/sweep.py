@@ -186,6 +186,15 @@ class RefinementEngine:
         # ~32 MB (max_pairs entries), so neither re-transfers per request
         self._dg_cache: "OrderedDict[tuple, DeviceGraph]" = OrderedDict()
         self._pair_cache: "OrderedDict[tuple, tuple]" = OrderedDict()
+        # bucketed pair-length high-water marks, one per bucket shape:
+        # under a ShapeBucket with dynamic P, never shrink the padded
+        # pair shape below one already compiled for that (K, E) — mixed
+        # candidate sets then reuse the existing executable instead of
+        # recompiling.  Scoped per bucket because executables are
+        # (K, E, P)-specialized anyway: engines are shared across a
+        # session's plans, and one bucket's huge pair set must not
+        # inflate every other bucket's padding (inert but not free).
+        self._p_hwm: dict = {}
 
     # ------------------------------------------------------------- host glue
     @staticmethod
@@ -200,17 +209,35 @@ class RefinementEngine:
             cache.move_to_end(key)
         return val
 
-    def _device_graph(self, g: CommGraph) -> DeviceGraph:
+    def _device_graph(self, g: CommGraph, k: int | None = None,
+                      e: int | None = None) -> DeviceGraph:
+        """Cached device upload of a graph, optionally re-padded into a
+        plan bucket's (K, E) — padding is inert, so only the executable
+        shape changes, never the result."""
         key = (g.n, hash(g.xadj.tobytes()), hash(g.adjncy.tobytes()),
-               hash(np.asarray(g.adjwgt).tobytes()))
-        return self._lru_get(self._dg_cache, key,
-                             lambda: DeviceGraph.from_comm(g))
+               hash(np.asarray(g.adjwgt).tobytes()), k, e)
+
+        def build():
+            dg = DeviceGraph.from_comm(g)
+            if k is not None or e is not None:
+                dg = dg.pad_to(k if k is not None else dg.max_deg,
+                               e if e is not None else dg.eu.shape[0])
+            return dg
+
+        return self._lru_get(self._dg_cache, key, build)
 
     def _device_pairs(self, pairs: np.ndarray, pad_to: int = 128) -> tuple:
         pairs = np.asarray(pairs)
         key = (pad_to, pairs.shape[0], hash(pairs.tobytes()))
         return self._lru_get(self._pair_cache, key,
                              lambda: device_pairs(pairs, pad_to=pad_to))
+
+    def _bucket_p(self, bucket, n_pairs: int) -> int:
+        key = (bucket.max_deg, bucket.num_edges, bucket.num_pairs,
+               bucket.schedule)
+        p = max(bucket.pair_pad(n_pairs), self._p_hwm.get(key, 0))
+        self._p_hwm[key] = p
+        return p
 
     def _eps(self, j0: float) -> float:
         return self.eps_rel * max(1.0, abs(j0))
@@ -232,13 +259,16 @@ class RefinementEngine:
 
     # ------------------------------------------------------------------ API
     def refine(self, g: CommGraph, perm: np.ndarray, pairs: np.ndarray,
-               j0: float | None = None) -> SearchStats:
+               j0: float | None = None, bucket=None) -> SearchStats:
         """Refine ``perm`` in place over the candidate ``pairs`` — the
         device counterpart of ``parallel_sweep_search`` (one device
         dispatch, no host syncs until convergence).  ``j0`` is the
         caller's already-computed objective of ``perm`` (used for eps
         scaling and the reported initial objective); omitted, it is
-        recomputed on host."""
+        recomputed on host.  ``bucket`` (a
+        :class:`~repro.core.spec.ShapeBucket`) pads the device arrays to
+        the plan's fixed shapes so every same-bucket request reuses one
+        compiled executable — inert, results unchanged."""
         import jax.numpy as jnp
         if j0 is None:
             j0 = qap_objective(g, self.topology, perm)
@@ -247,8 +277,15 @@ class RefinementEngine:
             stats.initial_objective = stats.final_objective = j0
             stats.objective_trace = [j0]
             return stats
-        dg = self._device_graph(g)
-        us, vs = self._device_pairs(pairs)
+        if bucket is not None:
+            dg = self._device_graph(g, k=bucket.max_deg,
+                                    e=bucket.num_edges)
+            us, vs = self._device_pairs(pairs,
+                                        pad_to=self._bucket_p(
+                                            bucket, len(pairs)))
+        else:
+            dg = self._device_graph(g)
+            us, vs = self._device_pairs(pairs)
         out_perm, trace, sweeps, swaps = self._refine(
             dg.nbr, dg.wgt, dg.eu, dg.ev, dg.ew, us, vs,
             jnp.asarray(perm, jnp.int32), self._D,
@@ -258,14 +295,15 @@ class RefinementEngine:
                            int(swaps), len(pairs))
 
     def refine_batch(self, graphs, perms, pairs_list,
-                     j0s=None) -> list[SearchStats]:
+                     j0s=None, bucket=None) -> list[SearchStats]:
         """One vmapped device call over a batch of same-shape graphs.
 
         Per-graph arrays are padded to the batch's common (K, E, P)
-        maxima — inert by the DeviceGraph/pair padding invariants — so
-        each result matches the corresponding single :meth:`refine`.
-        ``j0s`` are the callers' already-computed initial objectives
-        (recomputed on host when omitted).
+        maxima — or, given a ``bucket``, to the plan's fixed shapes —
+        inert by the DeviceGraph/pair padding invariants, so each result
+        matches the corresponding single :meth:`refine`.  ``j0s`` are the
+        callers' already-computed initial objectives (recomputed on host
+        when omitted).
         """
         import jax.numpy as jnp
         graphs = list(graphs)
@@ -274,12 +312,17 @@ class RefinementEngine:
         if j0s is None:
             j0s = [qap_objective(g, self.topology, p)
                    for g, p in zip(graphs, perms)]
-        dgs = [self._device_graph(g) for g in graphs]
-        k_max = max(dg.max_deg for dg in dgs)
-        e_max = max(dg.eu.shape[0] for dg in dgs)
-        p_max = max(max((len(p) for p in pairs_list), default=1), 1)
-        p_max = -(-p_max // 128) * 128          # same bucketing as refine()
-        dgs = [dg.pad_to(k_max, e_max) for dg in dgs]
+        p_raw = max(max((len(p) for p in pairs_list), default=1), 1)
+        if bucket is not None:
+            k_max, e_max = bucket.max_deg, bucket.num_edges
+            p_max = self._bucket_p(bucket, p_raw)
+            dgs = [self._device_graph(g, k=k_max, e=e_max) for g in graphs]
+        else:
+            dgs = [self._device_graph(g) for g in graphs]
+            k_max = max(dg.max_deg for dg in dgs)
+            e_max = max(dg.eu.shape[0] for dg in dgs)
+            p_max = -(-p_raw // 128) * 128      # same bucketing as refine()
+            dgs = [dg.pad_to(k_max, e_max) for dg in dgs]
         dev_pairs = [self._device_pairs(p, pad_to=p_max)
                      for p in pairs_list]
         stack = lambda xs: jnp.stack(xs)                      # noqa: E731

@@ -1,5 +1,13 @@
 """Serving driver: batched prefill + decode loop with KV/SSM caches,
-plus the fleet-placement mapping service (a `Mapper.serve()` queue).
+plus the shape-bucketed fleet-placement `MappingService`.
+
+`MappingService` is the high-throughput front end of the staged
+``lower → MappingPlan → execute`` API: incoming graphs are bucketed by
+padded device shape (configurable schedule, pow2 by default), same-bucket
+requests are dynamically batched into ONE vmapped ``plan.execute_batch``
+per tick (max-batch/max-wait knobs), repeat graphs are answered from a
+warm result cache keyed on graph content, and queue-depth backpressure is
+visible through ``stats()``.
 
 Usage (local smoke):
     PYTHONPATH=src python -m repro.launch.serve --arch rwkv6-3b --smoke \
@@ -10,7 +18,11 @@ Usage (local smoke):
 from __future__ import annotations
 
 import argparse
+import itertools
+import queue
+import threading
 import time
+from collections import OrderedDict, deque
 
 import jax
 import jax.numpy as jnp
@@ -52,28 +64,324 @@ def serve(arch: str, batch: int, prompt_len: int, gen: int,
     }
 
 
+# ------------------------------------------------------- mapping service
+class MappingService:
+    """Shape-bucketed, dynamically-batched mapping service over one
+    :class:`~repro.core.Mapper` session (see module docstring).
+
+    ``submit(g)`` returns a ticket; ``(ticket, MappingResult)`` tuples
+    (or ``(ticket, Exception)`` on per-request failure) arrive on
+    ``results``.  Per tick the worker drains up to ``max_batch`` requests
+    (waiting at most ``max_wait_s`` for stragglers), answers repeats from
+    the warm result cache, groups the rest by (spec, shape bucket), and
+    runs each group through one ``plan.execute_batch`` — so steady-state
+    traffic executes pre-compiled plans with zero Python-side rebuild.
+    ``max_pending > 0`` bounds the request queue: ``submit`` then blocks
+    when the service falls behind (backpressure), and ``stats()`` exposes
+    queue depth, batch shape, cache hits, and latency percentiles.
+    """
+
+    def __init__(self, mapper, *, schedule: str = "pow2",
+                 max_batch: int = 8, max_wait_s: float = 0.005,
+                 result_cache_size: int = 256, max_pending: int = 0,
+                 requests: "queue.Queue | None" = None,
+                 results: "queue.Queue | None" = None):
+        self.mapper = mapper
+        self.schedule = schedule
+        self.max_batch = int(max_batch)
+        self.max_wait_s = float(max_wait_s)
+        self.requests = (requests if requests is not None else
+                         queue.Queue(maxsize=max_pending))
+        self.results = results if results is not None else queue.Queue()
+        self._result_cache: OrderedDict = OrderedDict()
+        self._result_cache_size = int(result_cache_size)
+        self._tickets = itertools.count()
+        self._closed = False
+        self._lock = threading.Lock()
+        self._served = 0
+        self._batches = 0
+        self._batched_requests = 0
+        self._max_batch_seen = 0
+        self._cache_hits = 0
+        self._deduped = 0
+        self._errors = 0
+        self._peak_depth = 0
+        # sliding latency window: long-lived services keep reporting
+        # *recent* p50/p99, not the first N requests forever
+        self._latencies: "deque[float]" = deque(maxlen=65536)
+        self._thread = threading.Thread(target=self._run,
+                                        name="viem-mapping-service",
+                                        daemon=True)
+        self._thread.start()
+
+    # ------------------------------------------------------------- client
+    def submit(self, g, spec=None,
+               timeout: float | None = None) -> int:
+        """Enqueue one graph; blocks when ``max_pending`` is set and the
+        queue is full (backpressure) — ``timeout`` bounds that wait
+        (``queue.Full`` on expiry; no ticket was consumed from the
+        caller's perspective).  The put happens under the close lock so
+        an accepted ticket can never race the shutdown sentinel onto a
+        dead queue (close() waits on the same lock; the worker keeps
+        draining meanwhile, so a full queue cannot deadlock)."""
+        with self._lock:
+            if self._closed:
+                raise RuntimeError("MappingService is closed; requests "
+                                   "submitted now would never be served")
+            ticket = next(self._tickets)
+            self.requests.put((ticket, g, spec, time.perf_counter()),
+                              timeout=timeout)
+        self._peak_depth = max(self._peak_depth, self.requests.qsize())
+        return ticket
+
+    def map(self, g, spec=None, timeout: float | None = None):
+        """Synchronous convenience: submit one graph and wait for its
+        result (other clients' results are requeued, so concurrent use is
+        safe only through ``submit``/``results``).  ``timeout`` bounds
+        the TOTAL wait — backpressure on submit included — and raises
+        ``TimeoutError`` when it expires."""
+        deadline = (None if timeout is None
+                    else time.perf_counter() + timeout)
+        try:
+            ticket = self.submit(g, spec, timeout=timeout)
+        except queue.Full:
+            raise TimeoutError(
+                f"MappingService.map: request queue still full after "
+                f"{timeout}s (backpressure)") from None
+        while True:
+            remaining = (None if deadline is None
+                         else deadline - time.perf_counter())
+            if remaining is not None and remaining <= 0:
+                raise TimeoutError(
+                    f"MappingService.map: no result for ticket {ticket} "
+                    f"within {timeout}s")
+            try:
+                t, res = self.results.get(timeout=remaining)
+            except queue.Empty:
+                continue                      # deadline check re-raises
+            if t == ticket:
+                if isinstance(res, Exception):
+                    raise res
+                return res
+            self.results.put((t, res))
+            time.sleep(0.001)    # don't spin hot on a foreign result
+
+    def reset_stats(self) -> None:
+        """Zero the counters and latency window (keeps caches/plans) —
+        call after warm-up so ``stats()`` reflects steady state."""
+        self._served = self._batches = self._batched_requests = 0
+        self._max_batch_seen = self._cache_hits = self._deduped = 0
+        self._errors = self._peak_depth = 0
+        self._latencies = deque(maxlen=65536)
+
+    def stats(self) -> dict:
+        # list() first: the worker thread appends concurrently, and
+        # sorting the live deque would race its mutation
+        lat = sorted(list(self._latencies))
+
+        def pct(q: float) -> float:
+            if not lat:
+                return 0.0
+            return lat[min(len(lat) - 1, int(q * len(lat)))]
+
+        return {
+            "served": self._served,
+            "batches": self._batches,
+            "batched_requests": self._batched_requests,
+            "max_batch_seen": self._max_batch_seen,
+            "result_cache_hits": self._cache_hits,
+            "in_tick_deduped": self._deduped,
+            "result_cache_size": len(self._result_cache),
+            "errors": self._errors,
+            "queue_depth": self.requests.qsize(),
+            "peak_queue_depth": self._peak_depth,
+            "latency_p50_s": pct(0.50),
+            "latency_p99_s": pct(0.99),
+        }
+
+    def close(self, timeout: float | None = None):
+        with self._lock:
+            if not self._closed:
+                self._closed = True
+                self.requests.put(None)
+        self._thread.join(timeout)
+
+    def __enter__(self) -> "MappingService":
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
+    # ------------------------------------------------------------- worker
+    def _gather(self) -> "tuple[list, bool]":
+        """One tick's worth of requests: block for the first, then wait
+        up to ``max_wait_s`` for up to ``max_batch`` total."""
+        item = self.requests.get()
+        if item is None:
+            return [], True
+        batch = [item]
+        deadline = time.perf_counter() + self.max_wait_s
+        while len(batch) < self.max_batch:
+            remaining = deadline - time.perf_counter()
+            if remaining <= 0:
+                break
+            try:
+                nxt = self.requests.get(timeout=remaining)
+            except queue.Empty:
+                break
+            if nxt is None:
+                return batch, True
+            batch.append(nxt)
+        return batch, False
+
+    def _run(self):
+        while True:
+            batch, stop = self._gather()
+            if batch:
+                self._process(batch)
+            if stop:
+                break
+
+    def _process(self, batch):
+        """Answer warm repeats from the result cache, then group misses
+        by (spec, shape bucket) and run each group through one
+        ``plan.execute_batch``."""
+        from ..core.plan import _structure_key
+        groups: "OrderedDict[tuple, list]" = OrderedDict()
+        spec_keys: dict = {}               # seed-free spec JSON per spec
+        for ticket, g, spec, t_sub in batch:
+            spec = self.mapper.spec if spec is None else spec
+            try:
+                skey = spec_keys.get(id(spec))
+                if skey is None:
+                    spec = spec.validate()
+                    skey = self.mapper._plan_key(spec, None)[0]
+                    spec_keys[id(spec)] = skey
+                self.mapper._check_size(g)
+                ckey = (skey, spec.seed,
+                        _structure_key(g, with_weights=True))
+            except Exception as exc:
+                self._emit(ticket, exc, t_sub)
+                continue
+            hit = self._result_cache.get(ckey)
+            if hit is not None:
+                self._result_cache.move_to_end(ckey)
+                self._cache_hits += 1
+                self._emit(ticket, self._copy_result(hit), t_sub)
+                continue
+            bucket = self.mapper.bucket_of(g, schedule=self.schedule)
+            # the plan key is seed-free (plans are shared across seeds),
+            # but a group executes with ONE runtime seed — so the seed
+            # is part of the grouping identity
+            groups.setdefault((skey, bucket, spec.seed), []
+                              ).append((ticket, g, spec, t_sub, ckey))
+        for (_, bucket, _), items in groups.items():
+            self._execute_group(items, bucket)
+
+    def _execute_group(self, items, bucket):
+        """All items share one (spec, bucket, seed) group key — one
+        lower (or plan-cache hit), one vmapped batch.  Identical graphs
+        inside the tick (same content key) execute once and fan out.
+        Multi-request batches are padded to exactly ``max_batch`` lanes
+        (cycling the tick's own graphs) so the batch axis is bucketed
+        too: per plan there are exactly two executables — single and
+        full batch — and no batch-size recompiles ever hit the hot
+        path."""
+        spec = items[0][2]
+        uniq: "OrderedDict[tuple, object]" = OrderedDict()
+        for _, g, _, _, ckey in items:
+            uniq.setdefault(ckey, g)
+        graphs = list(uniq.values())
+        try:
+            plan = self.mapper.lower(bucket, spec)
+            b = len(graphs)
+            if plan.engines is None:
+                # host engine executes serially — no vmapped executable,
+                # so neither lane padding nor batching helps
+                results = [plan.execute(g, seed=spec.seed)
+                           for g in graphs]
+            elif 2 * b > self.max_batch:
+                # at least half the padded lanes are real work: one
+                # vmapped call wins; padding the batch axis to exactly
+                # max_batch keeps a single compiled batch shape
+                lanes = graphs + [graphs[i % b]
+                                  for i in range(self.max_batch - b)]
+                results = plan.execute_batch(lanes, seed=spec.seed)[:b]
+                self._batches += 1
+                self._batched_requests += len(items)
+                self._max_batch_seen = max(self._max_batch_seen,
+                                           len(items))
+            else:
+                # under-utilized batch: padded lanes would outweigh the
+                # dispatch savings, so run the few uniques singly (they
+                # still share the plan's compiled single executable)
+                results = [plan.execute(g, seed=spec.seed)
+                           for g in graphs]
+            self.mapper._requests += len(graphs)
+        except Exception:
+            # batch-level failure: isolate per request
+            results = []
+            for ckey, g in uniq.items():
+                try:
+                    results.append(self.mapper.map(g, spec=spec))
+                except Exception as exc:
+                    results.append(exc)
+        by_key = dict(zip(uniq.keys(), results))
+        for ticket, g, sp, t_sub, ckey in items:
+            res = by_key[ckey]
+            if not isinstance(res, Exception):
+                self._result_cache[ckey] = self._copy_result(res)
+                while len(self._result_cache) > self._result_cache_size:
+                    self._result_cache.popitem(last=False)
+                res = self._copy_result(res)
+            self._emit(ticket, res, t_sub)
+        self._deduped += len(items) - len(graphs)
+
+    @staticmethod
+    def _copy_result(res):
+        """Results are shared between the warm cache and (possibly many)
+        clients — hand out copies so nobody can mutate cached state
+        (the perm array *and* the SearchStats with its trace list)."""
+        import copy
+        import dataclasses
+        return dataclasses.replace(
+            res, perm=res.perm.copy(),
+            search_stats=copy.deepcopy(res.search_stats))
+
+    def _emit(self, ticket, res, t_sub):
+        self._served += 1
+        if isinstance(res, Exception):
+            self._errors += 1
+        self._latencies.append(time.perf_counter() - t_sub)
+        self.results.put((ticket, res))
+
+
 # ------------------------------------------------------ placement service
 def placement_service(hierarchy=None, spec=None, requests=None,
-                      results=None):
+                      results=None, **knobs):
     """Long-lived device-placement service for the serving fleet.
 
-    One `Mapper` session per fleet hierarchy: the distance oracle and any
-    compiled Pallas kernels are built once, then every traffic graph pushed
-    onto the request queue (e.g. extracted from newly compiled serving
-    programs via ``repro.core.comm_model.device_comm_graph``) is mapped by
-    the same session.  Returns the started
-    :class:`~repro.core.mapping.MapperService`.
+    One `Mapper` session per fleet hierarchy: plans (distance oracle,
+    compiled kernels, jitted engines) are lowered once per shape bucket,
+    then every traffic graph pushed onto the request queue (e.g.
+    extracted from newly compiled serving programs via
+    ``repro.core.comm_model.device_comm_graph``) executes a pre-compiled
+    plan — same-bucket bursts batch into one vmapped call.  Returns the
+    started :class:`MappingService`.
     """
     from ..core import Mapper, tpu_v5e_fleet
-    from .specs import placement_spec
+    from .specs import placement_service_config, placement_spec
     h = hierarchy if hierarchy is not None else tpu_v5e_fleet(pods=2)
-    return Mapper(h, spec or placement_spec()).serve(
-        requests=requests, results=results)
+    cfg = placement_service_config()
+    cfg.update(knobs)
+    return MappingService(Mapper(h, spec or placement_spec()),
+                          requests=requests, results=results, **cfg)
 
 
 def _placement_smoke():
     """Round-trip a few synthetic fleet traffic graphs through the
-    placement queue and print objectives vs identity placement."""
+    placement queue and print objectives vs identity placement, plus the
+    session's plan-cache and service accounting."""
     import numpy as np
 
     from ..core import from_edges, qap_objective, tpu_v5e_fleet
@@ -85,8 +393,11 @@ def _placement_smoke():
         us = np.arange(n)
         vs = (us + shift * 16) % n
         graphs.append(from_edges(n, us, vs, np.full(n, 1e6)))
+    graphs.append(graphs[0])    # a repeat: exercises the warm cache
     with placement_service(h) as svc:
-        tickets = {svc.submit(g): g for g in graphs}
+        tickets = {}
+        for g in graphs:
+            tickets[svc.submit(g)] = g
         for _ in tickets:
             ticket, res = svc.results.get(timeout=300)
             if isinstance(res, Exception):
@@ -96,6 +407,20 @@ def _placement_smoke():
             print(f"request {ticket}: J={res.final_objective:.3e} "
                   f"(identity {j_id:.3e}, "
                   f"{res.final_objective / j_id:.2f}x)")
+        stats = svc.stats()
+        info = svc.mapper.cache_info()
+    print(f"service: served={stats['served']} "
+          f"batches={stats['batches']} "
+          f"warm_hits={stats['result_cache_hits']} "
+          f"peak_queue_depth={stats['peak_queue_depth']} "
+          f"p50={stats['latency_p50_s']:.3f}s "
+          f"p99={stats['latency_p99_s']:.3f}s")
+    print(f"plan cache: builds={info['plan_builds']} "
+          f"hits={info['plan_hits']} evictions={info['plan_evictions']}")
+    for tag, pinfo in info["plans"].items():
+        print(f"  bucket {tag}: executes={pinfo['executes']} "
+              f"pair_hits={pinfo['pair_hits']} "
+              f"engines={pinfo['engine_builds']}")
     print("placement service:", "ok")
 
 

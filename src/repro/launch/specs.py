@@ -61,6 +61,21 @@ def placement_spec(seed: int = 0):
                        neighborhood_dist=3, seed=seed)
 
 
+def placement_service_config() -> dict:
+    """Knobs for the fleet :class:`~repro.launch.serve.MappingService`,
+    shared by the placement service and ``benchmarks.bench_serve`` so
+    both measure the same configuration.
+
+    ``pow2`` shape buckets collapse mixed traffic onto a handful of
+    compiled plans; a small ``max_wait_s`` trades a few milliseconds of
+    latency for whole-bucket vmapped batches; the warm result cache
+    answers repeat traffic graphs (recompiled serving programs usually
+    re-emit the same communication pattern) without touching the device.
+    """
+    return {"schedule": "pow2", "max_batch": 4, "max_wait_s": 0.005,
+            "result_cache_size": 256}
+
+
 def serve_input_specs(cfg, shape_name: str):
     shape = SHAPES[shape_name]
     b, s = shape.global_batch, shape.seq_len

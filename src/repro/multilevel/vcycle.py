@@ -34,14 +34,26 @@ def _construct_coarsest(level: Level, construct_fn, cfg, seed: int
     return construct_fn(level.graph, level.machine, seed=seed, cfg=cfg)
 
 
+def _engine_at(engine_of, lvl: int, machine):
+    """Resolve a level's refinement engine: ``engine_of`` is either a
+    per-level sequence (a :class:`~repro.core.plan.MappingPlan`'s
+    pre-built engines, indexed by level) or a callable ``machine →
+    engine`` (the legacy cache-lookup form)."""
+    if callable(engine_of):
+        return engine_of(machine)
+    return engine_of[lvl]
+
+
 def vcycle_map(pyramid: list[Level], engine_of, construct_fn, cfg,
-               seed: int = 0, objective0=None) -> VCycleResult:
+               seed: int = 0, objective0=None, bucket=None) -> VCycleResult:
     """Run one V-cycle over a built pyramid (finest first).
 
-    ``engine_of(machine)`` returns the refinement engine for a level's
-    machine (the Mapper's engine cache); ``construct_fn(g, machine, *,
+    ``engine_of`` supplies each level's refinement engine (sequence or
+    callable, see :func:`_engine_at`); ``construct_fn(g, machine, *,
     seed, cfg)`` maps the coarsest level; ``objective0(graph, perm)``
     scores the finest level (defaults to the host float64 objective).
+    ``bucket`` is the plan's finest-level :class:`ShapeBucket` — coarse
+    levels keep their own (graph-independent) geometry.
     """
     coarsest = pyramid[-1]
     t0 = time.perf_counter()
@@ -60,8 +72,9 @@ def vcycle_map(pyramid: list[Level], engine_of, construct_fn, cfg,
             jl = j0_fine
         else:
             jl = qap_objective(level.graph, level.machine, perm)
-        stats = engine_of(level.machine).refine(level.graph, perm,
-                                                level.pairs, j0=jl)
+        stats = _engine_at(engine_of, lvl, level.machine).refine(
+            level.graph, perm, level.pairs, j0=jl,
+            bucket=bucket if lvl == 0 else None)
         level_objectives.append(stats.final_objective)
         if lvl > 0:
             perm = project_perm(perm, level.fine_u, level.fine_v)
@@ -71,8 +84,8 @@ def vcycle_map(pyramid: list[Level], engine_of, construct_fn, cfg,
 
 
 def vcycle_map_batch(pyramids: list[list[Level]], engine_of, construct_fn,
-                     cfg, seed: int = 0,
-                     objective0=None) -> list[VCycleResult]:
+                     cfg, seed: int = 0, objective0=None,
+                     bucket=None) -> list[VCycleResult]:
     """Batched V-cycles over same-n graphs: the forced perfect pairing
     makes every pyramid the same depth with the same level sizes, so each
     level's refinement across the whole batch is ONE vmapped engine call
@@ -103,9 +116,11 @@ def vcycle_map_batch(pyramids: list[list[Level]], engine_of, construct_fn,
                    for lv, perm in zip(levels, perms)]
         if lvl == 0:
             j0_fine = j0s
-        stats_list = engine_of(levels[0].machine).refine_batch(
+        stats_list = _engine_at(engine_of, lvl, levels[0].machine
+                                ).refine_batch(
             [lv.graph for lv in levels], perms,
-            [lv.pairs for lv in levels], j0s=j0s)
+            [lv.pairs for lv in levels], j0s=j0s,
+            bucket=bucket if lvl == 0 else None)
         for i, st in enumerate(stats_list):
             level_objectives[i].append(st.final_objective)
         if lvl > 0:

@@ -4,8 +4,8 @@ monotone improvement, termination — the paper's §2 behaviors."""
 import numpy as np
 import pytest
 
-from repro.core import Hierarchy, grid3d, map_processes, qap_objective, \
-    random_geometric
+from repro.core import Hierarchy, Mapper, MappingSpec, grid3d, \
+    qap_objective, random_geometric
 from repro.core.construction import CONSTRUCTIONS, construct
 from repro.core.local_search import (communication_pairs, local_search,
                                      nsquare_pairs, parallel_sweep_search,
@@ -78,11 +78,11 @@ def test_parallel_sweep_matches_sequential_quality():
     assert np.isclose(s_par.final_objective, qap_objective(g, H64, p_par))
 
 
-def test_map_processes_end_to_end():
+def test_mapper_end_to_end():
     g = grid3d(4, 4, 4)
-    res = map_processes(g, H64, preconfiguration_mapping="fast",
-                        communication_neighborhood_dist=2, seed=0)
+    spec = MappingSpec(preconfiguration="fast", neighborhood_dist=2, seed=0)
+    res = Mapper(H64, spec).map(g)
     assert sorted(res.perm) == list(range(64))
     assert res.final_objective <= res.initial_objective
     with pytest.raises(ValueError):
-        map_processes(grid3d(3, 3, 3), H64)   # n mismatch
+        Mapper(H64, spec).map(grid3d(3, 3, 3))   # n mismatch

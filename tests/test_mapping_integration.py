@@ -8,7 +8,7 @@ from pathlib import Path
 import numpy as np
 import pytest
 
-from repro.core import (grid3d, map_processes, qap_objective,
+from repro.core import (Mapper, MappingSpec, grid3d, qap_objective,
                         tpu_v5e_fleet, write_metis)
 from repro.core.comm_model import (device_comm_graph, generate_model,
                                    logical_traffic_summary)
@@ -76,8 +76,8 @@ def test_mapping_improves_mesh_traffic():
         ws.append(1.0)
     g = from_edges(n, np.array(us), np.array(vs), np.array(ws))
     j_ident = qap_objective(g, h, np.arange(n))
-    res = map_processes(g, h, preconfiguration_mapping="fast",
-                        communication_neighborhood_dist=2, seed=0)
+    res = Mapper(h, MappingSpec(preconfiguration="fast",
+                                neighborhood_dist=2, seed=0)).map(g)
     assert res.final_objective < 0.6 * j_ident
     tr = logical_traffic_summary(g, h, res.perm)
     tr_id = logical_traffic_summary(g, h, np.arange(n))

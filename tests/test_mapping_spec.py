@@ -1,18 +1,18 @@
-"""New declarative API: MappingSpec round-trips, registry errors and
-plugins, Mapper↔map_processes parity, map_many batching with cache-hit
+"""Declarative API: MappingSpec round-trips, registry errors and
+plugins, Mapper↔staged-plan parity, map_many batching with plan-cache
 accounting, and the request-queue serving hook."""
 
 import json
 import subprocess
 import sys
-import warnings
 from pathlib import Path
 
 import numpy as np
 import pytest
 
+import repro.core
 from repro.core import (Hierarchy, Mapper, MappingSpec, grid3d,
-                        map_processes, write_metis)
+                        write_metis)
 from repro.core.construction import (CONSTRUCTIONS, construct,
                                      list_constructions,
                                      register_construction,
@@ -137,46 +137,40 @@ def test_third_party_algorithms_plug_in():
 # ----------------------------------------------------------------- parity
 @pytest.mark.parametrize("construction", sorted(CONSTRUCTIONS))
 @pytest.mark.parametrize("neighborhood", sorted(NEIGHBORHOODS))
-def test_mapper_matches_legacy_bit_for_bit(construction, neighborhood):
+def test_mapper_matches_explicit_staging_bit_for_bit(construction,
+                                                     neighborhood):
+    """`Mapper.map` is a thin wrapper over lower → execute: the explicit
+    two-stage spelling must reproduce it exactly for every algorithm
+    combination."""
     g = grid3d(4, 4, 4)
     spec = MappingSpec(construction=construction, neighborhood=neighborhood,
                        neighborhood_dist=2, preconfiguration="fast", seed=3)
     new = Mapper(H64, spec).map(g)
-    with warnings.catch_warnings():
-        warnings.simplefilter("ignore", DeprecationWarning)
-        old = map_processes(
-            g, H64, construction_algorithm=construction,
-            local_search_neighborhood=neighborhood,
-            communication_neighborhood_dist=2,
-            preconfiguration_mapping="fast", seed=3)
-    assert np.array_equal(new.perm, old.perm)
-    assert new.initial_objective == old.initial_objective
-    assert new.final_objective == old.final_objective
+    staged = Mapper(H64, spec).lower_for(g).execute(g)
+    assert np.array_equal(new.perm, staged.perm)
+    assert new.initial_objective == staged.initial_objective
+    assert new.final_objective == staged.final_objective
 
 
 @pytest.mark.parametrize("neighborhood", [None, "communication"])
 @pytest.mark.parametrize("parallel", [False, True])
-def test_mapper_matches_legacy_modes(neighborhood, parallel):
+def test_mapper_matches_staging_across_modes(neighborhood, parallel):
     g = grid3d(4, 4, 4)
     spec = MappingSpec(neighborhood=neighborhood, neighborhood_dist=2,
                        preconfiguration="fast", parallel_sweeps=parallel,
                        seed=0)
     new = Mapper(H64, spec).map(g)
-    with warnings.catch_warnings():
-        warnings.simplefilter("ignore", DeprecationWarning)
-        old = map_processes(g, H64, local_search_neighborhood=neighborhood,
-                            communication_neighborhood_dist=2,
-                            preconfiguration_mapping="fast",
-                            parallel_sweeps=parallel, seed=0)
-    assert np.array_equal(new.perm, old.perm)
-    assert new.final_objective == old.final_objective
+    staged = Mapper(H64, spec).lower_for(g).execute(g)
+    assert np.array_equal(new.perm, staged.perm)
+    assert new.final_objective == staged.final_objective
 
 
-def test_map_processes_is_deprecated():
-    with pytest.warns(DeprecationWarning, match="Mapper"):
-        map_processes(grid3d(4, 4, 4), H64,
-                      local_search_neighborhood=None,
-                      preconfiguration_mapping="fast")
+def test_map_processes_shim_is_gone():
+    """The PR 1 deprecation shim was removed: the staged Mapper API is
+    the only entry point."""
+    assert not hasattr(repro.core, "map_processes")
+    with pytest.raises(ImportError):
+        from repro.core import map_processes  # noqa: F401
 
 
 def test_mapper_rejects_size_mismatch():

@@ -200,7 +200,7 @@ def test_projection_is_bijection_at_every_level():
     spec = _ml_spec()
     mapper = Mapper(H64, spec)
     g = grid3d(4, 4, 4)
-    pyramid = mapper._pyramid(g, spec, spec.resolved_multilevel())
+    pyramid = mapper.lower_for(g)._pyramid(g, spec.seed)
     assert len(pyramid) == 3
     rng = np.random.default_rng(0)
     perm = rng.permutation(pyramid[-1].graph.n).astype(np.int64)
@@ -314,11 +314,10 @@ def test_preconfiguration_resolves_vcycle_and_sweep_knobs():
     assert MultilevelSpec().resolve("strong") == (6, 32)
     assert MultilevelSpec(levels=3).resolve("strong") == (3, 32)
     assert MultilevelSpec(coarsen_min=4).resolve("fast") == (2, 4)
-    mapper = Mapper(H64)
+    from repro.core.plan import sweep_budget
     for name, sweeps in (("fast", 32), ("eco", 64), ("strong", 128)):
-        assert mapper._sweep_budget(
-            MappingSpec(preconfiguration=name)) == sweeps
-    assert mapper._sweep_budget(MappingSpec(max_sweeps=7)) == 7
+        assert sweep_budget(MappingSpec(preconfiguration=name)) == sweeps
+    assert sweep_budget(MappingSpec(max_sweeps=7)) == 7
     # levels=1 via preconfiguration still counts as flat
     assert MappingSpec(
         engine="device",
@@ -329,18 +328,21 @@ def test_preconfiguration_resolves_vcycle_and_sweep_knobs():
 
 
 # ----------------------------------------------------- LRU-bounded caches
-def test_engine_cache_is_bounded_with_visible_evictions():
+def test_plan_cache_is_bounded_with_visible_evictions():
     spec = MappingSpec(construction="random", neighborhood="communication",
                        neighborhood_dist=2, preconfiguration="fast",
                        engine="device", seed=0)
-    mapper = Mapper(H64, spec, cache_caps={"engines": 2})
+    mapper = Mapper(H64, spec, cache_caps={"plans": 2})
     g = grid3d(4, 4, 4)
-    for sweeps in (2, 3, 4):        # three distinct engine keys, cap 2
+    for sweeps in (2, 3, 4):        # three distinct plan keys, cap 2
         mapper.map(g, spec=spec.replace(max_sweeps=sweeps))
     info = mapper.cache_info()
+    assert info["plan_builds"] == 3
+    assert info["plan_evictions"] == 1
+    assert len(mapper._plans) == 2
+    # every plan built one engine; the evicted plan's counter is retired,
+    # not lost
     assert info["engine_builds"] == 3
-    assert info["engine_evictions"] == 1
-    assert len(mapper._engines) == 2
     with pytest.raises(ValueError, match="cache_caps"):
         Mapper(H64, spec, cache_caps={"nope": 1})
 
@@ -356,10 +358,13 @@ def test_pair_and_pyramid_caches_evict_at_cap():
     for g in graphs:
         mapper.map(g)
     info = mapper.cache_info()
-    # pyramids key on weights: three builds through a cap-1 cache
+    # pyramids key on weights: three builds through a (per-plan) cap-1
+    # cache — same structure means one plan serves all three graphs
+    assert info["plan_builds"] == 1
     assert info["pyramid_builds"] == 3
     assert info["pyramid_evictions"] == 2
-    assert len(mapper._pyramids) == 1
+    plan = mapper.lower_for(graphs[0])
+    assert len(plan._pyramids) == 1
     # candidate pairs of the V-cycle live inside the pyramid entries (one
-    # set per level), so the separate pair cache stays within its cap
-    assert len(mapper._pair_cache) <= 2
+    # set per level), so the plan's separate pair cache stays in its cap
+    assert len(plan._pairs_lru) <= 2

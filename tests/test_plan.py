@@ -1,0 +1,408 @@
+"""Staged lower → MappingPlan → execute API: bucket schedules, plan
+round-trips (JSON/pickle/fresh-process), bucket-padding inertness, plan
+cache accounting, the viem --explain surface, and the shape-bucketed
+MappingService (batching parity, warm cache, burst ordering,
+backpressure)."""
+
+import json
+import pickle
+import subprocess
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.core import (Hierarchy, Mapper, MappingPlan, MappingSpec,
+                        MultilevelSpec, PlanSpec, ShapeBucket, grid3d,
+                        random_geometric, write_metis)
+from repro.core.spec import bucket_round
+
+REPO = Path(__file__).resolve().parents[1]
+H64 = Hierarchy((4, 4, 4), (1.0, 10.0, 100.0))
+
+
+def _dev_spec(**kw):
+    base = dict(construction="random", neighborhood="communication",
+                neighborhood_dist=2, preconfiguration="fast",
+                engine="device", seed=1)
+    base.update(kw)
+    return MappingSpec(**base)
+
+
+def _weighted_grids(count):
+    out = []
+    for i in range(count):
+        g = grid3d(4, 4, 4)
+        g.adjwgt = g.adjwgt * (1.0 + 0.5 * i)
+        out.append(g)
+    return out
+
+
+# ---------------------------------------------------------------- buckets
+def test_bucket_round_schedules():
+    assert bucket_round(9, "tight", 8) == 16
+    assert bucket_round(8, "tight", 8) == 8
+    assert bucket_round(1, "tight", 8) == 8
+    assert bucket_round(9, "pow2", 8) == 16
+    assert bucket_round(20, "pow2", 8) == 32
+    assert bucket_round(3, "pow2", 8) == 8       # floor at base
+    assert bucket_round(20, "mult:16", 8) == 32
+    # mult never drops below the tight rounding — device arrays are
+    # padded to base quanta regardless (regression: mult:4 buckets
+    # smaller than the padded shapes crashed pad_to)
+    assert bucket_round(144, "mult:4", 128) == 256
+    with pytest.raises(ValueError, match="schedule"):
+        bucket_round(4, "fib", 8)
+
+
+def test_mult_schedule_plans_execute():
+    g = grid3d(4, 4, 4)
+    spec = _dev_spec()
+    mapper = Mapper(H64, spec)
+    want = mapper.map(g)
+    got = mapper.lower(mapper.bucket_of(g, schedule="mult:4"),
+                       spec).execute(g)
+    assert np.array_equal(want.perm, got.perm)
+    assert want.final_objective == got.final_objective
+
+
+def test_bucket_of_admits_and_union():
+    g = grid3d(4, 4, 4)
+    b = ShapeBucket.of(g)
+    assert b.admits(g)
+    assert b.max_deg % 8 == 0 and b.num_edges % 128 == 0
+    dense = random_geometric(64, 0.5, seed=0)
+    assert not ShapeBucket.of(g).admits(dense) or \
+        ShapeBucket.of(dense).num_edges <= b.num_edges
+    u = b.union(ShapeBucket.of(dense))
+    assert u.admits(g) and u.admits(dense)
+    # pow2 buckets dominate tight ones (pow2 ≥ the next multiple of base)
+    p = ShapeBucket.of(dense, schedule="pow2")
+    assert p.max_deg >= ShapeBucket.of(dense).max_deg
+    assert p.num_edges >= ShapeBucket.of(dense).num_edges
+
+
+def test_bucket_dict_round_trip_and_validation():
+    b = ShapeBucket(16, 512, 1024, "pow2")
+    assert ShapeBucket.from_dict(b.to_dict()) == b
+    with pytest.raises(ValueError, match="unknown ShapeBucket keys"):
+        ShapeBucket.from_dict({"max_deg": 8, "num_edges": 128, "K": 1})
+    with pytest.raises(ValueError):
+        ShapeBucket(0, 128).validate()
+    assert b.pair_pad(100) == 1024
+    with pytest.raises(ValueError, match="exceed"):
+        b.pair_pad(2048)
+
+
+# ------------------------------------------------------------- round trip
+@pytest.mark.parametrize("spec", [
+    _dev_spec(),
+    _dev_spec(multilevel=MultilevelSpec(levels=3, coarsen_min=8),
+              preconfiguration="eco"),
+    MappingSpec(preconfiguration="fast", neighborhood="communication",
+                neighborhood_dist=2, backend="pallas", seed=2),
+])
+def test_plan_serialization_round_trip_bit_identical(spec):
+    g = grid3d(4, 4, 4)
+    plan = Mapper(H64, spec).lower_for(g)
+    r1 = plan.execute(g)
+    # JSON
+    plan2 = MappingPlan.from_json(plan.to_json())
+    r2 = plan2.execute(g)
+    assert np.array_equal(r1.perm, r2.perm)
+    assert r1.final_objective == r2.final_objective
+    assert r1.initial_objective == r2.initial_objective
+    # pickle
+    plan3 = pickle.loads(pickle.dumps(plan))
+    r3 = plan3.execute(g)
+    assert np.array_equal(r1.perm, r3.perm)
+    assert r1.final_objective == r3.final_objective
+    # the rebuilt plan reports identical geometry
+    assert plan2.describe() == plan.describe()
+
+
+def test_plan_reload_in_fresh_process_bit_identical(tmp_path):
+    """The acceptance bar: a serialized plan reloaded in a fresh process
+    reproduces the original mapping bit-identically."""
+    g = grid3d(4, 4, 4)
+    plan = Mapper(H64, _dev_spec()).lower_for(g)
+    want = plan.execute(g)
+    plan_path = tmp_path / "plan.json"
+    gpath = tmp_path / "g.metis"
+    plan.save(plan_path)
+    write_metis(g, str(gpath))
+    script = (
+        "from repro.core import MappingPlan, read_metis\n"
+        f"plan = MappingPlan.load({str(plan_path)!r})\n"
+        f"res = plan.execute(read_metis({str(gpath)!r}))\n"
+        "print(' '.join(map(str, res.perm.tolist())))\n"
+        "print(repr(res.final_objective))\n")
+    r = subprocess.run(
+        [sys.executable, "-c", script], capture_output=True, text=True,
+        cwd=REPO, env={"PYTHONPATH": str(REPO / "src"),
+                       "PATH": "/usr/bin:/bin", "JAX_PLATFORMS": "cpu"})
+    assert r.returncode == 0, r.stderr
+    perm_line, jf_line = r.stdout.strip().splitlines()[-2:]
+    assert np.array_equal(np.array(perm_line.split(), dtype=np.int64),
+                          want.perm)
+    assert float(jf_line) == want.final_objective
+
+
+def test_plan_spec_requires_topology():
+    with pytest.raises(ValueError, match="topology"):
+        PlanSpec(mapping=MappingSpec()).validate()
+    with pytest.raises(ValueError, match="unknown PlanSpec keys"):
+        PlanSpec.from_dict({"mapping": MappingSpec().to_dict(), "x": 1})
+
+
+# -------------------------------------------------------------- inertness
+@pytest.mark.parametrize("spec", [
+    _dev_spec(),
+    _dev_spec(multilevel=MultilevelSpec(levels=3, coarsen_min=8),
+              preconfiguration="eco"),
+])
+def test_bucket_padding_is_inert(spec):
+    """Tight, pow2, and explicitly oversized buckets must produce
+    bit-identical mappings — only the compiled shapes differ."""
+    g = grid3d(4, 4, 4)
+    mapper = Mapper(H64, spec)
+    tight = mapper.lower(mapper.bucket_of(g), spec).execute(g)
+    pow2 = mapper.lower(mapper.bucket_of(g, schedule="pow2"),
+                        spec).execute(g)
+    big = mapper.lower(ShapeBucket(max_deg=32, num_edges=1024,
+                                   num_pairs=2048), spec).execute(g)
+    for other in (pow2, big):
+        assert np.array_equal(tight.perm, other.perm)
+        assert tight.final_objective == other.final_objective
+        assert tight.initial_objective == other.initial_objective
+
+
+def test_plan_rejects_graph_exceeding_bucket():
+    spec = _dev_spec()
+    small = ShapeBucket(max_deg=8, num_edges=128)
+    plan = Mapper(H64, spec).lower(small, spec)
+    dense = random_geometric(64, 0.5, seed=1)
+    with pytest.raises(ValueError, match="bucket"):
+        plan.execute(dense)
+
+
+def test_execute_batch_mixed_structures_matches_singles():
+    spec = _dev_spec()
+    graphs = [grid3d(4, 4, 4), random_geometric(64, 0.25, seed=2)]
+    mapper = Mapper(H64, spec)
+    batch = mapper.map_many(graphs)
+    for got, g in zip(batch, graphs):
+        want = Mapper(H64, spec).map(g)
+        assert got.final_objective == pytest.approx(want.final_objective,
+                                                    rel=1e-5)
+        assert sorted(got.perm.tolist()) == list(range(64))
+
+
+# ----------------------------------------------------------- plan caching
+def test_seed_is_a_runtime_input_not_a_plan_key():
+    g = grid3d(4, 4, 4)
+    spec = _dev_spec(seed=1)
+    mapper = Mapper(H64, spec)
+    r1 = mapper.map(g)
+    r5 = mapper.map(g, spec=spec.replace(seed=5))
+    info = mapper.cache_info()
+    assert info["plan_builds"] == 1          # seed excluded from the key
+    assert info["plan_hits"] == 1
+    # and the seed still steers the run: fresh-session parity per seed
+    want5 = Mapper(H64, spec.replace(seed=5)).map(g)
+    assert np.array_equal(r5.perm, want5.perm)
+    assert not np.array_equal(r1.perm, r5.perm)
+
+
+def test_plan_cache_reports_per_bucket():
+    spec = _dev_spec()
+    mapper = Mapper(H64, spec)
+    g1 = grid3d(4, 4, 4)
+    g2 = random_geometric(64, 0.4, seed=0)   # denser → different bucket
+    mapper.map(g1)
+    mapper.map(g2)
+    mapper.map(g1)
+    info = mapper.cache_info()
+    assert info["plan_builds"] == 2
+    assert info["plan_hits"] == 1
+    assert len(info["plans"]) == 2
+    assert all(tag.startswith("K") for tag in info["plans"])
+    # engines are bucket-agnostic and pooled across plans: same machine
+    # + sweep budget → ONE build shared by both buckets' plans
+    assert info["engine_builds"] == 1
+    assert info["requests"] == 3
+
+
+def test_describe_reports_levels_and_kernel_forms():
+    spec = _dev_spec(multilevel=MultilevelSpec(levels=3, coarsen_min=8),
+                     preconfiguration="eco")
+    plan = Mapper(H64, spec).lower_for(grid3d(4, 4, 4))
+    d = plan.describe()
+    assert d["machine"] == {"kind": "tree", "n_pe": 64}
+    assert d["multilevel"] == {"levels": 3, "coarsen_min": 8}
+    assert [lv["n"] for lv in d["levels"]] == [64, 32, 16]
+    assert d["levels"][0]["kernel_form"] == "tree"
+    assert all(lv["kernel_form"] == "matrix" for lv in d["levels"][1:])
+    assert all(lv["engine_compiled"] for lv in d["levels"])
+    assert d["compiled"]["engines"] == 3
+    json.dumps(d)                             # JSON-safe throughout
+
+
+# ------------------------------------------------------------ CLI explain
+def _run_cli(mod, *args):
+    return subprocess.run(
+        [sys.executable, "-m", mod, *args], capture_output=True, text=True,
+        cwd=REPO, env={"PYTHONPATH": str(REPO / "src"),
+                       "PATH": "/usr/bin:/bin", "JAX_PLATFORMS": "cpu"})
+
+
+def test_cli_explain_lowers_without_executing(tmp_path):
+    g = grid3d(4, 4, 2)
+    gpath = tmp_path / "g.metis"
+    write_metis(g, str(gpath))
+    out = tmp_path / "perm.txt"
+    r = _run_cli("repro.cli.viem", str(gpath),
+                 "--hierarchy_parameter_string=4:4:2",
+                 "--distance_parameter_string=1:10:100",
+                 "--engine=device", "--explain",
+                 f"--output_filename={out}")
+    assert r.returncode == 0, r.stderr
+    d = json.loads(r.stdout)
+    assert d["machine"]["n_pe"] == 32
+    assert d["bucket"]["num_edges"] % 128 == 0
+    assert d["levels"][0]["kernel_form"] == "tree"
+    assert not out.exists()                   # lowered, never executed
+
+
+# ---------------------------------------------------------------- service
+def _service(mapper, **kw):
+    from repro.launch.serve import MappingService
+    kw.setdefault("max_wait_s", 0.05)
+    return MappingService(mapper, **kw)
+
+
+def test_service_batching_matches_sequential_singles():
+    spec = _dev_spec()
+    graphs = _weighted_grids(4) + [random_geometric(64, 0.25, seed=7)]
+    singles = [Mapper(H64, spec).map(g) for g in graphs]
+    with _service(Mapper(H64, spec)) as svc:
+        tickets = [svc.submit(g) for g in graphs]
+        got = dict(svc.results.get(timeout=300) for _ in tickets)
+    for t, want in zip(tickets, singles):
+        res = got[t]
+        assert not isinstance(res, Exception)
+        assert sorted(res.perm.tolist()) == list(range(64))
+        assert res.final_objective == pytest.approx(want.final_objective,
+                                                    rel=1e-5)
+
+
+def test_service_warm_cache_answers_repeats_exactly():
+    spec = _dev_spec()
+    g = grid3d(4, 4, 4)
+    with _service(Mapper(H64, spec)) as svc:
+        first = svc.map(g, timeout=300)
+        again = svc.map(g, timeout=300)
+        stats = svc.stats()
+    assert stats["result_cache_hits"] >= 1
+    assert np.array_equal(first.perm, again.perm)
+    assert first.final_objective == again.final_objective
+    # cached results are copies: mutating one must not poison the cache
+    again.perm[:] = -1
+    assert sorted(first.perm.tolist()) == list(range(64))
+
+
+def test_service_burst_of_mixed_shapes_orders_and_isolates():
+    spec = _dev_spec()
+    graphs = (_weighted_grids(3)
+              + [random_geometric(64, 0.3, seed=i) for i in range(3)]
+              + [grid3d(4, 4, 4)] * 3)          # repeats inside the burst
+    with _service(Mapper(H64, spec), max_pending=64) as svc:
+        tickets = [svc.submit(g) for g in graphs]
+        bad = svc.submit(grid3d(3, 3, 3))       # size mismatch mid-burst
+        tickets.append(bad)
+        got = dict(svc.results.get(timeout=300) for _ in tickets)
+        stats = svc.stats()
+    # exactly one result per ticket, in whatever completion order
+    assert sorted(got) == sorted(tickets)
+    assert isinstance(got[bad], ValueError)
+    for t in tickets[:-1]:
+        assert not isinstance(got[t], Exception), got[t]
+    assert stats["served"] == len(tickets)
+    assert stats["errors"] == 1
+    assert stats["peak_queue_depth"] >= 1
+    assert (stats["result_cache_hits"] + stats["in_tick_deduped"]) >= 2
+    assert stats["latency_p99_s"] >= stats["latency_p50_s"] >= 0.0
+
+
+def test_service_groups_by_seed_and_never_cross_serves():
+    """Same spec, different seeds, one burst: each ticket must get its
+    own seed's mapping, and the warm cache must not cross-pollinate
+    (regression: groups keyed seed-free executed with the first
+    request's seed)."""
+    spec = _dev_spec(construction="random", seed=0)
+    g = grid3d(4, 4, 4)
+    want0 = Mapper(H64, spec).map(g)
+    want7 = Mapper(H64, spec.replace(seed=7)).map(g)
+    assert not np.array_equal(want0.perm, want7.perm)
+    with _service(Mapper(H64, spec)) as svc:
+        t0 = svc.submit(g)
+        t7 = svc.submit(g, spec.replace(seed=7))
+        got = dict(svc.results.get(timeout=300) for _ in range(2))
+        # and again after the cache is warm
+        again7 = svc.map(g, spec.replace(seed=7), timeout=300)
+    assert np.array_equal(got[t0].perm, want0.perm)
+    assert np.array_equal(got[t7].perm, want7.perm)
+    assert np.array_equal(again7.perm, want7.perm)
+
+
+def test_service_backpressure_bounds_queue_and_close_rejects():
+    spec = MappingSpec(construction="identity", neighborhood=None,
+                       preconfiguration="fast")
+    svc = _service(Mapper(H64, spec), max_pending=2)
+    assert svc.requests.maxsize == 2
+    with svc:
+        t = svc.submit(grid3d(4, 4, 4))
+        _, res = svc.results.get(timeout=300)
+        assert not isinstance(res, Exception)
+        assert t == 0
+    with pytest.raises(RuntimeError, match="closed"):
+        svc.submit(grid3d(4, 4, 4))
+
+
+def test_service_map_timeout_is_a_deadline():
+    """map()'s timeout bounds the total wait even while foreign results
+    cycle through the queue (regression: each re-get reset the budget,
+    so the timeout never fired)."""
+    import time
+
+    from repro.core.construction import CONSTRUCTIONS, \
+        register_construction
+
+    @register_construction("_test_slow")
+    def _slow(g, h, **_):
+        time.sleep(1.5)
+        return np.arange(g.n, dtype=np.int64)
+
+    try:
+        spec = MappingSpec(construction="_test_slow", neighborhood=None,
+                           preconfiguration="fast")
+        with _service(Mapper(H64, spec), max_wait_s=0.001) as svc:
+            svc.results.put((999_999, "foreign"))  # never-matching ticket
+            t0 = time.perf_counter()
+            with pytest.raises(TimeoutError, match="within"):
+                svc.map(grid3d(4, 4, 4), timeout=0.3)
+            assert time.perf_counter() - t0 < 1.2   # fired at the
+            # deadline, not after the worker finally answered
+    finally:
+        del CONSTRUCTIONS["_test_slow"]
+
+
+def test_placement_service_runs_on_mapping_service():
+    from repro.launch.serve import MappingService, placement_service
+    h = Hierarchy((4, 4), (1.0, 10.0))
+    with placement_service(h, spec=MappingSpec(preconfiguration="fast",
+                                               neighborhood=None)) as svc:
+        assert isinstance(svc, MappingService)
+        res = svc.map(grid3d(4, 4, 1), timeout=300)
+    assert sorted(res.perm.tolist()) == list(range(16))
