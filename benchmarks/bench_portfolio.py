@@ -1,0 +1,200 @@
+"""Portfolio benchmark — single-trajectory device pipeline vs the
+vmapped multistart portfolio (and the tabu escape in isolation) on the
+mesh-collective workload.
+
+Three pipelines per (n, topology) cell, same construction seed family,
+same candidate neighborhood, same device engine and sweep budget:
+
+* ``single``     — the flat PR 3/5 pipeline: one trajectory, monotone
+  sweep (the portfolio's lanes=1/rounds=1/tabu=0 degeneracy).
+* ``tabu``       — the SAME single trajectory with tabu tenure enabled:
+  the sweep walks downhill out of the local optimum the monotone
+  matching converged to and returns the best permutation seen.  Strictly
+  better final objective on a cell = an escaped local optimum.
+* ``portfolio``  — lanes restart trajectories in ONE vmapped engine
+  call, perturbation kicks + tournament selection between rounds, tabu
+  on (:mod:`repro.portfolio`).
+
+Writes ``BENCH_portfolio.json``: per-cell objective/wall-time plus the
+headline per-(n, topology) comparison.  Objective-per-wall-second is
+measured at MATCHED wall clock: the single-trajectory pipeline is given
+the portfolio's wall budget as sequential restarts (best-of-k over
+consecutive seeds — the only way a single trajectory can spend more
+wall), so "portfolio beats single" means a strictly better objective
+from the same wall-seconds, i.e. equal-or-better objective per
+wall-second by construction.  The acceptance bar is that on ≥ 2
+topologies, plus ≥ 1 cell where tabu beats the monotone sweep strictly
+(an escaped local optimum).
+
+Wall-times exclude compilation (one warm-up map per mapper/spec) but
+include construction and pair generation: graph-side caches are cleared
+before the timed run so every pipeline pays its full per-graph cost
+honestly.
+
+    python -m benchmarks.bench_portfolio [--smoke] [--out ...]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+from repro.core import Mapper, MappingSpec, tpu_v5e_fleet
+from repro.core.spec import PortfolioSpec
+from repro.topology import MatrixTopology, tpu_v5e_torus
+
+from .bench_topology import mesh_workload
+
+MAX_SWEEPS = 64
+PAIR_DIST = 2
+LANES = 8
+ROUNDS = 3
+TENURE = 8
+KICK = 0.1
+STAGNATION = 2
+
+
+def _machines(pods: int) -> dict:
+    torus = tpu_v5e_torus(pods=pods)
+    return {
+        "tree": tpu_v5e_fleet(pods=pods),
+        "torus": torus,
+        # explicit-matrix view of the torus: the general sparse-QAP path
+        "matrix": MatrixTopology(matrix=torus.distance_matrix()),
+    }
+
+
+def _timed_map(mapper: Mapper, g, spec: MappingSpec):
+    """One warmed, cache-honest map: compile on a warm-up run, then
+    clear the plan's graph-side caches so the timed run pays pair
+    generation and construction for real."""
+    mapper.map(g, spec=spec)                    # warm-up: compiles
+    mapper.lower_for(g, spec).clear_request_caches()
+    t0 = time.perf_counter()
+    res = mapper.map(g, spec=spec)
+    return res, time.perf_counter() - t0
+
+
+def _gain_rate(res, dt: float) -> float:
+    """Objective improvement bought per wall-second."""
+    return (res.initial_objective - res.final_objective) / max(dt, 1e-9)
+
+
+MAX_RESTARTS = 64
+
+
+def _equal_wall_restarts(mapper: Mapper, g, spec: MappingSpec,
+                         wall_budget: float) -> tuple:
+    """Best-of-k sequential single-trajectory restarts (consecutive
+    seeds, warm plan and pair caches — the steady-state session cost)
+    until ``wall_budget`` seconds are spent: the matched-wall baseline
+    the portfolio must beat to claim better objective-per-wall-second."""
+    plan = mapper.lower_for(g, spec)
+    best = float("inf")
+    k = 0
+    t0 = time.perf_counter()
+    while (time.perf_counter() - t0 < wall_budget
+           and k < MAX_RESTARTS) or k == 0:
+        best = min(best, plan.execute(g, seed=spec.seed + k
+                                      ).final_objective)
+        k += 1
+    return best, k, time.perf_counter() - t0
+
+
+def run(report, smoke: bool = False, out: str = "BENCH_portfolio.json"):
+    pod_counts = [1] if smoke else [1, 4]       # n = 256 · pods
+    single = MappingSpec(construction="random",
+                         neighborhood="communication",
+                         neighborhood_dist=PAIR_DIST,
+                         preconfiguration="eco", engine="device",
+                         seed=0, max_sweeps=MAX_SWEEPS)
+    # the tabu escape in isolation: same ONE trajectory (lanes=1 keeps
+    # the construction seed), tenure on, no kicks/rounds
+    tabu = single.replace(portfolio=PortfolioSpec(
+        lanes=1, rounds=1, tabu_tenure=TENURE))
+    portfolio = single.replace(portfolio=PortfolioSpec(
+        lanes=LANES, rounds=ROUNDS, tabu_tenure=TENURE,
+        kick_strength=KICK, stagnation=STAGNATION))
+    cells, headline = [], []
+    for pods in pod_counts:
+        g = mesh_workload(pods)
+        for tname, machine in _machines(pods).items():
+            mapper = Mapper(machine, single)
+            out_runs = {}
+            for mode, spec in (("single", single), ("tabu", tabu),
+                               ("portfolio", portfolio)):
+                res, dt = _timed_map(mapper, g, spec)
+                out_runs[mode] = (res, dt)
+                cells.append({
+                    "n": g.n, "topology": tname, "pipeline": mode,
+                    "seconds": dt,
+                    "initial_objective": res.initial_objective,
+                    "final_objective": res.final_objective,
+                    "gain_per_second": _gain_rate(res, dt),
+                })
+                report(f"portfolio/{tname}/n{g.n}/{mode}", dt * 1e6,
+                       f"J={res.final_objective:.4e}")
+            rs, ts = out_runs["single"]
+            rt, tt = out_runs["tabu"]
+            rp, tp = out_runs["portfolio"]
+            ew_best, ew_k, ew_wall = _equal_wall_restarts(
+                mapper, g, single, tp)
+            tol = 1e-5 * max(1.0, abs(rs.final_objective))
+            cmp = {
+                "n": g.n, "topology": tname,
+                "single_J": rs.final_objective,
+                "tabu_J": rt.final_objective,
+                "portfolio_J": rp.final_objective,
+                "improvement": 1.0 - rp.final_objective /
+                    max(rs.final_objective, 1e-12),
+                "single_seconds": ts, "tabu_seconds": tt,
+                "portfolio_seconds": tp,
+                "single_gain_per_s": _gain_rate(rs, ts),
+                "portfolio_gain_per_s": _gain_rate(rp, tp),
+                # the single-trajectory pipeline given the portfolio's
+                # wall budget as sequential restarts (best-of-k)
+                "equal_wall_single_J": ew_best,
+                "equal_wall_restarts": ew_k,
+                "equal_wall_seconds": ew_wall,
+                # strictly better objective from the same wall-seconds
+                # = equal-or-better objective per wall-second
+                "portfolio_beats_single":
+                    rp.final_objective < rs.final_objective - tol
+                    and rp.final_objective < ew_best - tol,
+                "tabu_escapes":
+                    rt.final_objective < rs.final_objective - tol,
+            }
+            headline.append(cmp)
+            report(f"portfolio/{tname}/n{g.n}/headline", 0,
+                   f"improvement={cmp['improvement']:.1%};"
+                   f"beats={cmp['portfolio_beats_single']};"
+                   f"tabu_escapes={cmp['tabu_escapes']}")
+
+    payload = {"mode": "smoke" if smoke else "full",
+               "workload": "mesh-collectives",
+               "max_sweeps": MAX_SWEEPS, "pair_dist": PAIR_DIST,
+               "portfolio": {"lanes": LANES, "rounds": ROUNDS,
+                             "tabu_tenure": TENURE,
+                             "kick_strength": KICK,
+                             "stagnation": STAGNATION},
+               "max_restarts": MAX_RESTARTS,
+               "cells": cells, "headline": headline}
+    with open(out, "w") as fh:
+        json.dump(payload, fh, indent=2)
+    report("portfolio/json_written", 0, out)
+    return payload
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="single-pod fleet only (CI)")
+    ap.add_argument("--out", default="BENCH_portfolio.json")
+    args = ap.parse_args(argv)
+    run(lambda n, us, d: print(f"{n},{us:.0f},{d}", flush=True),
+        smoke=args.smoke, out=args.out)
+
+
+if __name__ == "__main__":
+    main()

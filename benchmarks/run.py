@@ -9,7 +9,8 @@ import sys
 def main() -> None:
     from . import (bench_construction, bench_engine, bench_kernels,
                    bench_local_search, bench_mesh_mapping,
-                   bench_multilevel, bench_serve, bench_topology)
+                   bench_multilevel, bench_portfolio, bench_serve,
+                   bench_topology)
 
     def report(name: str, us: float, derived: str = ""):
         print(f"{name},{us:.0f},{derived}", flush=True)
@@ -26,6 +27,8 @@ def main() -> None:
     bench_engine.run(report, smoke=smoke)
     # multilevel axis: writes BENCH_multilevel.json (flat vs V-cycle)
     bench_multilevel.run(report, smoke=smoke)
+    # portfolio axis: writes BENCH_portfolio.json (single vs multistart)
+    bench_portfolio.run(report, smoke=smoke)
     # serving axis: writes BENCH_serve.json (MappingService vs per-request)
     bench_serve.run(report, smoke=smoke)
 

@@ -30,7 +30,14 @@ def main(argv=None):
     ap.add_argument("--compare_spec", default=None,
                     help="MappingSpec JSON: also solve with this spec and "
                          "print the comparison")
+    ap.add_argument("--seeds", type=int, default=1,
+                    help="with --compare_spec: solve with N consecutive "
+                         "seeds (spec.seed .. spec.seed+N-1) and report "
+                         "best/median/spread — the multistart variance "
+                         "portfolio search collapses")
     args = ap.parse_args(argv)
+    if args.seeds < 1:
+        sys.exit("evaluator: --seeds must be >= 1")
 
     g = read_metis(args.file)
     try:
@@ -54,15 +61,25 @@ def main(argv=None):
         try:
             spec = MappingSpec.from_json(
                 Path(args.compare_spec).read_text()).validate()
-            # staged explicitly so the plan geometry is reportable
+            # staged explicitly so the plan geometry is reportable (and
+            # so every seed reuses the one compiled plan)
             plan = Mapper(topo, spec).lower_for(g)
-            res = plan.execute(g)
+            results = [plan.execute(g, seed=spec.seed + i)
+                       for i in range(args.seeds)]
         except (ValueError, OSError) as exc:
             sys.exit(f"evaluator: {exc}")
-        ratio = j / res.final_objective if res.final_objective else \
-            float("inf")
+        js = sorted(r.final_objective for r in results)
+        best = js[0]
+        ratio = j / best if best else float("inf")
         print(f"viem[{spec.construction}+{spec.neighborhood}] "
-              f"J = {res.final_objective:.6g}")
+              f"J = {best:.6g}")
+        if args.seeds > 1:
+            median = float(np.median(js))
+            print(f"viem seeds          = {args.seeds} "
+                  f"(seed {spec.seed}..{spec.seed + args.seeds - 1})")
+            print(f"viem best/median    = {best:.6g} / {median:.6g}")
+            print(f"viem spread         = {js[-1] - js[0]:.6g} "
+                  f"(worst {js[-1]:.6g})")
         print(f"viem plan           = bucket {plan.bucket.tag()}, "
               f"{len(plan.machines)} level(s), engine={spec.engine}")
         print(f"given/viem ratio    = {ratio:.3f}")

@@ -14,6 +14,9 @@ Usage:
         [--engine=host|device]          # host drivers vs jitted device sweep
         [--explain]                     # lower only; print plan.describe()
         [--multilevel] [--multilevel_levels=4] [--multilevel_coarsen_min=64]
+        [--portfolio] [--portfolio_lanes=8] [--portfolio_rounds=4]
+        [--portfolio_tabu_tenure=8] [--portfolio_kick=0.15]
+        [--portfolio_stagnation=3]
         [--preconfiguration={strong,eco,fast}]  # one flag: partition +
                                         # engine sweeps + multilevel knobs
         [--config=spec.json]            # load a MappingSpec (flags override)
@@ -108,6 +111,26 @@ def main(argv=None):
     ap.add_argument("--multilevel_coarsen_min", type=int, default=None,
                     help="stop contracting below this many coarse "
                          "vertices")
+    ap.add_argument("--portfolio",
+                    action=argparse.BooleanOptionalAction, default=None,
+                    help="device-side portfolio search: vmapped multistart "
+                         "lanes with tabu memory, perturbation kicks, and "
+                         "tournament selection (repro.portfolio)")
+    ap.add_argument("--portfolio_lanes", type=int, default=None,
+                    help="restart trajectories per request (one vmapped "
+                         "engine call; 1 = single-trajectory)")
+    ap.add_argument("--portfolio_rounds", type=int, default=None,
+                    help="refine rounds at the finest level (rounds-1 "
+                         "perturb→refine rounds after the first)")
+    ap.add_argument("--portfolio_tabu_tenure", type=int, default=None,
+                    help="sweeps of tabu memory per applied exchange "
+                         "(0 = monotone sweep, bit-identical)")
+    ap.add_argument("--portfolio_kick", type=float, default=None,
+                    help="fraction of vertices each between-round "
+                         "perturbation kick touches")
+    ap.add_argument("--portfolio_stagnation", type=int, default=None,
+                    help="stop after this many rounds without improving "
+                         "the incumbent")
     ap.add_argument("--output_filename", default="permutation")
     args = ap.parse_args(argv)
 

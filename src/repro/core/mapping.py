@@ -54,9 +54,11 @@ __all__ = ["Mapper", "MapperService", "MappingResult", "MappingPlan",
 # default caps for the session caches (override via Mapper(cache_caps=...)):
 # "plans" bounds the Mapper's one plan LRU; "engines" bounds the shared
 # engine pool plans draw from; "pairs"/"pyramids" bound each plan's
-# per-request graph-content caches
+# per-request graph-content caches; "engine_graphs"/"engine_pairs" bound
+# each pooled engine's device-upload LRUs (see RefinementEngine)
 _DEFAULT_CACHE_CAPS = {"plans": 8, "engines": 8, "pairs": 16,
-                       "pyramids": 8}
+                       "pyramids": 8, "engine_graphs": 16,
+                       "engine_pairs": 16}
 
 
 # ------------------------------------------------------------------ session
@@ -91,6 +93,8 @@ class Mapper:
             caps.update(cache_caps)
         self._plan_caps = {"pairs": caps["pairs"],
                           "pyramids": caps["pyramids"]}
+        self._engine_caps = {"graphs": caps["engine_graphs"],
+                             "pairs": caps["engine_pairs"]}
         # THE session cache: lowered plans keyed by (seed-free spec,
         # bucket).  Evicted plans retire their counters into _retired so
         # cache_info() stays monotone.
@@ -117,7 +121,8 @@ class Mapper:
         before = self._engine_pool.builds
         eng = self._engine_pool.get_or_build(
             (machine.kernel_params(), int(max_sweeps)),
-            lambda: RefinementEngine(machine, max_sweeps=max_sweeps))
+            lambda: RefinementEngine(machine, max_sweeps=max_sweeps,
+                                     cache_caps=self._engine_caps))
         return eng, self._engine_pool.builds > before
 
     def _coarse_machines(self, depth: int) -> list:
@@ -216,6 +221,12 @@ class Mapper:
             "plan_evictions": self._plans.evictions,
             "plans": per_bucket,
             "engine_pool_evictions": self._engine_pool.evictions,
+            "engine_graph_evictions": sum(
+                e.cache_info()["graph_evictions"]
+                for e in list(self._engine_pool.values())),
+            "engine_pair_evictions": sum(
+                e.cache_info()["pair_evictions"]
+                for e in list(self._engine_pool.values())),
             "engine_builds": agg["engine_builds"],
             "kernel_compiles": agg["kernel_compiles"],
             "pair_cache_builds": agg["pair_builds"],
@@ -235,7 +246,8 @@ class Mapper:
         they must not lower full pipelines that would churn hot serving
         plans out of the cache."""
         spec = spec.replace(neighborhood=None, engine="host",
-                            multilevel=None, parallel_sweeps=False)
+                            multilevel=None, portfolio=None,
+                            parallel_sweeps=False)
         return self.lower(None, spec)
 
     def objective(self, g: CommGraph, perm: np.ndarray,

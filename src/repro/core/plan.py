@@ -222,6 +222,18 @@ class MappingPlan:
                 eng, built = engine_factory(m, self.max_sweeps)
                 self.engine_builds += bool(built)
                 self.engines.append(eng)
+        # portfolio runner: the vmapped multistart/tabu search layer over
+        # the finest-level engine (repro.portfolio) — per-lane
+        # constructions resolved here, at lower time, like everything else
+        self.portfolio = None
+        if self.spec.portfolio is not None:
+            from ..portfolio import PortfolioRunner
+            names = dict.fromkeys(
+                [self.spec.construction]
+                + list(self.spec.portfolio.constructions or ()))
+            self.portfolio = PortfolioRunner(
+                self.engines[0], self.spec.portfolio,
+                [(nm, resolve_construction(nm)) for nm in names])
         self.kernel_compiles = 0
         self._objective_fn = None
         if self.spec.backend == "pallas":
@@ -261,6 +273,8 @@ class MappingPlan:
             "multilevel": (None if self._ml is None else
                            {"levels": self._ml[0],
                             "coarsen_min": self._ml[1]}),
+            "portfolio": (None if self.portfolio is None else
+                          self.portfolio.describe()),
             "levels": levels,
             "compiled": {"engines": self.engine_builds,
                          "kernels": self.kernel_compiles},
@@ -413,6 +427,8 @@ class MappingPlan:
         seed = self.spec.seed if seed is None else int(seed)
         self._check(g)
         self.executes += 1
+        if self.portfolio is not None:
+            return self._execute_portfolio(g, seed)
         if self._ml is not None:
             return self._execute_multilevel(g, seed)
         perm, t_cons, j0 = self._construct_one(g, seed)
@@ -446,6 +462,11 @@ class MappingPlan:
         if not graphs:
             return []
         seed = self.spec.seed if seed is None else int(seed)
+        if self.portfolio is not None:
+            # the lane axis already fills the vmap batch dimension — each
+            # graph runs its own portfolio (lanes × graphs would multiply
+            # the device footprint, not amortize it)
+            return [self.execute(g, seed=seed) for g in graphs]
         if self._ml is not None:
             for g in graphs:
                 self._check(g)
@@ -532,6 +553,70 @@ class MappingPlan:
                              r.construction_seconds,
                              elapsed - r.construction_seconds, r.stats)
                 for g, r in zip(graphs, results)]
+
+    # ------------------------------------------------------------- portfolio
+    def _execute_portfolio(self, g: CommGraph, seed: int) -> MappingResult:
+        """The portfolio pipeline (:mod:`repro.portfolio`): L lanes
+        constructed with per-lane seeds, refined per level as ONE vmapped
+        lane call (descending the V-cycle when the spec is multilevel),
+        then the device round loop — kick → refine → tournament — at the
+        finest level.  ``PortfolioSpec(lanes=1, rounds=1, tabu_tenure=0)``
+        degenerates to the non-portfolio pipeline bit-for-bit (tested)."""
+        runner = self.portfolio
+        empty = np.zeros((0, 2), np.int64)
+        t1 = None
+        if self._ml is not None:
+            from ..multilevel.coarsen import project_perm
+            pyramid = self._pyramid(g, seed)
+            coarsest = pyramid[-1]
+            t0 = time.perf_counter()
+            perms = runner.construct_lanes(coarsest.graph,
+                                           coarsest.machine, self._cfg,
+                                           seed)
+            t_cons = time.perf_counter() - t0
+            t1 = time.perf_counter()
+            j0s = []
+            pairs0 = pyramid[0].pairs
+            for lvl in range(len(pyramid) - 1, -1, -1):
+                level = pyramid[lvl]
+                if lvl == 0:
+                    j0s = [self.objective(level.graph, p) for p in perms]
+                else:
+                    j0s = [qap_objective(level.graph, level.machine, p)
+                           for p in perms]
+                runner.refine_lanes(level.graph, perms, level.pairs,
+                                    j0s=j0s,
+                                    bucket=self.bucket if lvl == 0
+                                    else None,
+                                    engine=self.engines[lvl])
+                if lvl > 0:
+                    perms = [project_perm(p, level.fine_u, level.fine_v)
+                             for p in perms]
+        else:
+            t0 = time.perf_counter()
+            perms = runner.construct_lanes(g, self.topology, self._cfg,
+                                           seed)
+            t_cons = time.perf_counter() - t0
+            j0s = [self.objective(g, p) for p in perms]
+            t1 = time.perf_counter()
+            pairs0 = self._pairs(g, seed) if self._nb is not None \
+                else empty
+            lane_stats = runner.refine_lanes(g, perms, pairs0, j0s=j0s,
+                                             bucket=self.bucket)
+        res = runner.run_rounds(g, perms, pairs0, j0s,
+                                bucket=self.bucket, seed=seed)
+        t_search = time.perf_counter() - t1
+        j0 = min(j0s) if j0s else self.objective(g, res.perm)
+        stats = SearchStats()
+        stats.initial_objective = j0
+        stats.final_objective = qap_objective(g, self.topology, res.perm)
+        stats.swaps = res.swaps
+        stats.evaluated = res.sweeps * len(pairs0)
+        if self._ml is None:
+            stats.swaps += sum(s.swaps for s in lane_stats)
+            stats.evaluated += sum(s.evaluated for s in lane_stats)
+        stats.objective_trace = [j0] + res.round_objectives
+        return self._finish(g, res.perm, j0, t_cons, t_search, stats)
 
 
 def _plan_from_dict(d: dict) -> MappingPlan:

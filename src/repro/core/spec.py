@@ -249,6 +249,80 @@ class MultilevelSpec:
 
 
 @dataclass(frozen=True)
+class PortfolioSpec:
+    """Knobs for the device-side portfolio search
+    (:mod:`repro.portfolio`): ``lanes`` restart trajectories run as ONE
+    vmapped engine call per level, then ``rounds - 1`` perturb→refine
+    rounds at the finest level with device-side tournament selection of
+    the incumbent.
+
+    ``tabu_tenure`` sweeps of tabu memory per applied exchange (0 turns
+    the tabu masking off — bit-for-bit the monotone sweep);
+    ``dont_look`` enables the don't-look bits (only active alongside a
+    nonzero tenure); ``kick_strength`` is the fraction of vertices each
+    between-round perturbation kick touches; ``stagnation`` stops the
+    round loop after that many rounds without improving the incumbent.
+    ``constructions`` optionally names a per-lane construction portfolio
+    (cycled across lanes); ``None`` seeds every lane from the spec's one
+    ``construction`` with per-lane seeds.
+
+    ``lanes=1`` with ``rounds=1`` and ``tabu_tenure=0`` is the
+    degeneracy escape hatch: bit-for-bit the non-portfolio pipeline.
+    """
+
+    lanes: int = 8
+    rounds: int = 4
+    tabu_tenure: int = 8
+    kick_strength: float = 0.15
+    stagnation: int = 3
+    dont_look: bool = True
+    constructions: tuple | None = None
+
+    def __post_init__(self):
+        if isinstance(self.constructions, list):
+            object.__setattr__(self, "constructions",
+                               tuple(self.constructions))
+
+    def validate(self) -> "PortfolioSpec":
+        from .construction import resolve_construction
+        if self.lanes < 1:
+            raise ValueError("portfolio lanes must be >= 1")
+        if self.rounds < 1:
+            raise ValueError("portfolio rounds must be >= 1")
+        if self.tabu_tenure < 0:
+            raise ValueError("portfolio tabu_tenure must be >= 0")
+        if not 0.0 <= self.kick_strength <= 1.0:
+            raise ValueError("portfolio kick_strength must be in [0, 1]")
+        if self.stagnation < 1:
+            raise ValueError("portfolio stagnation must be >= 1")
+        if self.constructions is not None:
+            if not self.constructions:
+                raise ValueError("portfolio constructions must be None "
+                                 "or a non-empty sequence of names")
+            for name in self.constructions:
+                resolve_construction(name)
+        return self
+
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        if self.constructions is not None:
+            d["constructions"] = list(self.constructions)
+        return d
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "PortfolioSpec":
+        known = {f.name for f in dataclasses.fields(cls)}
+        unknown = sorted(set(d) - known)
+        if unknown:
+            raise ValueError(f"unknown PortfolioSpec keys {unknown}; "
+                             f"known keys: {sorted(known)}")
+        return cls(**d)
+
+    def replace(self, **changes) -> "PortfolioSpec":
+        return dataclasses.replace(self, **changes)
+
+
+@dataclass(frozen=True)
 class MappingSpec:
     """Declarative description of one mapping computation (guide §4.1).
 
@@ -269,7 +343,11 @@ class MappingSpec:
     coarsen → map → uncoarsen V-cycle over the device engine
     (:mod:`repro.multilevel`); ``None`` (the default) keeps the flat
     single-level pipeline, and ``MultilevelSpec(levels=1)`` is
-    bit-for-bit identical to it.
+    bit-for-bit identical to it.  ``portfolio`` enables the vmapped
+    multistart search with tabu memory (:mod:`repro.portfolio`); ``None``
+    keeps the single-trajectory pipeline, and
+    ``PortfolioSpec(lanes=1, rounds=1, tabu_tenure=0)`` is bit-for-bit
+    identical to it.
     """
 
     construction: str = "hierarchytopdown"
@@ -284,6 +362,7 @@ class MappingSpec:
     max_pairs: int = 2_000_000
     topology: TopologySpec | None = None
     multilevel: MultilevelSpec | None = None
+    portfolio: PortfolioSpec | None = None
 
     def __post_init__(self):
         if self.neighborhood in _NONE_ALIASES:
@@ -294,6 +373,9 @@ class MappingSpec:
         if isinstance(self.multilevel, dict):
             object.__setattr__(self, "multilevel",
                                MultilevelSpec.from_dict(self.multilevel))
+        if isinstance(self.portfolio, dict):
+            object.__setattr__(self, "portfolio",
+                               PortfolioSpec.from_dict(self.portfolio))
 
     # ------------------------------------------------------------ validation
     def validate(self) -> "MappingSpec":
@@ -329,6 +411,12 @@ class MappingSpec:
                     "multilevel mapping runs the device refinement "
                     "engine at every level; set engine='device' "
                     "(or pass --engine=device)")
+        if self.portfolio is not None:
+            self.portfolio.validate()
+            if self.engine != "device":
+                raise ValueError(
+                    "portfolio search runs the vmapped device refinement "
+                    "engine; set engine='device' (or pass --engine=device)")
         return self
 
     # ------------------------------------------------------- dict/json forms
@@ -338,6 +426,8 @@ class MappingSpec:
             d["topology"] = self.topology.to_dict()
         if self.multilevel is not None:
             d["multilevel"] = self.multilevel.to_dict()
+        if self.portfolio is not None:
+            d["portfolio"] = self.portfolio.to_dict()
         return d
 
     # -------------------------------------------------------- resolution
@@ -410,6 +500,27 @@ class MappingSpec:
             # --engine still wins (validate() rejects host + multilevel)
             if getattr(args, "engine", None) is None and \
                     spec.engine == "host":
+                overrides["engine"] = "device"
+        pf_on = getattr(args, "portfolio", None)
+        pf_flags = {
+            "lanes": getattr(args, "portfolio_lanes", None),
+            "rounds": getattr(args, "portfolio_rounds", None),
+            "tabu_tenure": getattr(args, "portfolio_tabu_tenure", None),
+            "kick_strength": getattr(args, "portfolio_kick", None),
+            "stagnation": getattr(args, "portfolio_stagnation", None),
+        }
+        pf_set = {k: v for k, v in pf_flags.items() if v is not None}
+        if pf_on is False:
+            overrides["portfolio"] = None            # --no-portfolio
+        elif pf_on or pf_set:
+            pf = spec.portfolio or PortfolioSpec()
+            if pf_set:
+                pf = pf.replace(**pf_set)
+            overrides["portfolio"] = pf
+            # the portfolio runs over the device engine; an explicit
+            # --engine still wins (validate() rejects host + portfolio)
+            if getattr(args, "engine", None) is None and \
+                    overrides.get("engine", spec.engine) == "host":
                 overrides["engine"] = "device"
         return spec.replace(**overrides) if overrides else spec
 

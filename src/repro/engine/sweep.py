@@ -30,13 +30,35 @@ def _make_refine(kind: str, params: tuple, max_sweeps: int,
                  use_pallas: bool = False, interpret: bool = False):
     """The device sweep fn for one distance form.
 
-    Signature: ``(nbr, wgt, eu, ev, ew, us, vs, perm0, D, eps) ->
-    (perm, trace, sweeps, swaps)`` — all jnp, no host syncs inside; the
-    trace is the carried objective after each sweep (NaN past
-    convergence).  Monotone by construction: every sweep either applies a
-    greedy maximal matching verified (against the recomputed device
-    objective) to beat the best single swap, or falls back to that best
-    pair with its exact incremental gain.
+    Signature: ``(nbr, wgt, eu, ev, ew, us, vs, perm0, D, eps, tenure,
+    dlb) -> (perm, trace, sweeps, swaps)`` — all jnp, no host syncs
+    inside; the trace is the carried objective after each sweep (NaN past
+    convergence).  Monotone in its *result* by construction: every sweep
+    either applies a greedy maximal matching verified (against the
+    recomputed device objective) to beat the best single swap, or falls
+    back to the best single pair with its exact incremental gain, and the
+    returned permutation is the best one seen.
+
+    ``tenure``/``dlb`` are RUNTIME scalars (int32 / bool) — tabu memory
+    and don't-look bits compile into the same executable as the plain
+    monotone sweep and are enabled by masking, never by retracing:
+
+      * ``tenure > 0`` — a swapped candidate pair becomes tabu for that
+        many sweeps (rejecting the immediate reversal), tabu pairs are
+        masked out of selection unless they would beat the best-seen
+        objective (aspiration), and when no positive-gain move remains
+        the sweep takes the best *non-tabu* move even downhill — the
+        robust-tabu-search escape from the local optima the monotone
+        matching converges to (Paul, arXiv:1009.4880).  The sweep then
+        runs to its budget; the best-seen permutation is returned.
+      * ``dlb`` — vertices whose incident candidate pairs all had
+        non-positive gain go *cold*; pairs with both endpoints cold are
+        skipped until a nearby move (the vertex itself or an ELL
+        neighbor) wakes them.  Selection-level only: gains are still
+        computed (fixed shapes), cold regions just stop attracting moves.
+
+    With ``tenure == 0`` and ``dlb == False`` every mask is identity and
+    the loop is bit-for-bit the pre-tabu monotone sweep (tested).
     """
     import jax
     import jax.numpy as jnp
@@ -49,11 +71,15 @@ def _make_refine(kind: str, params: tuple, max_sweeps: int,
                                         us, vs, D, interpret=interpret)
         return pg.pair_gains(kind, params, nbr, wgt, perm, us, vs, D)
 
-    def refine_fn(nbr, wgt, eu, ev, ew, us, vs, perm0, D, eps):
+    def refine_fn(nbr, wgt, eu, ev, ew, us, vs, perm0, D, eps,
+                  tenure, dlb):
+        refine_fn.traces += 1           # host-side: counts (re)traces only
         n = perm0.shape[0]
         p = us.shape[0]
         idx = jnp.arange(p, dtype=jnp.int32)
         oob = jnp.int32(n)                      # scatter-drop index
+        tabu_on = tenure > 0
+        neg_inf = jnp.float32(-jnp.inf)
 
         def objective(perm):
             return pg.edge_objective(kind, params, eu, ev, ew, perm, D)
@@ -63,14 +89,23 @@ def _make_refine(kind: str, params: tuple, max_sweeps: int,
                           jnp.float32).at[0].set(j0)
 
         def cond(state):
-            perm, j, trace, sweeps, swaps, done = state
-            return (~done) & (sweeps < max_sweeps)
+            return (~state["done"]) & (state["sweeps"] < max_sweeps)
 
         def body(state):
-            perm, j, trace, sweeps, swaps, done = state
+            perm, j, sweeps = state["perm"], state["j"], state["sweeps"]
+            swaps, best_j = state["swaps"], state["best_j"]
             g = gains_of(nbr, wgt, perm, us, vs, D)
-            best = jnp.argmax(g)                # first max → lowest index
-            gbest = g[best]
+            # ---- tabu / don't-look masking (identity when both are off:
+            # every `blocked` bit is False and g_m is g, bit-for-bit)
+            aspire = (j - g) < best_j - eps     # would beat the best seen
+            blocked = (tabu_on & (state["tabu_until"] > sweeps) & ~aspire)
+            blocked |= dlb & state["cold"][us] & state["cold"][vs]
+            # under tabu the fallback may move downhill, so inert padding
+            # pairs (u == v, gain 0) must never be "best" — mask them too
+            blocked |= tabu_on & (us == vs)
+            g_m = jnp.where(blocked, neg_inf, g)
+            best = jnp.argmax(g_m)              # first max → lowest index
+            gbest = g_m[best]
             any_pos = gbest > eps
 
             # ---- greedy maximal matching by gain priority: rounds of
@@ -78,12 +113,12 @@ def _make_refine(kind: str, params: tuple, max_sweeps: int,
             # endpoints, ties → lowest index) until no eligible pair is
             # left — the parallel equivalent of popping a gain-ordered
             # priority queue while skipping used vertices
-            pos = g > eps
+            pos = g_m > eps
 
             def match_round(mstate):
                 sel, used = mstate
                 elig = pos & ~used[us] & ~used[vs]
-                ge = jnp.where(elig, g, -jnp.inf)
+                ge = jnp.where(elig, g_m, -jnp.inf)
                 vmax = jnp.full((n,), -jnp.inf, jnp.float32)
                 vmax = vmax.at[us].max(ge).at[vs].max(ge)
                 cand = elig & (ge >= vmax[us]) & (ge >= vmax[vs])
@@ -112,26 +147,67 @@ def _make_refine(kind: str, params: tuple, max_sweeps: int,
             j_m = objective(perm_m)             # device O(m) — swaps of a
             take = any_pos & (j_m < j - gbest)  # matching interact, verify
 
-            # ---- fallback: the single best pair, exact incremental gain
+            # ---- fallback: the single best pair, exact incremental gain;
+            # under tabu, with no positive gain left, the best *eligible*
+            # pair is taken even downhill (the escape move) — padding and
+            # fully-blocked states leave gbest at -inf, which ends the loop
             ub, vb = us[best], vs[best]
             perm_f = perm.at[ub].set(perm[vb]).at[vb].set(perm[ub])
-            fall = any_pos & ~take
+            fall_down = tabu_on & ~any_pos & (gbest > neg_inf)
+            fall = (any_pos & ~take) | fall_down
+            moved = any_pos | fall_down
 
             perm_n = jnp.where(take, perm_m, jnp.where(fall, perm_f, perm))
             j_n = jnp.where(take, j_m, jnp.where(fall, j - gbest, j))
             swaps_n = swaps + jnp.where(
                 take, jnp.sum(sel, dtype=jnp.int32),
                 jnp.where(fall, jnp.int32(1), jnp.int32(0)))
-            sweeps_n = jnp.where(any_pos, sweeps + 1, sweeps)
-            trace_n = trace.at[sweeps_n].set(j_n)
-            return perm_n, j_n, trace_n, sweeps_n, swaps_n, ~any_pos
+            sweeps_n = jnp.where(moved, sweeps + 1, sweeps)
+            trace_n = state["trace"].at[sweeps_n].set(j_n)
 
-        state = (perm0, j0, trace0, jnp.int32(0), jnp.int32(0),
-                 jnp.bool_(False))
-        perm, j, trace, sweeps, swaps, _ = jax.lax.while_loop(
-            cond, body, state)
-        return perm, trace, sweeps, swaps
+            # ---- tabu memory: pairs applied this sweep reject their
+            # reversal for `tenure` sweeps
+            applied = jnp.where(take, sel, (idx == best) & fall)
+            tabu_until = jnp.where(applied & tabu_on, sweeps_n + tenure,
+                                   state["tabu_until"])
 
+            # ---- don't-look bits: a vertex with no positive incident
+            # gain goes cold; a move wakes the endpoints and their ELL
+            # neighbors (selection-level masking only — see docstring)
+            warm = jnp.zeros((n,), jnp.int32)
+            pos_raw = (g > eps).astype(jnp.int32)
+            warm = warm.at[us].max(pos_raw).at[vs].max(pos_raw) > 0
+            moved_v = jnp.zeros((n,), jnp.bool_)
+            moved_v = moved_v.at[jnp.where(applied, us, oob)].set(
+                True, mode="drop")
+            moved_v = moved_v.at[jnp.where(applied, vs, oob)].set(
+                True, mode="drop")
+            wake = moved_v | jnp.any(moved_v[nbr] & (wgt > 0), axis=1)
+            cold = jnp.where(wake, False, state["cold"] | ~warm)
+
+            # ---- best-seen tracking (with tabu off, j is monotone and
+            # best == current, bit-for-bit)
+            improved = j_n < state["best_j"]
+            return {
+                "perm": perm_n, "j": j_n, "trace": trace_n,
+                "sweeps": sweeps_n, "swaps": swaps_n, "done": ~moved,
+                "best_perm": jnp.where(improved, perm_n,
+                                       state["best_perm"]),
+                "best_j": jnp.where(improved, j_n, state["best_j"]),
+                "tabu_until": tabu_until, "cold": cold,
+            }
+
+        state = {
+            "perm": perm0, "j": j0, "trace": trace0,
+            "sweeps": jnp.int32(0), "swaps": jnp.int32(0),
+            "done": jnp.bool_(False), "best_perm": perm0, "best_j": j0,
+            "tabu_until": jnp.zeros((p,), jnp.int32),
+            "cold": jnp.zeros((n,), jnp.bool_),
+        }
+        out = jax.lax.while_loop(cond, body, state)
+        return out["best_perm"], out["trace"], out["sweeps"], out["swaps"]
+
+    refine_fn.traces = 0
     return refine_fn
 
 
@@ -158,7 +234,8 @@ class RefinementEngine:
 
     def __init__(self, topology, max_sweeps: int = 64,
                  eps_rel: float = _EPS_REL, use_pallas: bool | None = None,
-                 interpret: bool | None = None):
+                 interpret: bool | None = None,
+                 cache_caps: dict | None = None):
         import jax
         import jax.numpy as jnp
         kp = topology.kernel_params()
@@ -168,18 +245,40 @@ class RefinementEngine:
         self.eps_rel = float(eps_rel)
         on_tpu = jax.default_backend() == "tpu"
         self.use_pallas = on_tpu if use_pallas is None else bool(use_pallas)
-        interpret = (not on_tpu) if interpret is None else bool(interpret)
+        self.interpret = (not on_tpu) if interpret is None \
+            else bool(interpret)
+        interpret = self.interpret
         if self.kind == "matrix":
             params = ()
             self._D = jnp.asarray(topology.matrix(), jnp.float32)
         else:
             params = kp[1:]
             self._D = jnp.zeros((1, 1), jnp.float32)    # ignored dummy
+        self.params = params
         fn = _make_refine(self.kind, params, self.max_sweeps,
                           use_pallas=self.use_pallas, interpret=interpret)
-        self._refine = jax.jit(fn)
+        self._refine_fn = fn            # raw sweep fn (fn.traces counts
+        self._refine = jax.jit(fn)      # retraces — the tabu-masking
+        # regression check asserts toggling tenure/dlb adds none)
         self._vrefine = jax.jit(jax.vmap(
-            fn, in_axes=(0, 0, 0, 0, 0, 0, 0, 0, None, 0)))
+            fn, in_axes=(0, 0, 0, 0, 0, 0, 0, 0, None, 0, None, None)))
+        # lane axis: ONE graph shared across a portfolio's restart lanes
+        # (in_axes=None for every graph/pair array — no per-lane copies)
+        self._lrefine = jax.jit(jax.vmap(
+            fn, in_axes=(None, None, None, None, None, None, None, 0,
+                         None, 0, None, None)))
+        # internal LRU caps: session-level `cache_caps` plumbing (Mapper
+        # passes {"graphs": ..., "pairs": ...}); evictions surface in
+        # cache_info()
+        self._caps = {"graphs": 16, "pairs": 16}
+        if cache_caps:
+            unknown = sorted(set(cache_caps) - set(self._caps))
+            if unknown:
+                raise ValueError(f"unknown engine cache_caps keys "
+                                 f"{unknown}; known: "
+                                 f"{sorted(self._caps)}")
+            self._caps.update({k: int(v) for k, v in cache_caps.items()})
+        self._evictions = {"graphs": 0, "pairs": 0}
         # device uploads keyed by full array content (LRU): graph ELL/edge
         # arrays and candidate-pair arrays — long-lived serve() sessions
         # re-map the same structures, and the pair arrays alone can reach
@@ -197,17 +296,36 @@ class RefinementEngine:
         self._p_hwm: dict = {}
 
     # ------------------------------------------------------------- host glue
-    @staticmethod
-    def _lru_get(cache: OrderedDict, key: tuple, build, size: int = 16):
+    def _lru_get(self, cache: OrderedDict, key: tuple, build, cap: str):
+        """Bounded fetch-or-build against ``self._caps[cap]`` (the
+        session-level ``cache_caps`` plumbing); drops surface as
+        ``cache_info()[f"{cap[:-1]}_evictions"]``."""
         val = cache.get(key)
         if val is None:
             val = build()
             cache[key] = val
-            if len(cache) > size:
+            if len(cache) > self._caps[cap]:
                 cache.popitem(last=False)
+                self._evictions[cap] += 1
         else:
             cache.move_to_end(key)
         return val
+
+    def cache_info(self) -> dict:
+        """Device-upload cache accounting: live entry counts plus the
+        evictions forced by the ``cache_caps`` bounds."""
+        return {
+            "graph_entries": len(self._dg_cache),
+            "graph_evictions": self._evictions["graphs"],
+            "pair_entries": len(self._pair_cache),
+            "pair_evictions": self._evictions["pairs"],
+        }
+
+    def trace_count(self) -> int:
+        """How many times the sweep fn has been (re)traced — the
+        tabu-masking regression check asserts this stays flat when
+        ``tabu_tenure``/``dlb`` toggle at runtime."""
+        return self._refine_fn.traces
 
     def _device_graph(self, g: CommGraph, k: int | None = None,
                       e: int | None = None) -> DeviceGraph:
@@ -224,13 +342,14 @@ class RefinementEngine:
                                e if e is not None else dg.eu.shape[0])
             return dg
 
-        return self._lru_get(self._dg_cache, key, build)
+        return self._lru_get(self._dg_cache, key, build, "graphs")
 
     def _device_pairs(self, pairs: np.ndarray, pad_to: int = 128) -> tuple:
         pairs = np.asarray(pairs)
         key = (pad_to, pairs.shape[0], hash(pairs.tobytes()))
         return self._lru_get(self._pair_cache, key,
-                             lambda: device_pairs(pairs, pad_to=pad_to))
+                             lambda: device_pairs(pairs, pad_to=pad_to),
+                             "pairs")
 
     def _bucket_p(self, bucket, n_pairs: int) -> int:
         key = (bucket.max_deg, bucket.num_edges, bucket.num_pairs,
@@ -257,9 +376,17 @@ class RefinementEngine:
         stats.objective_trace = [float(x) for x in trace[:int(sweeps) + 1]]
         return stats
 
+    @staticmethod
+    def _toggles(tabu_tenure: int, dlb: bool) -> tuple:
+        """Runtime tabu/don't-look scalars as jnp arrays — value changes
+        never retrace the compiled executables (masking, not retracing)."""
+        import jax.numpy as jnp
+        return jnp.int32(tabu_tenure), jnp.bool_(dlb)
+
     # ------------------------------------------------------------------ API
     def refine(self, g: CommGraph, perm: np.ndarray, pairs: np.ndarray,
-               j0: float | None = None, bucket=None) -> SearchStats:
+               j0: float | None = None, bucket=None,
+               tabu_tenure: int = 0, dlb: bool = False) -> SearchStats:
         """Refine ``perm`` in place over the candidate ``pairs`` — the
         device counterpart of ``parallel_sweep_search`` (one device
         dispatch, no host syncs until convergence).  ``j0`` is the
@@ -268,7 +395,10 @@ class RefinementEngine:
         recomputed on host.  ``bucket`` (a
         :class:`~repro.core.spec.ShapeBucket`) pads the device arrays to
         the plan's fixed shapes so every same-bucket request reuses one
-        compiled executable — inert, results unchanged."""
+        compiled executable — inert, results unchanged.
+        ``tabu_tenure``/``dlb`` enable the tabu memory and don't-look
+        bits (see :func:`_make_refine`) — runtime toggles sharing the one
+        executable; the defaults are bit-for-bit the pre-tabu sweep."""
         import jax.numpy as jnp
         if j0 is None:
             j0 = qap_objective(g, self.topology, perm)
@@ -286,16 +416,18 @@ class RefinementEngine:
         else:
             dg = self._device_graph(g)
             us, vs = self._device_pairs(pairs)
+        tenure, dlb_ = self._toggles(tabu_tenure, dlb)
         out_perm, trace, sweeps, swaps = self._refine(
             dg.nbr, dg.wgt, dg.eu, dg.ev, dg.ew, us, vs,
             jnp.asarray(perm, jnp.int32), self._D,
-            jnp.float32(self._eps(j0)))
+            jnp.float32(self._eps(j0)), tenure, dlb_)
         perm[:] = np.asarray(out_perm, dtype=perm.dtype)
         return self._stats(g, perm, j0, np.asarray(trace), int(sweeps),
                            int(swaps), len(pairs))
 
     def refine_batch(self, graphs, perms, pairs_list,
-                     j0s=None, bucket=None) -> list[SearchStats]:
+                     j0s=None, bucket=None, tabu_tenure: int = 0,
+                     dlb: bool = False) -> list[SearchStats]:
         """One vmapped device call over a batch of same-shape graphs.
 
         Per-graph arrays are padded to the batch's common (K, E, P)
@@ -325,6 +457,7 @@ class RefinementEngine:
             dgs = [dg.pad_to(k_max, e_max) for dg in dgs]
         dev_pairs = [self._device_pairs(p, pad_to=p_max)
                      for p in pairs_list]
+        tenure, dlb_ = self._toggles(tabu_tenure, dlb)
         stack = lambda xs: jnp.stack(xs)                      # noqa: E731
         out_perm, trace, sweeps, swaps = self._vrefine(
             stack([dg.nbr for dg in dgs]), stack([dg.wgt for dg in dgs]),
@@ -334,13 +467,61 @@ class RefinementEngine:
             stack([v for _, v in dev_pairs]),
             stack([jnp.asarray(p, jnp.int32) for p in perms]),
             self._D,
-            jnp.asarray([self._eps(j) for j in j0s], jnp.float32))
+            jnp.asarray([self._eps(j) for j in j0s], jnp.float32),
+            tenure, dlb_)
         out = []
         for i, (g, perm) in enumerate(zip(graphs, perms)):
             perm[:] = np.asarray(out_perm[i], dtype=perm.dtype)
             out.append(self._stats(g, perm, j0s[i], np.asarray(trace[i]),
                                    int(sweeps[i]), int(swaps[i]),
                                    len(pairs_list[i])))
+        return out
+
+    def refine_lanes(self, g: CommGraph, perms, pairs: np.ndarray,
+                     j0s=None, bucket=None, tabu_tenure: int = 0,
+                     dlb: bool = False) -> list[SearchStats]:
+        """One vmapped device call over L restart *lanes* of ONE graph —
+        the portfolio counterpart of :meth:`refine_batch`: the graph and
+        candidate-pair arrays are shared across lanes (``in_axes=None``,
+        no per-lane copies), only the permutations and eps thresholds
+        carry a lane axis.  Each lane's result equals a single
+        :meth:`refine` of that lane's permutation (tested)."""
+        import jax.numpy as jnp
+        perms = list(perms)
+        if not perms:
+            return []
+        if j0s is None:
+            j0s = [qap_objective(g, self.topology, p) for p in perms]
+        if len(pairs) == 0:
+            out = []
+            for perm, j0 in zip(perms, j0s):
+                stats = SearchStats()
+                stats.initial_objective = stats.final_objective = j0
+                stats.objective_trace = [j0]
+                out.append(stats)
+            return out
+        if bucket is not None:
+            dg = self._device_graph(g, k=bucket.max_deg,
+                                    e=bucket.num_edges)
+            us, vs = self._device_pairs(pairs,
+                                        pad_to=self._bucket_p(
+                                            bucket, len(pairs)))
+        else:
+            dg = self._device_graph(g)
+            us, vs = self._device_pairs(pairs)
+        tenure, dlb_ = self._toggles(tabu_tenure, dlb)
+        out_perm, trace, sweeps, swaps = self._lrefine(
+            dg.nbr, dg.wgt, dg.eu, dg.ev, dg.ew, us, vs,
+            jnp.stack([jnp.asarray(p, jnp.int32) for p in perms]),
+            self._D,
+            jnp.asarray([self._eps(j) for j in j0s], jnp.float32),
+            tenure, dlb_)
+        out = []
+        for i, perm in enumerate(perms):
+            perm[:] = np.asarray(out_perm[i], dtype=perm.dtype)
+            out.append(self._stats(g, perm, j0s[i], np.asarray(trace[i]),
+                                   int(sweeps[i]), int(swaps[i]),
+                                   len(pairs)))
         return out
 
 

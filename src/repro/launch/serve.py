@@ -79,15 +79,28 @@ class MappingService:
     ``max_pending > 0`` bounds the request queue: ``submit`` then blocks
     when the service falls behind (backpressure), and ``stats()`` exposes
     queue depth, batch shape, cache hits, and latency percentiles.
+
+    ``quality_classes`` maps per-request quality names to
+    :class:`~repro.core.spec.PortfolioSpec` overlays (``None`` = strip
+    any portfolio — the single-trajectory fast path).  ``submit(g,
+    quality="strong")`` rewrites the request's spec with that overlay, so
+    both classes share the one plan cache (distinct specs, distinct
+    plans) and the fast path stays zero-overhead.  Defaults:
+    ``{"fast": None, "strong": PortfolioSpec()}``.
     """
 
     def __init__(self, mapper, *, schedule: str = "pow2",
                  max_batch: int = 8, max_wait_s: float = 0.005,
                  result_cache_size: int = 256, max_pending: int = 0,
+                 quality_classes: "dict | None" = None,
                  requests: "queue.Queue | None" = None,
                  results: "queue.Queue | None" = None):
+        from ..core.spec import PortfolioSpec
         self.mapper = mapper
         self.schedule = schedule
+        self.quality_classes = (
+            {"fast": None, "strong": PortfolioSpec()}
+            if quality_classes is None else dict(quality_classes))
         self.max_batch = int(max_batch)
         self.max_wait_s = float(max_wait_s)
         self.requests = (requests if requests is not None else
@@ -106,6 +119,7 @@ class MappingService:
         self._deduped = 0
         self._errors = 0
         self._peak_depth = 0
+        self._quality_served: "dict[str, int]" = {}
         # sliding latency window: long-lived services keep reporting
         # *recent* p50/p99, not the first N requests forever
         self._latencies: "deque[float]" = deque(maxlen=65536)
@@ -115,26 +129,34 @@ class MappingService:
         self._thread.start()
 
     # ------------------------------------------------------------- client
-    def submit(self, g, spec=None,
+    def submit(self, g, spec=None, quality: str | None = None,
                timeout: float | None = None) -> int:
         """Enqueue one graph; blocks when ``max_pending`` is set and the
         queue is full (backpressure) — ``timeout`` bounds that wait
         (``queue.Full`` on expiry; no ticket was consumed from the
-        caller's perspective).  The put happens under the close lock so
-        an accepted ticket can never race the shutdown sentinel onto a
-        dead queue (close() waits on the same lock; the worker keeps
-        draining meanwhile, so a full queue cannot deadlock)."""
+        caller's perspective).  ``quality`` selects a quality class from
+        ``quality_classes`` (``None`` = the spec as-is).  The put happens
+        under the close lock so an accepted ticket can never race the
+        shutdown sentinel onto a dead queue (close() waits on the same
+        lock; the worker keeps draining meanwhile, so a full queue cannot
+        deadlock)."""
+        if quality is not None and quality not in self.quality_classes:
+            raise ValueError(f"unknown quality class {quality!r}; "
+                             f"registered: "
+                             f"{sorted(self.quality_classes)}")
         with self._lock:
             if self._closed:
                 raise RuntimeError("MappingService is closed; requests "
                                    "submitted now would never be served")
             ticket = next(self._tickets)
-            self.requests.put((ticket, g, spec, time.perf_counter()),
-                              timeout=timeout)
+            self.requests.put(
+                (ticket, g, spec, quality, time.perf_counter()),
+                timeout=timeout)
         self._peak_depth = max(self._peak_depth, self.requests.qsize())
         return ticket
 
-    def map(self, g, spec=None, timeout: float | None = None):
+    def map(self, g, spec=None, quality: str | None = None,
+            timeout: float | None = None):
         """Synchronous convenience: submit one graph and wait for its
         result (other clients' results are requeued, so concurrent use is
         safe only through ``submit``/``results``).  ``timeout`` bounds
@@ -143,7 +165,8 @@ class MappingService:
         deadline = (None if timeout is None
                     else time.perf_counter() + timeout)
         try:
-            ticket = self.submit(g, spec, timeout=timeout)
+            ticket = self.submit(g, spec, quality=quality,
+                                 timeout=timeout)
         except queue.Full:
             raise TimeoutError(
                 f"MappingService.map: request queue still full after "
@@ -172,6 +195,7 @@ class MappingService:
         self._served = self._batches = self._batched_requests = 0
         self._max_batch_seen = self._cache_hits = self._deduped = 0
         self._errors = self._peak_depth = 0
+        self._quality_served = {}
         self._latencies = deque(maxlen=65536)
 
     def stats(self) -> dict:
@@ -193,6 +217,7 @@ class MappingService:
             "in_tick_deduped": self._deduped,
             "result_cache_size": len(self._result_cache),
             "errors": self._errors,
+            "quality_served": dict(self._quality_served),
             "queue_depth": self.requests.qsize(),
             "peak_queue_depth": self._peak_depth,
             "latency_p50_s": pct(0.50),
@@ -242,24 +267,44 @@ class MappingService:
             if stop:
                 break
 
+    def _resolve_quality(self, spec, quality):
+        """Overlay a quality class onto a request spec: ``None`` strips
+        the portfolio (fast path), a PortfolioSpec enables it (forcing
+        the device engine it requires)."""
+        overlay = self.quality_classes[quality]
+        spec = spec.replace(portfolio=overlay)
+        if overlay is not None and spec.engine != "device":
+            spec = spec.replace(engine="device")
+        return spec
+
     def _process(self, batch):
         """Answer warm repeats from the result cache, then group misses
-        by (spec, shape bucket) and run each group through one
-        ``plan.execute_batch``."""
+        by (resolved spec, shape bucket) and run each group through one
+        ``plan.execute_batch``.  Quality classes resolve here, once per
+        (spec, quality) per tick — both classes share the one plan
+        cache."""
         from ..core.plan import _structure_key
         groups: "OrderedDict[tuple, list]" = OrderedDict()
-        spec_keys: dict = {}               # seed-free spec JSON per spec
-        for ticket, g, spec, t_sub in batch:
+        resolved: dict = {}    # (id(spec), quality) → (spec, spec key)
+        for ticket, g, spec, quality, t_sub in batch:
             spec = self.mapper.spec if spec is None else spec
             try:
-                skey = spec_keys.get(id(spec))
-                if skey is None:
-                    spec = spec.validate()
-                    skey = self.mapper._plan_key(spec, None)[0]
-                    spec_keys[id(spec)] = skey
+                rkey = (id(spec), quality)
+                hit = resolved.get(rkey)
+                if hit is None:
+                    eff = spec.validate()
+                    if quality is not None:
+                        eff = self._resolve_quality(eff, quality
+                                                    ).validate()
+                    hit = (eff, self.mapper._plan_key(eff, None)[0])
+                    resolved[rkey] = hit
+                spec, skey = hit
                 self.mapper._check_size(g)
                 ckey = (skey, spec.seed,
                         _structure_key(g, with_weights=True))
+                qname = quality or "default"
+                self._quality_served[qname] = \
+                    self._quality_served.get(qname, 0) + 1
             except Exception as exc:
                 self._emit(ticket, exc, t_sub)
                 continue

@@ -1,0 +1,27 @@
+"""Device-side portfolio search: vmapped multistart trajectories with
+tabu memory, perturbation kicks, and tournament selection.
+
+VieM's quality comes from restarting construction + refinement and
+keeping the best result; this package spends idle accelerator lanes on
+exactly that.  A :class:`PortfolioRunner` runs L restart *lanes* of the
+refinement pipeline as ONE vmapped engine call per level (the graph and
+candidate-pair arrays are shared across lanes — only the permutations
+carry a lane axis), then iterates perturb → refine rounds entirely on
+device: a ``lax.while_loop`` that kicks every lane
+(:mod:`.kicks` — random segment reversal or swap storms), re-refines,
+and tournament-selects the incumbent, stopping on stagnation or the
+round budget.  Tabu tenure and don't-look bits
+(:mod:`repro.engine.sweep`) let lanes walk downhill out of the local
+optima the monotone matching converges to (Paul, arXiv:1009.4880);
+Schulz & Träff (arXiv:1702.04164) report the multistart-portfolio
+effect on mapping quality that motivates the lane axis.
+
+Configured by :class:`repro.core.spec.PortfolioSpec` inside a
+``MappingSpec``; lowered into :class:`repro.core.plan.MappingPlan` and
+exposed per request through ``MappingService`` quality classes.
+"""
+
+from .kicks import make_kick
+from .search import PortfolioRunner, RoundsResult
+
+__all__ = ["make_kick", "PortfolioRunner", "RoundsResult"]

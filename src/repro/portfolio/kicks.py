@@ -1,0 +1,56 @@
+"""On-device perturbation kicks: bijective permutation perturbations
+applied between portfolio rounds.
+
+A kick must (a) stay a bijection — the refinement engine only ever
+swaps, so validity is preserved downstream — and (b) have a fixed shape
+regardless of the sampled randomness, so every round reuses the one
+compiled executable.  Two classic perturbations satisfy both:
+
+* **segment reversal** — reverse a random length-k window of the
+  assignment array (wrapping around), the permutation analogue of a
+  Lin-Kernighan double-bridge restart: it relocates a contiguous block
+  of processes wholesale.
+* **swap storm** — k random transpositions applied in sequence, a
+  diffuse shake that spreads displacement across the whole machine.
+
+Each kick flips a coin between the two, so a portfolio's lanes explore
+both perturbation geometries over the rounds.
+"""
+
+from __future__ import annotations
+
+
+def make_kick(n: int, kick_frac: float):
+    """Build the jit-able kick ``(perm, key) -> perm`` for ``n``-element
+    permutations touching ``ceil(kick_frac * n)`` vertices (at least 2,
+    at most ``n``) per application.  ``kick_frac`` is compile-time — it
+    fixes the window/storm length, hence the executable's shapes."""
+    import jax
+    import jax.numpy as jnp
+
+    klen = max(2, min(n, int(round(kick_frac * n))))
+    idx = jnp.arange(n, dtype=jnp.int32)
+
+    def kick(perm, key):
+        kc, ks, kw = jax.random.split(key, 3)
+        # --- segment reversal: positions s .. s+klen-1 (mod n) reversed;
+        # offset o = (i - s) mod n maps to klen-1-o, i.e. source index
+        # (2s + klen - 1 - i) mod n — a bijection on the window
+        s = jax.random.randint(ks, (), 0, n, dtype=jnp.int32)
+        in_seg = ((idx - s) % n) < klen
+        src = jnp.where(in_seg, (2 * s + klen - 1 - idx) % n, idx)
+        reversed_ = perm[src]
+        # --- swap storm: klen random transpositions in sequence (u == v
+        # draws are identity transpositions — harmless, fixed shape)
+        uv = jax.random.randint(kw, (klen, 2), 0, n, dtype=jnp.int32)
+
+        def one(p, pair):
+            u, v = pair[0], pair[1]
+            pu, pv = p[u], p[v]
+            return p.at[u].set(pv).at[v].set(pu), None
+
+        storm, _ = jax.lax.scan(one, perm, uv)
+        return jnp.where(jax.random.bernoulli(kc), reversed_, storm)
+
+    kick.klen = klen
+    return kick

@@ -1,0 +1,247 @@
+"""The portfolio round loop and its host-side runner.
+
+``_make_rounds`` builds the pure device function: starting from L
+already-refined lane permutations, a ``lax.while_loop`` over rounds
+where the worse half of the population adopts the incumbent, every lane
+is perturbed (:mod:`.kicks`), every lane re-refines (the engine's sweep
+fn vmapped over the lane axis — graph and pair arrays shared, no
+per-lane copies), and the incumbent is tournament-selected as the
+device-side argmin of the lane objectives.  The loop stops on the round
+budget or after ``stagnation`` rounds without improving the incumbent —
+no host syncs between rounds.
+
+:class:`PortfolioRunner` is the host glue a
+:class:`~repro.core.plan.MappingPlan` lowers once per spec: per-lane
+registered constructions (cycled across lanes, per-lane seeds), the
+engine's cached device uploads, and the jitted rounds executable (one
+per shape bucket, compiled lazily by jax like every other engine
+executable).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from ..core.graph import CommGraph
+from ..core.local_search import SearchStats
+from ..engine.sweep import RefinementEngine, _make_refine
+
+
+def _make_rounds(kind: str, params: tuple, max_sweeps: int, lanes: int,
+                 rounds: int, kick_frac: float, stagnation: int,
+                 use_pallas: bool = False, interpret: bool = False):
+    """The device round loop for one distance form and lane geometry.
+
+    Signature: ``(nbr, wgt, eu, ev, ew, us, vs, perms, D, epss, tenure,
+    dlb, key) -> (inc_perm, inc_j, round_js, rounds_done, sweeps,
+    swaps)`` where ``perms`` is the (L, n) stack of *round-0 refined*
+    lane permutations.  ``lanes``/``rounds``/``kick_frac``/``stagnation``
+    are compile-time (they fix shapes and trip counts); ``tenure``/
+    ``dlb`` stay runtime scalars exactly as in the refine fn.
+    ``round_js`` is the incumbent objective after each round (NaN past
+    the stop), ``rounds_done`` counts executed rounds including round 0.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from ..kernels import pair_gain as pg
+    from .kicks import make_kick
+
+    refine = _make_refine(kind, params, max_sweeps,
+                          use_pallas=use_pallas, interpret=interpret)
+    vrefine = jax.vmap(refine, in_axes=(None, None, None, None, None,
+                                        None, None, 0, None, 0, None,
+                                        None))
+    half = (lanes + 1) // 2                 # lanes=1 → nobody adopts
+
+    def rounds_fn(nbr, wgt, eu, ev, ew, us, vs, perms, D, epss,
+                  tenure, dlb, key):
+        n = perms.shape[1]
+        kick = make_kick(n, kick_frac)
+        vkick = jax.vmap(kick)
+
+        def vobj(ps):
+            return jax.vmap(
+                lambda p: pg.edge_objective(kind, params, eu, ev, ew,
+                                            p, D))(ps)
+
+        js0 = vobj(perms)
+        b0 = jnp.argmin(js0)
+        trace0 = jnp.full((rounds,), jnp.nan,
+                          jnp.float32).at[0].set(js0[b0])
+        state = {
+            "perms": perms, "js": js0,
+            "inc_perm": perms[b0], "inc_j": js0[b0],
+            "round": jnp.int32(1), "stall": jnp.int32(0),
+            "key": key, "round_js": trace0,
+            "sweeps": jnp.int32(0), "swaps": jnp.int32(0),
+        }
+
+        def cond(st):
+            return (st["round"] < rounds) & (st["stall"] < stagnation)
+
+        def body(st):
+            key, kk = jax.random.split(st["key"])
+            # tournament seeding: the worse half of the population
+            # restarts from the incumbent (rank 0 = best lane)
+            rank = jnp.argsort(jnp.argsort(st["js"]))
+            adopt = rank >= half
+            ps = jnp.where(adopt[:, None], st["inc_perm"][None, :],
+                           st["perms"])
+            ps = vkick(ps, jax.random.split(kk, lanes))
+            ps, _, sw, sp = vrefine(nbr, wgt, eu, ev, ew, us, vs, ps,
+                                    D, epss, tenure, dlb)
+            js = vobj(ps)
+            b = jnp.argmin(js)
+            improved = js[b] < st["inc_j"]
+            inc_perm = jnp.where(improved, ps[b], st["inc_perm"])
+            inc_j = jnp.where(improved, js[b], st["inc_j"])
+            return {
+                "perms": ps, "js": js,
+                "inc_perm": inc_perm, "inc_j": inc_j,
+                "round": st["round"] + 1,
+                "stall": jnp.where(improved, jnp.int32(0),
+                                   st["stall"] + 1),
+                "key": key,
+                "round_js": st["round_js"].at[st["round"]].set(inc_j),
+                "sweeps": st["sweeps"] + jnp.sum(sw),
+                "swaps": st["swaps"] + jnp.sum(sp),
+            }
+
+        out = jax.lax.while_loop(cond, body, state)
+        return (out["inc_perm"], out["inc_j"], out["round_js"],
+                out["round"], out["sweeps"], out["swaps"])
+
+    return rounds_fn
+
+
+@dataclass
+class RoundsResult:
+    """One portfolio run's host-facing accounting: the incumbent
+    permutation, the per-round incumbent objectives (round 0 = the
+    multistart best, host-truncated at the stop), executed rounds, and
+    the device sweep/swap totals across lanes and rounds."""
+    perm: np.ndarray
+    round_objectives: list[float] = field(default_factory=list)
+    rounds: int = 1
+    sweeps: int = 0
+    swaps: int = 0
+
+
+class PortfolioRunner:
+    """Host glue between a plan and the portfolio device loop.
+
+    Lowered once per (spec × engine): resolves the per-lane construction
+    cycle against the registry, fixes the lane geometry, and jits the
+    rounds executable over the finest-level engine's sweep fn.  Runtime
+    inputs are the graph, the candidate pairs, and the seed — like every
+    other engine executable, shapes specialize per bucket and nothing
+    compiled depends on the seed.
+    """
+
+    def __init__(self, engine: RefinementEngine, pspec, constructions):
+        self.engine = engine
+        self.pspec = pspec
+        # (name, fn) per lane — the construction portfolio cycled across
+        # the lane axis
+        names = list(pspec.constructions or ()) or [constructions[0][0]]
+        by_name = dict(constructions)
+        self.lane_constructions = [
+            (names[i % len(names)], by_name[names[i % len(names)]])
+            for i in range(pspec.lanes)]
+        # tabu/dlb runtime toggles: don't-look bits only matter alongside
+        # a nonzero tenure (without it the sweep is monotone and stops at
+        # the first coldworthy state anyway)
+        self.tabu_tenure = int(pspec.tabu_tenure)
+        self.dlb = bool(pspec.dont_look) and self.tabu_tenure > 0
+        self._rounds_jit = None
+
+    # ------------------------------------------------------------ describe
+    def describe(self) -> dict:
+        """Lane geometry for ``plan.describe()``."""
+        return {
+            "lanes": self.pspec.lanes,
+            "rounds": self.pspec.rounds,
+            "tabu_tenure": self.tabu_tenure,
+            "dont_look": self.dlb,
+            "kick_strength": self.pspec.kick_strength,
+            "stagnation": self.pspec.stagnation,
+            "lane_constructions": [name for name, _
+                                   in self.lane_constructions],
+        }
+
+    # ------------------------------------------------------------- stages
+    def construct_lanes(self, g: CommGraph, machine, cfg,
+                        seed: int) -> list[np.ndarray]:
+        """Per-lane initial permutations: lane i runs its registered
+        construction with seed ``seed + i``."""
+        return [fn(g, machine, seed=seed + i, cfg=cfg)
+                for i, (_, fn) in enumerate(self.lane_constructions)]
+
+    def refine_lanes(self, g: CommGraph, perms, pairs, j0s=None,
+                     bucket=None, engine: RefinementEngine | None = None
+                     ) -> list[SearchStats]:
+        """One vmapped refine of all lanes (round 0, and every coarse
+        V-cycle level) — the engine's lane path with this portfolio's
+        tabu toggles applied."""
+        return (engine or self.engine).refine_lanes(
+            g, perms, pairs, j0s=j0s, bucket=bucket,
+            tabu_tenure=self.tabu_tenure, dlb=self.dlb)
+
+    def _rounds(self):
+        if self._rounds_jit is None:
+            import jax
+            eng = self.engine
+            self._rounds_jit = jax.jit(_make_rounds(
+                eng.kind, eng.params, eng.max_sweeps,
+                lanes=self.pspec.lanes, rounds=self.pspec.rounds,
+                kick_frac=self.pspec.kick_strength,
+                stagnation=self.pspec.stagnation,
+                use_pallas=eng.use_pallas, interpret=eng.interpret))
+        return self._rounds_jit
+
+    def run_rounds(self, g: CommGraph, perms, pairs, j0s,
+                   bucket=None, seed: int = 0) -> RoundsResult:
+        """The perturb → refine → tournament round loop from the round-0
+        refined lane ``perms`` — ONE device dispatch for all remaining
+        rounds.  With ``rounds=1`` (or no candidate pairs) there is
+        nothing to perturb: the incumbent is the host argmin over the
+        lanes, keeping the pure-multistart path free of kick noise."""
+        import jax
+        import jax.numpy as jnp
+        eng = self.engine
+        js = [float(qap_objective_of(eng, g, p)) for p in perms]
+        if self.pspec.rounds <= 1 or len(pairs) == 0:
+            b = int(np.argmin(js))
+            return RoundsResult(perm=np.asarray(perms[b]).copy(),
+                                round_objectives=[js[b]], rounds=1)
+        if bucket is not None:
+            dg = eng._device_graph(g, k=bucket.max_deg,
+                                   e=bucket.num_edges)
+            us, vs = eng._device_pairs(
+                pairs, pad_to=eng._bucket_p(bucket, len(pairs)))
+        else:
+            dg = eng._device_graph(g)
+            us, vs = eng._device_pairs(pairs)
+        inc_perm, _, round_js, rounds_done, sweeps, swaps = self._rounds()(
+            dg.nbr, dg.wgt, dg.eu, dg.ev, dg.ew, us, vs,
+            jnp.stack([jnp.asarray(p, jnp.int32) for p in perms]),
+            eng._D,
+            jnp.asarray([eng._eps(j) for j in j0s], jnp.float32),
+            *eng._toggles(self.tabu_tenure, self.dlb),
+            jax.random.PRNGKey(seed))
+        rounds_done = int(rounds_done)
+        return RoundsResult(
+            perm=np.asarray(inc_perm, dtype=np.int64),
+            round_objectives=[float(x)
+                              for x in np.asarray(round_js)[:rounds_done]],
+            rounds=rounds_done, sweeps=int(sweeps), swaps=int(swaps))
+
+
+def qap_objective_of(engine: RefinementEngine, g: CommGraph,
+                     perm) -> float:
+    """Host float64 objective against the engine's topology."""
+    from ..core.objective import qap_objective
+    return qap_objective(g, engine.topology, perm)

@@ -1,0 +1,299 @@
+"""Device-side portfolio search: PortfolioSpec plumbing, the lanes=1
+degeneracy (bit-for-bit the flat pipeline), vmapped lane parity, tabu
+escape + no-retrace masking regression, kick bijectivity, engine cache
+caps, service quality classes, and the evaluator --seeds satellite."""
+
+import argparse
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.core import (Hierarchy, Mapper, MappingSpec, grid3d,
+                        qap_objective, random_geometric, write_metis)
+from repro.core.construction import construct
+from repro.core.local_search import communication_pairs
+from repro.core.spec import PortfolioSpec
+from repro.engine import RefinementEngine
+from repro.topology import TorusTopology, TreeTopology
+
+REPO = Path(__file__).resolve().parents[1]
+H64 = Hierarchy((4, 4, 4), (1.0, 10.0, 100.0))
+
+
+def _dev_spec(**kw):
+    base = dict(construction="random", neighborhood="communication",
+                neighborhood_dist=2, preconfiguration="fast",
+                engine="device", seed=1)
+    base.update(kw)
+    return MappingSpec(**base)
+
+
+# ------------------------------------------------------------------- spec
+def test_portfolio_spec_round_trip_and_validation():
+    p = PortfolioSpec(lanes=4, rounds=2, tabu_tenure=5,
+                      constructions=["random", "growing"])
+    assert p.constructions == ("random", "growing")   # list → tuple
+    assert PortfolioSpec.from_dict(p.to_dict()) == p
+    json.dumps(p.to_dict())                           # JSON-safe
+    with pytest.raises(ValueError, match="unknown PortfolioSpec keys"):
+        PortfolioSpec.from_dict({"lanes": 2, "tempo": 1})
+    for bad in (dict(lanes=0), dict(rounds=0), dict(tabu_tenure=-1),
+                dict(kick_strength=1.5), dict(stagnation=0),
+                dict(constructions=())):
+        with pytest.raises(ValueError, match="portfolio"):
+            PortfolioSpec(**bad).validate()
+    with pytest.raises(ValueError, match="construction"):
+        PortfolioSpec(constructions=("nope",)).validate()
+
+
+def test_mapping_spec_carries_portfolio_and_requires_device():
+    spec = _dev_spec(portfolio=PortfolioSpec(lanes=2))
+    # dict round trip rebuilds the nested spec
+    spec2 = MappingSpec.from_dict(json.loads(spec.to_json()))
+    assert spec2.portfolio == spec.portfolio
+    assert isinstance(spec2.portfolio, PortfolioSpec)
+    with pytest.raises(ValueError, match="device"):
+        spec.replace(engine="host").validate()
+
+
+def test_from_flags_builds_and_strips_portfolio():
+    ns = lambda **kw: argparse.Namespace(**kw)  # noqa: E731
+    # --portfolio alone: defaults + auto device engine
+    spec = MappingSpec.from_flags(ns(portfolio=True))
+    assert spec.portfolio == PortfolioSpec()
+    assert spec.engine == "device"
+    # sub-flags imply --portfolio and override fields
+    spec = MappingSpec.from_flags(ns(portfolio_lanes=3,
+                                     portfolio_kick=0.5))
+    assert spec.portfolio.lanes == 3
+    assert spec.portfolio.kick_strength == 0.5
+    assert spec.portfolio.rounds == PortfolioSpec().rounds
+    # explicit --engine still wins over the auto-upgrade
+    spec = MappingSpec.from_flags(ns(portfolio=True, engine="host"))
+    with pytest.raises(ValueError, match="device"):
+        spec.validate()
+    # --no-portfolio strips a config-file portfolio
+    base = _dev_spec(portfolio=PortfolioSpec())
+    assert MappingSpec.from_flags(ns(portfolio=False),
+                                  base=base).portfolio is None
+
+
+# -------------------------------------------------------------- degeneracy
+@pytest.mark.parametrize("extra", [
+    {},
+    {"multilevel": {"levels": 2, "coarsen_min": 8}},
+])
+def test_lanes1_tabu_off_reproduces_flat_execute_bit_for_bit(extra):
+    """PortfolioSpec(1, 1, 0) is the escape hatch: same perm, same
+    objectives as the non-portfolio pipeline — flat and multilevel."""
+    g = grid3d(4, 4, 4)
+    flat_spec = _dev_spec(**extra)
+    pf_spec = flat_spec.replace(portfolio=PortfolioSpec(
+        lanes=1, rounds=1, tabu_tenure=0, dont_look=False))
+    want = Mapper(H64, flat_spec).map(g)
+    got = Mapper(H64, pf_spec).map(g)
+    assert np.array_equal(want.perm, got.perm)
+    assert want.final_objective == got.final_objective
+    assert want.initial_objective == got.initial_objective
+
+
+def test_vmapped_lanes_equal_independent_single_runs():
+    """engine.refine_lanes over L stacked perms == L sequential
+    engine.refine calls, lane by lane (shared graph/pair arrays are
+    inert)."""
+    topo = TreeTopology(hierarchy=H64)
+    g = random_geometric(64, 0.25, seed=3)
+    pairs = communication_pairs(g, 2)
+    perms0 = [construct("random", g, topo, seed=s) for s in range(4)]
+    eng = RefinementEngine(topo, max_sweeps=32)
+    lanes = [p.copy() for p in perms0]
+    lane_stats = eng.refine_lanes(g, lanes, pairs,
+                                  tabu_tenure=6, dlb=True)
+    for p0, lane, st in zip(perms0, lanes, lane_stats):
+        single = p0.copy()
+        sst = eng.refine(g, single, pairs, tabu_tenure=6, dlb=True)
+        assert np.array_equal(lane, single)
+        assert st.final_objective == sst.final_objective
+
+
+# ---------------------------------------------------------------- tabu/dlb
+def test_tabu_escapes_local_optimum_strictly():
+    """Tenure on, same single trajectory: the sweep walks downhill out
+    of the monotone local optimum and returns a strictly better best-seen
+    permutation (the paper's tabu escape, measured on a fixed cell)."""
+    topo = TorusTopology((8, 8))
+    g = grid3d(4, 4, 4)
+    pairs = communication_pairs(g, 2)
+    eng = RefinementEngine(topo, max_sweeps=64)
+    mono = construct("random", g, topo, seed=0)
+    tabu = mono.copy()
+    eng.refine(g, mono, pairs)
+    eng.refine(g, tabu, pairs, tabu_tenure=8, dlb=True)
+    j_mono = qap_objective(g, topo, mono)
+    j_tabu = qap_objective(g, topo, tabu)
+    assert j_tabu < j_mono     # escaped: strictly better, not just equal
+    assert sorted(tabu.tolist()) == list(range(g.n))
+
+
+def test_tabu_off_is_bit_identical_to_plain_sweep():
+    """tenure=0/dlb=False masking is the identity — not merely close."""
+    topo = TreeTopology(hierarchy=H64)
+    g = random_geometric(64, 0.2, seed=7)
+    pairs = communication_pairs(g, 2)
+    eng = RefinementEngine(topo, max_sweeps=32)
+    a = construct("random", g, topo, seed=1)
+    b = a.copy()
+    sa = eng.refine(g, a, pairs)
+    sb = eng.refine(g, b, pairs, tabu_tenure=0, dlb=False)
+    assert np.array_equal(a, b)
+    assert sa.final_objective == sb.final_objective
+
+
+def test_tabu_toggle_is_masking_not_retracing():
+    """Regression: tenure/dlb are runtime scalars — toggling them across
+    calls must reuse the ONE compiled executable (trace count flat)."""
+    topo = TreeTopology(hierarchy=H64)
+    g = grid3d(4, 4, 4)
+    pairs = communication_pairs(g, 2)
+    eng = RefinementEngine(topo, max_sweeps=16)
+    for tenure, dlb in ((0, False), (8, True), (3, False), (17, True)):
+        perm = construct("random", g, topo, seed=tenure)
+        eng.refine(g, perm, pairs, tabu_tenure=tenure, dlb=dlb)
+    assert eng.trace_count() == 1
+
+
+# -------------------------------------------------------------------- kicks
+def test_kick_is_a_permutation_and_seed_steered():
+    import jax
+    from repro.portfolio import make_kick
+    n = 37
+    kick = make_kick(n, 0.2)
+    assert 2 <= kick.klen <= n
+    perm = np.random.default_rng(0).permutation(n).astype(np.int32)
+    import jax.numpy as jnp
+    out1 = np.asarray(kick(jnp.asarray(perm), jax.random.PRNGKey(1)))
+    out2 = np.asarray(kick(jnp.asarray(perm), jax.random.PRNGKey(2)))
+    same = np.asarray(kick(jnp.asarray(perm), jax.random.PRNGKey(1)))
+    for out in (out1, out2):
+        assert sorted(out.tolist()) == list(range(n))   # still a perm
+        assert not np.array_equal(out, perm)            # actually kicked
+    assert np.array_equal(out1, same)                   # deterministic
+    assert not np.array_equal(out1, out2)               # key-steered
+
+
+# ---------------------------------------------------------------- portfolio
+def test_portfolio_never_loses_to_its_own_lane0():
+    """Lane 0 shares the single pipeline's construction seed, and the
+    tournament incumbent only improves — so the portfolio result can
+    never be worse than the flat single-trajectory result."""
+    g = random_geometric(64, 0.25, seed=3)
+    single = _dev_spec(seed=0)
+    pf = single.replace(portfolio=PortfolioSpec(
+        lanes=4, rounds=3, tabu_tenure=0, dont_look=False,
+        kick_strength=0.2, stagnation=2))
+    js = Mapper(H64, single).map(g).final_objective
+    res = Mapper(H64, pf).map(g)
+    assert res.final_objective <= js + 1e-9 * abs(js)
+    assert sorted(res.perm.tolist()) == list(range(64))
+    assert res.final_objective == pytest.approx(
+        qap_objective(g, TreeTopology(hierarchy=H64), res.perm))
+
+
+def test_portfolio_plan_describe_reports_lane_geometry():
+    spec = _dev_spec(portfolio=PortfolioSpec(
+        lanes=3, rounds=2, constructions=("random", "growing")))
+    plan = Mapper(H64, spec).lower_for(grid3d(4, 4, 4))
+    d = plan.describe()["portfolio"]
+    assert d["lanes"] == 3 and d["rounds"] == 2
+    assert d["lane_constructions"] == ["random", "growing", "random"]
+    json.dumps(plan.describe())
+
+
+def test_portfolio_multilevel_vcycle_executes():
+    spec = _dev_spec(multilevel={"levels": 2, "coarsen_min": 8},
+                     portfolio=PortfolioSpec(lanes=2, rounds=2,
+                                             stagnation=1))
+    res = Mapper(H64, spec).map(grid3d(4, 4, 4))
+    assert sorted(res.perm.tolist()) == list(range(64))
+    assert res.final_objective <= res.initial_objective
+
+
+# ------------------------------------------------------------- cache caps
+def test_engine_cache_caps_bound_uploads_and_report_evictions():
+    topo = TreeTopology(hierarchy=H64)
+    eng = RefinementEngine(topo, max_sweeps=8,
+                           cache_caps={"graphs": 2, "pairs": 2})
+    graphs = [random_geometric(64, 0.2, seed=s) for s in range(3)]
+    for g in graphs:
+        eng.refine(g, construct("random", g, topo, seed=0),
+                   communication_pairs(g, 2))
+    info = eng.cache_info()
+    assert info["graph_entries"] <= 2
+    assert info["graph_evictions"] >= 1
+    with pytest.raises(ValueError, match="cache_caps"):
+        RefinementEngine(topo, cache_caps={"grphs": 4})
+
+
+def test_mapper_cache_caps_reach_the_shared_engine():
+    mapper = Mapper(H64, _dev_spec(),
+                    cache_caps={"engine_graphs": 2, "engine_pairs": 2})
+    for s in range(3):
+        mapper.map(random_geometric(64, 0.2, seed=s))
+    info = mapper.cache_info()
+    assert info["engine_graph_evictions"] >= 1
+
+
+# -------------------------------------------------------- quality classes
+def test_service_quality_classes_share_one_plan_cache():
+    from repro.launch.serve import MappingService
+    g = grid3d(4, 4, 4)
+    spec = _dev_spec()
+    mapper = Mapper(H64, spec)
+    strong = PortfolioSpec(lanes=2, rounds=2, stagnation=1)
+    with MappingService(mapper, max_wait_s=0.05,
+                        quality_classes={"fast": None,
+                                         "strong": strong}) as svc:
+        rf = svc.map(g, quality="fast", timeout=300)
+        rs = svc.map(g, quality="strong", timeout=300)
+        rd = svc.map(g, timeout=300)            # spec as-is = fast path
+        stats = svc.stats()
+        with pytest.raises(ValueError, match="quality"):
+            svc.submit(g, quality="turbo")
+    assert stats["quality_served"] == {"fast": 1, "strong": 1,
+                                       "default": 1}
+    # the default request is answered by the fast class's plan/cache
+    assert np.array_equal(rd.perm, rf.perm)
+    assert rs.final_objective <= rf.final_objective + 1e-9
+    # fast + default share one plan; strong adds exactly one more
+    assert mapper.cache_info()["plan_builds"] == 2
+
+
+# --------------------------------------------------------- evaluator seeds
+def test_evaluator_seeds_reports_best_median_spread(tmp_path):
+    g = grid3d(4, 4, 4)
+    gpath = tmp_path / "g.metis"
+    write_metis(g, str(gpath))
+    mpath = tmp_path / "perm.txt"
+    np.savetxt(mpath, np.arange(64, dtype=np.int64), fmt="%d")
+    spath = tmp_path / "spec.json"
+    spath.write_text(_dev_spec(seed=0).to_json())
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.cli.evaluator", str(gpath),
+         f"--input_mapping={mpath}",
+         "--hierarchy_parameter_string=4:4:4",
+         "--distance_parameter_string=1:10:100",
+         f"--compare_spec={spath}", "--seeds=3"],
+        capture_output=True, text=True, cwd=REPO,
+        env={"PYTHONPATH": str(REPO / "src"), "PATH": "/usr/bin:/bin",
+             "JAX_PLATFORMS": "cpu"})
+    assert r.returncode == 0, r.stderr
+    assert "viem seeds          = 3 (seed 0..2)" in r.stdout
+    assert "viem best/median" in r.stdout
+    assert "viem spread" in r.stdout
+    best = float(r.stdout.split("viem best/median    = ")[1].split(" /")[0])
+    worst = float(r.stdout.split("(worst ")[1].split(")")[0])
+    assert best <= worst
