@@ -19,7 +19,6 @@ real TPU widens the gap).
 from __future__ import annotations
 
 import argparse
-import json
 import time
 
 from repro.core import qap_objective, tpu_v5e_fleet
@@ -108,8 +107,8 @@ def run(report, smoke: bool = False, out: str = "BENCH_engine.json"):
                "workload": "mesh-collectives",
                "max_sweeps": MAX_SWEEPS, "pair_dist": PAIR_DIST,
                "cells": cells, "headline": headline}
-    with open(out, "w") as fh:
-        json.dump(payload, fh, indent=2)
+    from ._common import write_bench
+    payload = write_bench(payload, out)
     report("engine/json_written", 0, out)
     return payload
 

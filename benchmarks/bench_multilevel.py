@@ -22,7 +22,6 @@ multilevel pipeline pays its full per-graph cost honestly.
 from __future__ import annotations
 
 import argparse
-import json
 import time
 
 from repro.core import Mapper, MappingSpec, MultilevelSpec, tpu_v5e_fleet
@@ -104,8 +103,8 @@ def run(report, smoke: bool = False, out: str = "BENCH_multilevel.json"):
                "multilevel": {"preconfiguration": "eco",
                               "levels": 4, "coarsen_min": 64},
                "cells": cells, "headline": headline}
-    with open(out, "w") as fh:
-        json.dump(payload, fh, indent=2)
+    from ._common import write_bench
+    payload = write_bench(payload, out)
     report("multilevel/json_written", 0, out)
     return payload
 

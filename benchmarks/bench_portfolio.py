@@ -37,7 +37,6 @@ honestly.
 from __future__ import annotations
 
 import argparse
-import json
 import time
 
 from repro.core import Mapper, MappingSpec, tpu_v5e_fleet
@@ -180,8 +179,8 @@ def run(report, smoke: bool = False, out: str = "BENCH_portfolio.json"):
                              "stagnation": STAGNATION},
                "max_restarts": MAX_RESTARTS,
                "cells": cells, "headline": headline}
-    with open(out, "w") as fh:
-        json.dump(payload, fh, indent=2)
+    from ._common import write_bench
+    payload = write_bench(payload, out)
     report("portfolio/json_written", 0, out)
     return payload
 

@@ -25,7 +25,6 @@ latency, batch/cache accounting, and the headline
 from __future__ import annotations
 
 import argparse
-import json
 import time
 
 import numpy as np
@@ -160,8 +159,8 @@ def run(report, smoke: bool = False, out: str = "BENCH_serve.json"):
             "meets_3x": speedup >= 3.0,
         },
     }
-    with open(out, "w") as fh:
-        json.dump(payload, fh, indent=2)
+    from ._common import write_bench
+    payload = write_bench(payload, out)
     report("serve/baseline/us_per_req", t_base / n_req * 1e6,
            f"p99={_pct(lat_base, 0.99):.3f}s")
     report("serve/service/us_per_req", t_serve / n_req * 1e6,

@@ -14,7 +14,6 @@ torus* (the machine the traffic actually crosses).
 from __future__ import annotations
 
 import argparse
-import json
 import time
 
 import numpy as np
@@ -131,8 +130,8 @@ def run(report, smoke: bool = False, out: str = "BENCH_topology.json"):
                "workload": cmp["workload"],
                "cells": cells,
                "tree_vs_torus": cmp}
-    with open(out, "w") as fh:
-        json.dump(payload, fh, indent=2)
+    from ._common import write_bench
+    payload = write_bench(payload, out)
     report("topology/json_written", 0, out)
     return payload
 

@@ -16,6 +16,10 @@ def main() -> None:
         print(f"{name},{us:.0f},{derived}", flush=True)
 
     smoke = "--smoke" in sys.argv[1:]
+    # record tracer spans for the whole run: every BENCH_*.json gets a
+    # span_breakdown block (per-stage timing split) via write_bench
+    from repro.obs import get_tracer
+    get_tracer().enable(capacity=65536)
     print("name,us_per_call,derived")
     bench_construction.run(report)
     bench_local_search.run(report)

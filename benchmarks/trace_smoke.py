@@ -1,0 +1,128 @@
+"""CI trace smoke: drive the quickstart workload through ``viem
+--profile`` and check the observability invariants end to end.
+
+Two gates, both hard failures (exit 1):
+
+1. **Trace content** — the emitted Chrome ``trace_event`` JSON must be
+   structurally loadable (``traceEvents`` list, ``ph: "X"`` complete
+   events) and carry the pipeline spans (``plan.lower``,
+   ``plan.execute``, ``vcycle.construct``, per-level ``vcycle.refine``)
+   plus per-sweep engine counter tracks (``ph: "C"`` events from the
+   attached telemetry).
+
+2. **Retrace budget** — after a warm-up map, further maps of the same
+   bucket (telemetry on AND off) must add ZERO new engine traces and
+   zero plan builds: the telemetry toggle is a runtime operand, and a
+   regression here silently multiplies steady-state serving cost.
+
+Usage:
+    PYTHONPATH=src python -m benchmarks.trace_smoke [--out smoke.trace.json]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import tempfile
+from pathlib import Path
+
+FAILURES: list[str] = []
+
+
+def check(ok: bool, what: str) -> None:
+    print(f"  {'ok' if ok else 'FAIL'}: {what}")
+    if not ok:
+        FAILURES.append(what)
+
+
+def run_cli(out: str) -> None:
+    """The quickstart workload (guide §4.1 shapes) through the real CLI
+    entry point: 512-process 3-D grid onto the 16:8:4 hierarchy."""
+    from repro.cli.viem import main as viem_main
+    from repro.core import grid3d, write_metis
+
+    g = grid3d(8, 8, 8)
+    with tempfile.TemporaryDirectory() as td:
+        gpath = str(Path(td) / "grid.metis")
+        write_metis(g, gpath)
+        viem_main([gpath,
+                   "--hierarchy_parameter_string=16:8:4",
+                   "--distance_parameter_string=1:10:100",
+                   "--engine=device", "--multilevel",
+                   "--preconfiguration=fast",
+                   f"--output_filename={Path(td) / 'perm'}",
+                   f"--profile={out}", "--telemetry"])
+
+
+def check_trace(out: str) -> None:
+    payload = json.loads(Path(out).read_text())
+    events = payload.get("traceEvents")
+    check(isinstance(events, list) and len(events) > 0,
+          "traceEvents is a non-empty list")
+    events = events or []
+    complete = [e for e in events if e.get("ph") == "X"]
+    names = {e["name"] for e in complete}
+    for required in ("plan.lower", "plan.execute", "plan.vcycle",
+                     "vcycle.construct", "vcycle.refine"):
+        check(required in names, f"span {required!r} present")
+    refines = [e for e in complete if e["name"] == "vcycle.refine"]
+    levels = {e.get("args", {}).get("level") for e in refines}
+    check(len(levels) > 1, f"per-level refine spans (levels {levels})")
+    check(all(e.get("args", {}).get("retraces") is not None
+              for e in refines), "refine spans carry retrace deltas")
+    counters = [e for e in events if e.get("ph") == "C"]
+    tracks = {e["name"] for e in counters}
+    check("engine/exchanges" in tracks,
+          f"per-sweep counter tracks present ({sorted(tracks)})")
+    check(any(e["args"]["value"] > 0 for e in counters
+              if e["name"] == "engine/objective"),
+          "objective counter track has real values")
+
+
+def check_retrace_budget() -> None:
+    """Same-bucket maps after warm-up — telemetry toggled both ways —
+    must not grow any engine's trace count or lower a new plan."""
+    from repro.core import Hierarchy, Mapper, MappingSpec, grid3d
+    from repro.core.spec import MultilevelSpec
+
+    topo = Hierarchy.from_strings("16:8:4", "1:10:100")
+    spec = MappingSpec(engine="device", preconfiguration="fast",
+                       multilevel=MultilevelSpec())
+    mapper = Mapper(topo, spec)
+    g = grid3d(8, 8, 8)
+    mapper.map(g)                      # warm-up: pays every compile
+    plan = next(iter(mapper._plans.values()))
+    traces0 = [eng.trace_count() for eng in plan.engines]
+    builds0 = mapper.cache_info()["plan_builds"]
+    for telemetry in (False, True, False, True):
+        mapper.map(g, telemetry=telemetry)
+    traces1 = [eng.trace_count() for eng in plan.engines]
+    builds1 = mapper.cache_info()["plan_builds"]
+    check(traces1 == traces0,
+          f"telemetry toggles add no engine retraces "
+          f"({traces0} -> {traces1})")
+    check(builds1 == builds0, "no new plan lowered after warm-up")
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="smoke.trace.json")
+    args = ap.parse_args(argv)
+
+    print("== viem --profile on the quickstart workload ==")
+    run_cli(args.out)
+    print("== trace content ==")
+    check_trace(args.out)
+    print("== retrace budget ==")
+    check_retrace_budget()
+    if FAILURES:
+        print(f"trace smoke: {len(FAILURES)} failure(s)")
+        for f in FAILURES:
+            print(f"  - {f}")
+        sys.exit(1)
+    print("trace smoke: ok")
+
+
+if __name__ == "__main__":
+    main()

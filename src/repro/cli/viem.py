@@ -131,6 +131,16 @@ def main(argv=None):
     ap.add_argument("--portfolio_stagnation", type=int, default=None,
                     help="stop after this many rounds without improving "
                          "the incumbent")
+    ap.add_argument("--profile", metavar="TRACE_JSON", default=None,
+                    help="record tracer spans for this run and write a "
+                         "Chrome trace_event JSON (load in Perfetto or "
+                         "chrome://tracing); implies --telemetry so the "
+                         "trace carries per-sweep engine counter tracks")
+    ap.add_argument("--telemetry", action="store_true",
+                    help="collect device-engine per-sweep counters "
+                         "(exchanges, tabu-masked pairs, aspiration "
+                         "fires, downhill escapes) and print a summary — "
+                         "a runtime toggle, never a recompile")
     ap.add_argument("--output_filename", default="permutation")
     args = ap.parse_args(argv)
 
@@ -160,9 +170,15 @@ def main(argv=None):
         import json
         print(json.dumps(mapper.lower_for(g).describe(), indent=2))
         return
+    tracer = None
+    if args.profile:
+        from ..obs import get_tracer
+        tracer = get_tracer()
+        tracer.enable()
+    telemetry = args.telemetry or bool(args.profile)
     # `hierarchyonline` vs `hierarchy` is a memory/speed knob; the oracle
     # is online in both cases here and they agree bit-for-bit (tested).
-    res = mapper.map(g)
+    res = mapper.map(g, telemetry=telemetry)
     np.savetxt(args.output_filename, res.perm, fmt="%d")
     print(f"machine topology     = {topo.kind} ({topo.n_pe} PEs)")
     print(f"initial objective  J = {res.initial_objective:.6g}")
@@ -170,6 +186,21 @@ def main(argv=None):
     print(f"improvement          = {res.improvement:.2%}")
     print(f"construction time    = {res.construction_seconds:.3f}s")
     print(f"local search time    = {res.search_seconds:.3f}s")
+    tel = None if res.search_stats is None else res.search_stats.telemetry
+    if telemetry and tel is not None:
+        s = tel.summary()
+        print(f"engine sweeps        = {s['sweeps']} "
+              f"(passes {s['passes']})")
+        print(f"engine exchanges     = {s['exchanges']}")
+        print(f"tabu masked pairs    = {s['tabu_masked']}")
+        print(f"aspiration fires     = {s['aspiration_fires']} "
+              f"(rate {s['aspiration_rate']:.3f}/pass)")
+        print(f"downhill escapes     = {s['downhill_escapes']}")
+    if tracer is not None:
+        from ..obs import write_chrome_trace
+        n_events = write_chrome_trace(tracer.spans(), args.profile)
+        print(f"wrote {args.profile} ({len(tracer)} spans, "
+              f"{n_events} trace events)")
     print(f"wrote {args.output_filename}")
 
 

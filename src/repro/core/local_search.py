@@ -36,6 +36,10 @@ class SearchStats:
     initial_objective: float = 0.0
     final_objective: float = 0.0
     objective_trace: list = field(default_factory=list)
+    # engine counter telemetry (repro.obs.telemetry.EngineTelemetry) —
+    # attached by the device engine when collection is requested; host
+    # drivers leave it None
+    telemetry: object = None
 
 
 # ---------------------------------------------------------------- registry

@@ -265,19 +265,21 @@ class Mapper:
         return self._eval_plan(spec).gain_matrix(g, perm)
 
     # ----------------------------------------------------------------- map
-    def map(self, g: CommGraph, spec: MappingSpec | None = None
-            ) -> MappingResult:
+    def map(self, g: CommGraph, spec: MappingSpec | None = None,
+            telemetry: bool = False) -> MappingResult:
         """Compute a process→PE mapping for one graph: lower-or-fetch the
         plan for the graph's tight bucket, then ``execute`` — stage 2 is
-        the whole per-request cost."""
+        the whole per-request cost.  ``telemetry`` collects the device
+        engine's per-sweep counters on ``result.search_stats.telemetry``
+        (a runtime toggle — never a recompile)."""
         spec = self.spec if spec is None else spec.validate()
         self._check_size(g)
         self._requests += 1
         plan = self.lower(self.bucket_of(g), spec)
-        return plan.execute(g, seed=spec.seed)
+        return plan.execute(g, seed=spec.seed, telemetry=telemetry)
 
-    def map_many(self, graphs, spec: MappingSpec | None = None
-                 ) -> list[MappingResult]:
+    def map_many(self, graphs, spec: MappingSpec | None = None,
+                 telemetry: bool = False) -> list[MappingResult]:
         """Map a batch of graphs through one plan.
 
         Graphs must agree on process count (and therefore PE count); the
@@ -300,8 +302,8 @@ class Mapper:
         bucket = self.bucket_of(graphs[0])
         for g in graphs[1:]:
             bucket = bucket.union(self.bucket_of(g))
-        return self.lower(bucket, spec).execute_batch(graphs,
-                                                      seed=spec.seed)
+        return self.lower(bucket, spec).execute_batch(
+            graphs, seed=spec.seed, telemetry=telemetry)
 
     def _check_size(self, g: CommGraph) -> None:
         if g.n != self.h.n_pe:

@@ -33,12 +33,12 @@ compiled without executing anything (the ``viem --explain`` surface).
 from __future__ import annotations
 
 import json
-import time
 from collections import OrderedDict
 from dataclasses import dataclass
 
 import numpy as np
 
+from ..obs import EngineTelemetry, get_tracer
 from .construction import resolve_construction
 from .graph import CommGraph
 from .local_search import (SearchStats, _cyclic_search,
@@ -46,6 +46,8 @@ from .local_search import (SearchStats, _cyclic_search,
 from .objective import dense_gain_matrix, qap_objective
 from .partition import PartitionConfig
 from .spec import MappingSpec, PlanSpec, ShapeBucket, TopologySpec
+
+_TR = get_tracer()
 
 
 @dataclass
@@ -172,6 +174,19 @@ class MappingPlan:
                  bucket: ShapeBucket | None = None,
                  cache_caps: dict | None = None, engine_factory=None,
                  machine_factory=None):
+        with _TR.span("plan.lower") as sp:
+            self._lower(machine, spec, bucket, cache_caps,
+                        engine_factory, machine_factory)
+            sp.attrs["machine"] = self.topology.kind
+            sp.attrs["engine"] = self.spec.engine
+            sp.attrs["bucket"] = (None if self.bucket is None
+                                  else self.bucket.tag())
+        # the lower wall-time, kept on the plan so describe() can report
+        # the AOT cost even when the tracer is disabled
+        self.lower_seconds = sp.dur
+
+    def _lower(self, machine, spec, bucket, cache_caps, engine_factory,
+               machine_factory):
         from ..topology.base import as_topology
         self.topology = as_topology(machine)
         self.spec = (spec or MappingSpec()).validate()
@@ -244,6 +259,7 @@ class MappingPlan:
         self._pairs_lru = _LRU(caps["pairs"])
         self._pyramids = _LRU(caps["pyramids"])
         self.executes = 0
+        self.execute_seconds_total = 0.0
 
     # -------------------------------------------------------------- describe
     def describe(self) -> dict:
@@ -278,6 +294,15 @@ class MappingPlan:
             "levels": levels,
             "compiled": {"engines": self.engine_builds,
                          "kernels": self.kernel_compiles},
+            "timings": {
+                "lower_seconds": self.lower_seconds,
+                "executes": self.executes,
+                "execute_seconds_total": self.execute_seconds_total,
+                # per-level device trace counts: compiles paid so far —
+                # growth across same-bucket executes means a retrace
+                "engine_traces": [eng.trace_count()
+                                  for eng in (self.engines or [])],
+            },
         }
 
     def cache_info(self) -> dict:
@@ -396,9 +421,11 @@ class MappingPlan:
 
     def _construct_one(self, g: CommGraph, seed: int
                        ) -> tuple[np.ndarray, float, float]:
-        t0 = time.perf_counter()
-        perm = self._construct(g, self.topology, seed=seed, cfg=self._cfg)
-        return perm, time.perf_counter() - t0, self.objective(g, perm)
+        with _TR.span("plan.construct", n=g.n,
+                      construction=self.spec.construction) as sp:
+            perm = self._construct(g, self.topology, seed=seed,
+                                   cfg=self._cfg)
+        return perm, sp.dur, self.objective(g, perm)
 
     def _finish(self, g: CommGraph, perm: np.ndarray, j0: float,
                 t_cons: float, t_search: float,
@@ -418,41 +445,60 @@ class MappingPlan:
                              construction_seconds=t_cons,
                              search_seconds=t_search, search_stats=stats)
 
-    def execute(self, g: CommGraph, seed: int | None = None
-                ) -> MappingResult:
+    def execute(self, g: CommGraph, seed: int | None = None,
+                telemetry: bool = False) -> MappingResult:
         """Map one graph through the lowered pipeline.  ``seed`` is the
         runtime seed (defaults to the plan spec's) — it steers the
         construction and any seeded neighborhood, never the compiled
-        artifacts."""
+        artifacts.  ``telemetry`` asks the device engine to collect its
+        per-sweep counters (``result.search_stats.telemetry``) — a
+        runtime toggle, masked on-device, never a retrace."""
         seed = self.spec.seed if seed is None else int(seed)
         self._check(g)
         self.executes += 1
-        if self.portfolio is not None:
-            return self._execute_portfolio(g, seed)
-        if self._ml is not None:
-            return self._execute_multilevel(g, seed)
+        with _TR.span("plan.execute", n=g.n, engine=self.spec.engine,
+                      seed=seed) as sp:
+            if self.portfolio is not None:
+                res = self._execute_portfolio(g, seed, telemetry)
+            elif self._ml is not None:
+                res = self._execute_multilevel(g, seed, telemetry)
+            else:
+                res = self._execute_flat(g, seed, telemetry)
+            sp.attrs["final_objective"] = res.final_objective
+        self.execute_seconds_total += sp.dur
+        return res
+
+    def _execute_flat(self, g: CommGraph, seed: int,
+                      telemetry: bool) -> MappingResult:
         perm, t_cons, j0 = self._construct_one(g, seed)
         stats = None
-        t1 = time.perf_counter()
-        if self._nb is not None:
-            pairs = self._pairs(g, seed)
-            kw = {} if self.spec.max_sweeps is None else \
-                {"max_sweeps": self.spec.max_sweeps}
-            if self.spec.engine == "device":
-                stats = self.engines[0].refine(g, perm, pairs, j0=j0,
-                                               bucket=self.bucket)
-            elif self.spec.parallel_sweeps:
-                stats = parallel_sweep_search(g, self.topology, perm,
-                                              pairs, seed=seed, **kw)
-            else:
-                stats = _cyclic_search(g, self.topology, perm, pairs,
-                                       shuffle=self._nb.shuffle,
-                                       seed=seed, **kw)
-        t_search = time.perf_counter() - t1
-        return self._finish(g, perm, j0, t_cons, t_search, stats)
+        with _TR.span("plan.refine", n=g.n,
+                      engine=self.spec.engine) as rsp:
+            if self._nb is not None:
+                pairs = self._pairs(g, seed)
+                rsp.attrs["pairs"] = len(pairs)
+                kw = {} if self.spec.max_sweeps is None else \
+                    {"max_sweeps": self.spec.max_sweeps}
+                if self.spec.engine == "device":
+                    eng = self.engines[0]
+                    before = eng.trace_count()
+                    stats = eng.refine(g, perm, pairs, j0=j0,
+                                       bucket=self.bucket,
+                                       telemetry=telemetry)
+                    rsp.attrs["retraces"] = eng.trace_count() - before
+                    if stats.telemetry is not None:
+                        rsp.attrs["telemetry"] = stats.telemetry
+                elif self.spec.parallel_sweeps:
+                    stats = parallel_sweep_search(g, self.topology, perm,
+                                                  pairs, seed=seed, **kw)
+                else:
+                    stats = _cyclic_search(g, self.topology, perm, pairs,
+                                           shuffle=self._nb.shuffle,
+                                           seed=seed, **kw)
+        return self._finish(g, perm, j0, t_cons, rsp.dur, stats)
 
-    def execute_batch(self, graphs, seed: int | None = None
-                      ) -> list[MappingResult]:
+    def execute_batch(self, graphs, seed: int | None = None,
+                      telemetry: bool = False) -> list[MappingResult]:
         """Map a batch through one vmapped device dispatch per level.
 
         Every graph must fit the plan bucket (they need not be
@@ -466,37 +512,46 @@ class MappingPlan:
             # the lane axis already fills the vmap batch dimension — each
             # graph runs its own portfolio (lanes × graphs would multiply
             # the device footprint, not amortize it)
-            return [self.execute(g, seed=seed) for g in graphs]
+            return [self.execute(g, seed=seed, telemetry=telemetry)
+                    for g in graphs]
         if self._ml is not None:
             for g in graphs:
                 self._check(g)
             self.executes += len(graphs)
-            return self._execute_batch_multilevel(graphs, seed)
+            return self._execute_batch_multilevel(graphs, seed, telemetry)
         if self.spec.engine != "device" or self._nb is None:
-            return [self.execute(g, seed=seed) for g in graphs]
+            return [self.execute(g, seed=seed, telemetry=telemetry)
+                    for g in graphs]
         for g in graphs:
             self._check(g)
         self.executes += len(graphs)
-        # duplicate lanes (the service pads batches by cycling its tick's
-        # graphs) share one construction; every lane still gets its own
-        # perm array because the engine refines in place
-        memo: dict = {}
-        prepped = []
-        for g in graphs:
-            hit = memo.get(id(g))
-            if hit is None:
-                hit = memo[id(g)] = self._construct_one(g, seed)
-            else:
-                hit = (hit[0].copy(), hit[1], hit[2])
-            prepped.append(hit)
-        perms = [perm for perm, _, _ in prepped]
-        # timed window matches execute()'s: pair generation + refinement
-        t1 = time.perf_counter()
-        pairs_list = [self._pairs(g, seed) for g in graphs]
-        stats_list = self.engines[0].refine_batch(
-            graphs, perms, pairs_list, j0s=[j0 for _, _, j0 in prepped],
-            bucket=self.bucket)
-        t_search = (time.perf_counter() - t1) / len(graphs)
+        with _TR.span("plan.execute_batch", batch=len(graphs),
+                      n=graphs[0].n) as bsp:
+            # duplicate lanes (the service pads batches by cycling its
+            # tick's graphs) share one construction; every lane still
+            # gets its own perm array because the engine refines in place
+            memo: dict = {}
+            prepped = []
+            for g in graphs:
+                hit = memo.get(id(g))
+                if hit is None:
+                    hit = memo[id(g)] = self._construct_one(g, seed)
+                else:
+                    hit = (hit[0].copy(), hit[1], hit[2])
+                prepped.append(hit)
+            perms = [perm for perm, _, _ in prepped]
+            # timed window matches execute()'s: pair gen + refinement
+            eng = self.engines[0]
+            before = eng.trace_count()
+            with _TR.span("plan.refine", batch=len(graphs)) as rsp:
+                pairs_list = [self._pairs(g, seed) for g in graphs]
+                stats_list = eng.refine_batch(
+                    graphs, perms, pairs_list,
+                    j0s=[j0 for _, _, j0 in prepped],
+                    bucket=self.bucket, telemetry=telemetry)
+            rsp.attrs["retraces"] = eng.trace_count() - before
+            t_search = rsp.dur / len(graphs)
+        self.execute_seconds_total += bsp.dur
         return [self._finish(g, perm, j0, t_cons, t_search, stats)
                 for g, (perm, t_cons, j0), stats
                 in zip(graphs, prepped, stats_list)]
@@ -523,89 +578,106 @@ class MappingPlan:
             key, lambda: build_pyramid(g, self.machines, levels, cmin,
                                        pair_fn))
 
-    def _execute_multilevel(self, g: CommGraph, seed: int) -> MappingResult:
+    def _execute_multilevel(self, g: CommGraph, seed: int,
+                            telemetry: bool = False) -> MappingResult:
         """The coarsen → map → uncoarsen V-cycle (:mod:`repro.multilevel`)
         over the plan's per-level engines; the reported initial objective
         is the projected (pre-refinement) finest-level objective."""
         from ..multilevel import vcycle_map
         pyramid = self._pyramid(g, seed)
-        t0 = time.perf_counter()
-        res = vcycle_map(pyramid, self.engines, self._construct, self._cfg,
-                         seed=seed, objective0=self.objective,
-                         bucket=self.bucket)
-        t_search = time.perf_counter() - t0 - res.construction_seconds
+        with _TR.span("plan.vcycle", n=g.n, levels=len(pyramid)) as sp:
+            res = vcycle_map(pyramid, self.engines, self._construct,
+                             self._cfg, seed=seed,
+                             objective0=self.objective,
+                             bucket=self.bucket, telemetry=telemetry)
+        t_search = sp.dur - res.construction_seconds
         return self._finish(g, res.perm, res.initial_objective,
                             res.construction_seconds, t_search, res.stats)
 
-    def _execute_batch_multilevel(self, graphs, seed: int
+    def _execute_batch_multilevel(self, graphs, seed: int,
+                                  telemetry: bool = False
                                   ) -> list[MappingResult]:
         """Batched V-cycles: the forced perfect pairing gives every
         same-n graph the same level geometry, so each level's refinement
         runs as ONE vmapped engine call across the whole batch."""
         from ..multilevel import vcycle_map_batch
         pyramids = [self._pyramid(g, seed) for g in graphs]
-        t0 = time.perf_counter()
-        results = vcycle_map_batch(
-            pyramids, self.engines, self._construct, self._cfg, seed=seed,
-            objective0=self.objective, bucket=self.bucket)
-        elapsed = (time.perf_counter() - t0) / len(graphs)
+        with _TR.span("plan.vcycle", batch=len(graphs),
+                      levels=len(pyramids[0])) as sp:
+            results = vcycle_map_batch(
+                pyramids, self.engines, self._construct, self._cfg,
+                seed=seed, objective0=self.objective, bucket=self.bucket,
+                telemetry=telemetry)
+        self.execute_seconds_total += sp.dur
+        elapsed = sp.dur / len(graphs)
         return [self._finish(g, r.perm, r.initial_objective,
                              r.construction_seconds,
                              elapsed - r.construction_seconds, r.stats)
                 for g, r in zip(graphs, results)]
 
     # ------------------------------------------------------------- portfolio
-    def _execute_portfolio(self, g: CommGraph, seed: int) -> MappingResult:
+    def _execute_portfolio(self, g: CommGraph, seed: int,
+                           telemetry: bool = False) -> MappingResult:
         """The portfolio pipeline (:mod:`repro.portfolio`): L lanes
         constructed with per-lane seeds, refined per level as ONE vmapped
         lane call (descending the V-cycle when the spec is multilevel),
         then the device round loop — kick → refine → tournament — at the
         finest level.  ``PortfolioSpec(lanes=1, rounds=1, tabu_tenure=0)``
-        degenerates to the non-portfolio pipeline bit-for-bit (tested)."""
+        degenerates to the non-portfolio pipeline bit-for-bit (tested).
+
+        With ``telemetry``, the finest-level lane refinement collects
+        per-lane engine counters and the merged
+        :class:`~repro.obs.EngineTelemetry` rides the result's stats
+        (the round loop itself stays counter-free — one device dispatch,
+        sweep/swap totals only)."""
         runner = self.portfolio
         empty = np.zeros((0, 2), np.int64)
-        t1 = None
-        if self._ml is not None:
-            from ..multilevel.coarsen import project_perm
-            pyramid = self._pyramid(g, seed)
-            coarsest = pyramid[-1]
-            t0 = time.perf_counter()
-            perms = runner.construct_lanes(coarsest.graph,
-                                           coarsest.machine, self._cfg,
-                                           seed)
-            t_cons = time.perf_counter() - t0
-            t1 = time.perf_counter()
-            j0s = []
-            pairs0 = pyramid[0].pairs
-            for lvl in range(len(pyramid) - 1, -1, -1):
-                level = pyramid[lvl]
-                if lvl == 0:
-                    j0s = [self.objective(level.graph, p) for p in perms]
-                else:
-                    j0s = [qap_objective(level.graph, level.machine, p)
-                           for p in perms]
-                runner.refine_lanes(level.graph, perms, level.pairs,
-                                    j0s=j0s,
-                                    bucket=self.bucket if lvl == 0
-                                    else None,
-                                    engine=self.engines[lvl])
-                if lvl > 0:
-                    perms = [project_perm(p, level.fine_u, level.fine_v)
-                             for p in perms]
-        else:
-            t0 = time.perf_counter()
-            perms = runner.construct_lanes(g, self.topology, self._cfg,
-                                           seed)
-            t_cons = time.perf_counter() - t0
-            j0s = [self.objective(g, p) for p in perms]
-            t1 = time.perf_counter()
-            pairs0 = self._pairs(g, seed) if self._nb is not None \
-                else empty
-            lane_stats = runner.refine_lanes(g, perms, pairs0, j0s=j0s,
-                                             bucket=self.bucket)
-        res = runner.run_rounds(g, perms, pairs0, j0s,
-                                bucket=self.bucket, seed=seed)
-        t_search = time.perf_counter() - t1
+        lane_stats = None
+        pyramid = self._pyramid(g, seed) if self._ml is not None else None
+        with _TR.span("plan.construct", lanes=runner.pspec.lanes) as csp:
+            if pyramid is not None:
+                coarsest = pyramid[-1]
+                perms = runner.construct_lanes(
+                    coarsest.graph, coarsest.machine, self._cfg, seed)
+            else:
+                perms = runner.construct_lanes(g, self.topology,
+                                               self._cfg, seed)
+        t_cons = csp.dur
+        with _TR.span("plan.refine", n=g.n,
+                      lanes=runner.pspec.lanes) as rsp:
+            if pyramid is not None:
+                from ..multilevel.coarsen import project_perm
+                j0s = []
+                pairs0 = pyramid[0].pairs
+                for lvl in range(len(pyramid) - 1, -1, -1):
+                    level = pyramid[lvl]
+                    if lvl == 0:
+                        j0s = [self.objective(level.graph, p)
+                               for p in perms]
+                    else:
+                        j0s = [qap_objective(level.graph, level.machine,
+                                             p) for p in perms]
+                    lane_stats = runner.refine_lanes(
+                        level.graph, perms, level.pairs, j0s=j0s,
+                        bucket=self.bucket if lvl == 0 else None,
+                        engine=self.engines[lvl],
+                        telemetry=telemetry and lvl == 0)
+                    if lvl > 0:
+                        perms = [project_perm(p, level.fine_u,
+                                              level.fine_v)
+                                 for p in perms]
+            else:
+                j0s = [self.objective(g, p) for p in perms]
+                pairs0 = self._pairs(g, seed) if self._nb is not None \
+                    else empty
+                lane_stats = runner.refine_lanes(g, perms, pairs0,
+                                                 j0s=j0s,
+                                                 bucket=self.bucket,
+                                                 telemetry=telemetry)
+            res = runner.run_rounds(g, perms, pairs0, j0s,
+                                    bucket=self.bucket, seed=seed)
+            rsp.attrs["rounds"] = res.rounds
+        t_search = rsp.dur
         j0 = min(j0s) if j0s else self.objective(g, res.perm)
         stats = SearchStats()
         stats.initial_objective = j0
@@ -616,6 +688,12 @@ class MappingPlan:
             stats.swaps += sum(s.swaps for s in lane_stats)
             stats.evaluated += sum(s.evaluated for s in lane_stats)
         stats.objective_trace = [j0] + res.round_objectives
+        if telemetry and lane_stats:
+            tels = [s.telemetry for s in lane_stats
+                    if s.telemetry is not None]
+            if tels:
+                stats.telemetry = EngineTelemetry.merge(tels)
+                rsp.attrs["telemetry"] = stats.telemetry
         return self._finish(g, res.perm, j0, t_cons, t_search, stats)
 
 

@@ -31,9 +31,10 @@ def _make_refine(kind: str, params: tuple, max_sweeps: int,
     """The device sweep fn for one distance form.
 
     Signature: ``(nbr, wgt, eu, ev, ew, us, vs, perm0, D, eps, tenure,
-    dlb) -> (perm, trace, sweeps, swaps)`` — all jnp, no host syncs
-    inside; the trace is the carried objective after each sweep (NaN past
-    convergence).  Monotone in its *result* by construction: every sweep
+    dlb, collect) -> (perm, trace, sweeps, swaps, tel)`` — all jnp, no
+    host syncs inside; the trace is the carried objective after each
+    sweep (NaN past convergence).  Monotone in its *result* by
+    construction: every sweep
     either applies a greedy maximal matching verified (against the
     recomputed device objective) to beat the best single swap, or falls
     back to the best single pair with its exact incremental gain, and the
@@ -59,6 +60,16 @@ def _make_refine(kind: str, params: tuple, max_sweeps: int,
 
     With ``tenure == 0`` and ``dlb == False`` every mask is identity and
     the loop is bit-for-bit the pre-tabu monotone sweep (tested).
+
+    ``collect`` is a RUNTIME bool enabling the engine telemetry carries
+    (``tel`` — see :mod:`repro.obs.telemetry`): fixed-shape, pass-indexed
+    counter arrays (exchanges applied, tabu-masked pairs, aspiration
+    fires, matching rounds) plus downhill-escape and pass totals, all
+    updated under a ``jnp.where(collect, ...)`` mask.  Same no-retrace
+    discipline as the tabu knobs — toggling it shares the one compiled
+    executable — and the counters never feed back into the search, so
+    the ``(perm, trace, sweeps, swaps)`` outputs are bit-identical with
+    collection on, off, or absent (tested).  Off, every counter is zero.
     """
     import jax
     import jax.numpy as jnp
@@ -72,7 +83,7 @@ def _make_refine(kind: str, params: tuple, max_sweeps: int,
         return pg.pair_gains(kind, params, nbr, wgt, perm, us, vs, D)
 
     def refine_fn(nbr, wgt, eu, ev, ew, us, vs, perm0, D, eps,
-                  tenure, dlb):
+                  tenure, dlb, collect):
         refine_fn.traces += 1           # host-side: counts (re)traces only
         n = perm0.shape[0]
         p = us.shape[0]
@@ -98,7 +109,8 @@ def _make_refine(kind: str, params: tuple, max_sweeps: int,
             # ---- tabu / don't-look masking (identity when both are off:
             # every `blocked` bit is False and g_m is g, bit-for-bit)
             aspire = (j - g) < best_j - eps     # would beat the best seen
-            blocked = (tabu_on & (state["tabu_until"] > sweeps) & ~aspire)
+            tabu_active = tabu_on & (state["tabu_until"] > sweeps)
+            blocked = tabu_active & ~aspire
             blocked |= dlb & state["cold"][us] & state["cold"][vs]
             # under tabu the fallback may move downhill, so inert padding
             # pairs (u == v, gain 0) must never be "best" — mask them too
@@ -116,7 +128,7 @@ def _make_refine(kind: str, params: tuple, max_sweeps: int,
             pos = g_m > eps
 
             def match_round(mstate):
-                sel, used = mstate
+                sel, used, rounds = mstate
                 elig = pos & ~used[us] & ~used[vs]
                 ge = jnp.where(elig, g_m, -jnp.inf)
                 vmax = jnp.full((n,), -jnp.inf, jnp.float32)
@@ -130,15 +142,16 @@ def _make_refine(kind: str, params: tuple, max_sweeps: int,
                     True, mode="drop")
                 used = used.at[jnp.where(new, vs, oob)].set(
                     True, mode="drop")
-                return sel | new, used
+                return sel | new, used, rounds + 1
 
             def match_cond(mstate):
-                sel, used = mstate
+                sel, used, _ = mstate
                 return jnp.any(pos & ~used[us] & ~used[vs] & ~sel)
 
-            sel, _ = jax.lax.while_loop(
+            sel, _, m_rounds = jax.lax.while_loop(
                 match_cond, match_round,
-                (jnp.zeros((p,), jnp.bool_), jnp.zeros((n,), jnp.bool_)))
+                (jnp.zeros((p,), jnp.bool_), jnp.zeros((n,), jnp.bool_),
+                 jnp.int32(0)))
 
             # ---- apply the matching (each vertex in ≤ 1 selected pair)
             pu, pv = perm[us], perm[vs]
@@ -185,6 +198,20 @@ def _make_refine(kind: str, params: tuple, max_sweeps: int,
             wake = moved_v | jnp.any(moved_v[nbr] & (wgt > 0), axis=1)
             cold = jnp.where(wake, False, state["cold"] | ~warm)
 
+            # ---- telemetry carries (repro.obs): pass-indexed counters,
+            # masked by the runtime `collect` toggle — never read by the
+            # search, so the outputs above are bit-identical either way
+            pass_idx = sweeps                   # unique per body iteration
+            exch = jnp.where(
+                take, jnp.sum(sel, dtype=jnp.int32),
+                jnp.where(fall, jnp.int32(1), jnp.int32(0)))
+
+            def rec(key, val):
+                return jnp.where(collect,
+                                 state[key].at[pass_idx].set(val),
+                                 state[key])
+
+            tel_on = collect
             # ---- best-seen tracking (with tabu off, j is monotone and
             # best == current, bit-for-bit)
             improved = j_n < state["best_j"]
@@ -195,17 +222,43 @@ def _make_refine(kind: str, params: tuple, max_sweeps: int,
                                        state["best_perm"]),
                 "best_j": jnp.where(improved, j_n, state["best_j"]),
                 "tabu_until": tabu_until, "cold": cold,
+                "tel_exchanges": rec("tel_exchanges", exch),
+                "tel_tabu_masked": rec(
+                    "tel_tabu_masked",
+                    jnp.sum(tabu_active & ~aspire, dtype=jnp.int32)),
+                "tel_aspirations": rec(
+                    "tel_aspirations",
+                    jnp.sum(tabu_active & aspire, dtype=jnp.int32)),
+                "tel_match_rounds": rec("tel_match_rounds", m_rounds),
+                "tel_downhill": state["tel_downhill"] + jnp.where(
+                    tel_on & fall_down, jnp.int32(1), jnp.int32(0)),
+                "tel_passes": state["tel_passes"] + jnp.where(
+                    tel_on, jnp.int32(1), jnp.int32(0)),
             }
 
+        tel0 = jnp.zeros((max_sweeps + 1,), jnp.int32)
         state = {
             "perm": perm0, "j": j0, "trace": trace0,
             "sweeps": jnp.int32(0), "swaps": jnp.int32(0),
             "done": jnp.bool_(False), "best_perm": perm0, "best_j": j0,
             "tabu_until": jnp.zeros((p,), jnp.int32),
             "cold": jnp.zeros((n,), jnp.bool_),
+            "tel_exchanges": tel0, "tel_tabu_masked": tel0,
+            "tel_aspirations": tel0, "tel_match_rounds": tel0,
+            "tel_downhill": jnp.int32(0), "tel_passes": jnp.int32(0),
         }
         out = jax.lax.while_loop(cond, body, state)
-        return out["best_perm"], out["trace"], out["sweeps"], out["swaps"]
+        tel = {
+            "exchanges": out["tel_exchanges"],
+            "tabu_masked": out["tel_tabu_masked"],
+            "aspirations": out["tel_aspirations"],
+            "match_rounds": out["tel_match_rounds"],
+            "downhill_escapes": out["tel_downhill"],
+            "passes": out["tel_passes"],
+            "sweeps": out["sweeps"],
+        }
+        return (out["best_perm"], out["trace"], out["sweeps"],
+                out["swaps"], tel)
 
     refine_fn.traces = 0
     return refine_fn
@@ -261,12 +314,13 @@ class RefinementEngine:
         self._refine = jax.jit(fn)      # retraces — the tabu-masking
         # regression check asserts toggling tenure/dlb adds none)
         self._vrefine = jax.jit(jax.vmap(
-            fn, in_axes=(0, 0, 0, 0, 0, 0, 0, 0, None, 0, None, None)))
+            fn, in_axes=(0, 0, 0, 0, 0, 0, 0, 0, None, 0, None, None,
+                         None)))
         # lane axis: ONE graph shared across a portfolio's restart lanes
         # (in_axes=None for every graph/pair array — no per-lane copies)
         self._lrefine = jax.jit(jax.vmap(
             fn, in_axes=(None, None, None, None, None, None, None, 0,
-                         None, 0, None, None)))
+                         None, 0, None, None, None)))
         # internal LRU caps: session-level `cache_caps` plumbing (Mapper
         # passes {"graphs": ..., "pairs": ...}); evictions surface in
         # cache_info()
@@ -363,7 +417,7 @@ class RefinementEngine:
 
     def _stats(self, g: CommGraph, perm: np.ndarray, j0: float,
                trace: np.ndarray, sweeps: int, swaps: int,
-               n_pairs: int) -> SearchStats:
+               n_pairs: int, telemetry=None) -> SearchStats:
         stats = SearchStats()
         stats.initial_objective = j0
         stats.final_objective = qap_objective(g, self.topology, perm)
@@ -374,19 +428,34 @@ class RefinementEngine:
         passes = int(sweeps) + (1 if int(sweeps) < self.max_sweeps else 0)
         stats.evaluated = passes * n_pairs
         stats.objective_trace = [float(x) for x in trace[:int(sweeps) + 1]]
+        if telemetry is not None:
+            from ..obs.telemetry import EngineTelemetry
+            stats.telemetry = EngineTelemetry.from_device(telemetry, trace)
         return stats
 
     @staticmethod
-    def _toggles(tabu_tenure: int, dlb: bool) -> tuple:
-        """Runtime tabu/don't-look scalars as jnp arrays — value changes
-        never retrace the compiled executables (masking, not retracing)."""
+    def _tel_slice(tel, i=None) -> dict:
+        """Host numpy view of one device telemetry pytree (lane/batch
+        index ``i`` under vmap) — rides the transfer the perm/trace
+        outputs already paid."""
+        return {k: np.asarray(v if i is None else v[i])
+                for k, v in tel.items()}
+
+    @staticmethod
+    def _toggles(tabu_tenure: int, dlb: bool, telemetry: bool = False
+                 ) -> tuple:
+        """Runtime tabu/don't-look/telemetry scalars as jnp arrays —
+        value changes never retrace the compiled executables (masking,
+        not retracing)."""
         import jax.numpy as jnp
-        return jnp.int32(tabu_tenure), jnp.bool_(dlb)
+        return jnp.int32(tabu_tenure), jnp.bool_(dlb), \
+            jnp.bool_(telemetry)
 
     # ------------------------------------------------------------------ API
     def refine(self, g: CommGraph, perm: np.ndarray, pairs: np.ndarray,
                j0: float | None = None, bucket=None,
-               tabu_tenure: int = 0, dlb: bool = False) -> SearchStats:
+               tabu_tenure: int = 0, dlb: bool = False,
+               telemetry: bool = False) -> SearchStats:
         """Refine ``perm`` in place over the candidate ``pairs`` — the
         device counterpart of ``parallel_sweep_search`` (one device
         dispatch, no host syncs until convergence).  ``j0`` is the
@@ -398,7 +467,10 @@ class RefinementEngine:
         compiled executable — inert, results unchanged.
         ``tabu_tenure``/``dlb`` enable the tabu memory and don't-look
         bits (see :func:`_make_refine`) — runtime toggles sharing the one
-        executable; the defaults are bit-for-bit the pre-tabu sweep."""
+        executable; the defaults are bit-for-bit the pre-tabu sweep.
+        ``telemetry`` enables the engine counter carries (same runtime
+        discipline) and attaches an
+        :class:`~repro.obs.telemetry.EngineTelemetry` to the stats."""
         import jax.numpy as jnp
         if j0 is None:
             j0 = qap_objective(g, self.topology, perm)
@@ -406,6 +478,10 @@ class RefinementEngine:
             stats = SearchStats()
             stats.initial_objective = stats.final_objective = j0
             stats.objective_trace = [j0]
+            if telemetry:
+                from ..obs.telemetry import EngineTelemetry
+                stats.telemetry = EngineTelemetry(
+                    objective_trace=np.asarray([j0]))
             return stats
         if bucket is not None:
             dg = self._device_graph(g, k=bucket.max_deg,
@@ -416,18 +492,21 @@ class RefinementEngine:
         else:
             dg = self._device_graph(g)
             us, vs = self._device_pairs(pairs)
-        tenure, dlb_ = self._toggles(tabu_tenure, dlb)
-        out_perm, trace, sweeps, swaps = self._refine(
+        tenure, dlb_, tel_ = self._toggles(tabu_tenure, dlb, telemetry)
+        out_perm, trace, sweeps, swaps, tel = self._refine(
             dg.nbr, dg.wgt, dg.eu, dg.ev, dg.ew, us, vs,
             jnp.asarray(perm, jnp.int32), self._D,
-            jnp.float32(self._eps(j0)), tenure, dlb_)
+            jnp.float32(self._eps(j0)), tenure, dlb_, tel_)
         perm[:] = np.asarray(out_perm, dtype=perm.dtype)
         return self._stats(g, perm, j0, np.asarray(trace), int(sweeps),
-                           int(swaps), len(pairs))
+                           int(swaps), len(pairs),
+                           telemetry=self._tel_slice(tel)
+                           if telemetry else None)
 
     def refine_batch(self, graphs, perms, pairs_list,
                      j0s=None, bucket=None, tabu_tenure: int = 0,
-                     dlb: bool = False) -> list[SearchStats]:
+                     dlb: bool = False,
+                     telemetry: bool = False) -> list[SearchStats]:
         """One vmapped device call over a batch of same-shape graphs.
 
         Per-graph arrays are padded to the batch's common (K, E, P)
@@ -457,9 +536,9 @@ class RefinementEngine:
             dgs = [dg.pad_to(k_max, e_max) for dg in dgs]
         dev_pairs = [self._device_pairs(p, pad_to=p_max)
                      for p in pairs_list]
-        tenure, dlb_ = self._toggles(tabu_tenure, dlb)
+        tenure, dlb_, tel_ = self._toggles(tabu_tenure, dlb, telemetry)
         stack = lambda xs: jnp.stack(xs)                      # noqa: E731
-        out_perm, trace, sweeps, swaps = self._vrefine(
+        out_perm, trace, sweeps, swaps, tel = self._vrefine(
             stack([dg.nbr for dg in dgs]), stack([dg.wgt for dg in dgs]),
             stack([dg.eu for dg in dgs]), stack([dg.ev for dg in dgs]),
             stack([dg.ew for dg in dgs]),
@@ -468,18 +547,21 @@ class RefinementEngine:
             stack([jnp.asarray(p, jnp.int32) for p in perms]),
             self._D,
             jnp.asarray([self._eps(j) for j in j0s], jnp.float32),
-            tenure, dlb_)
+            tenure, dlb_, tel_)
         out = []
         for i, (g, perm) in enumerate(zip(graphs, perms)):
             perm[:] = np.asarray(out_perm[i], dtype=perm.dtype)
             out.append(self._stats(g, perm, j0s[i], np.asarray(trace[i]),
                                    int(sweeps[i]), int(swaps[i]),
-                                   len(pairs_list[i])))
+                                   len(pairs_list[i]),
+                                   telemetry=self._tel_slice(tel, i)
+                                   if telemetry else None))
         return out
 
     def refine_lanes(self, g: CommGraph, perms, pairs: np.ndarray,
                      j0s=None, bucket=None, tabu_tenure: int = 0,
-                     dlb: bool = False) -> list[SearchStats]:
+                     dlb: bool = False,
+                     telemetry: bool = False) -> list[SearchStats]:
         """One vmapped device call over L restart *lanes* of ONE graph —
         the portfolio counterpart of :meth:`refine_batch`: the graph and
         candidate-pair arrays are shared across lanes (``in_axes=None``,
@@ -509,19 +591,21 @@ class RefinementEngine:
         else:
             dg = self._device_graph(g)
             us, vs = self._device_pairs(pairs)
-        tenure, dlb_ = self._toggles(tabu_tenure, dlb)
-        out_perm, trace, sweeps, swaps = self._lrefine(
+        tenure, dlb_, tel_ = self._toggles(tabu_tenure, dlb, telemetry)
+        out_perm, trace, sweeps, swaps, tel = self._lrefine(
             dg.nbr, dg.wgt, dg.eu, dg.ev, dg.ew, us, vs,
             jnp.stack([jnp.asarray(p, jnp.int32) for p in perms]),
             self._D,
             jnp.asarray([self._eps(j) for j in j0s], jnp.float32),
-            tenure, dlb_)
+            tenure, dlb_, tel_)
         out = []
         for i, perm in enumerate(perms):
             perm[:] = np.asarray(out_perm[i], dtype=perm.dtype)
             out.append(self._stats(g, perm, j0s[i], np.asarray(trace[i]),
                                    int(sweeps[i]), int(swaps[i]),
-                                   len(pairs)))
+                                   len(pairs),
+                                   telemetry=self._tel_slice(tel, i)
+                                   if telemetry else None))
         return out
 
 

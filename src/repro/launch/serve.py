@@ -22,14 +22,17 @@ import itertools
 import queue
 import threading
 import time
-from collections import OrderedDict, deque
+from collections import OrderedDict
 
 import jax
 import jax.numpy as jnp
 
 from ..configs import get_config, get_smoke_config
 from ..models.transformer import init_params, prefill_with_cache
+from ..obs import MetricsRegistry, get_tracer
 from ..train.steps import serve_step
+
+_TR = get_tracer()
 
 
 def serve(arch: str, batch: int, prompt_len: int, gen: int,
@@ -87,12 +90,19 @@ class MappingService:
     both classes share the one plan cache (distinct specs, distinct
     plans) and the fast path stays zero-overhead.  Defaults:
     ``{"fast": None, "strong": PortfolioSpec()}``.
+
+    Accounting lives in ``self.metrics`` — a
+    :class:`~repro.obs.MetricsRegistry`; ``stats()`` is the legacy dict
+    view over its snapshot.  ``collect_telemetry=True`` asks every
+    executed plan for device engine counters, aggregated into
+    ``engine_*`` metrics (a runtime toggle — no recompiles).
     """
 
     def __init__(self, mapper, *, schedule: str = "pow2",
                  max_batch: int = 8, max_wait_s: float = 0.005,
                  result_cache_size: int = 256, max_pending: int = 0,
                  quality_classes: "dict | None" = None,
+                 collect_telemetry: bool = False,
                  requests: "queue.Queue | None" = None,
                  results: "queue.Queue | None" = None):
         from ..core.spec import PortfolioSpec
@@ -103,6 +113,7 @@ class MappingService:
             if quality_classes is None else dict(quality_classes))
         self.max_batch = int(max_batch)
         self.max_wait_s = float(max_wait_s)
+        self.collect_telemetry = bool(collect_telemetry)
         self.requests = (requests if requests is not None else
                          queue.Queue(maxsize=max_pending))
         self.results = results if results is not None else queue.Queue()
@@ -111,18 +122,27 @@ class MappingService:
         self._tickets = itertools.count()
         self._closed = False
         self._lock = threading.Lock()
-        self._served = 0
-        self._batches = 0
-        self._batched_requests = 0
-        self._max_batch_seen = 0
-        self._cache_hits = 0
-        self._deduped = 0
-        self._errors = 0
-        self._peak_depth = 0
-        self._quality_served: "dict[str, int]" = {}
+        self.metrics = MetricsRegistry()
+        m = self.metrics
+        self._c_served = m.counter("served")
+        self._c_batches = m.counter("batches")
+        self._c_batched = m.counter("batched_requests")
+        self._c_cache_hits = m.counter("result_cache_hits")
+        self._c_deduped = m.counter("in_tick_deduped")
+        self._c_errors = m.counter("errors")
+        self._g_max_batch = m.gauge("max_batch_seen")
+        self._g_peak_depth = m.gauge("peak_queue_depth")
+        # engine aggregates (sweeps from every result's objective trace;
+        # the rest only when collect_telemetry attaches engine counters)
+        self._c_sweeps = m.counter("engine_sweeps")
+        self._c_passes = m.counter("engine_passes")
+        self._c_exchanges = m.counter("engine_exchanges")
+        self._c_aspirations = m.counter("engine_aspirations")
+        self._c_downhill = m.counter("engine_downhill_escapes")
+        self._c_telemetry = m.counter("telemetry_requests")
         # sliding latency window: long-lived services keep reporting
         # *recent* p50/p99, not the first N requests forever
-        self._latencies: "deque[float]" = deque(maxlen=65536)
+        self._h_latency = m.histogram("latency_s", window=65536)
         self._thread = threading.Thread(target=self._run,
                                         name="viem-mapping-service",
                                         daemon=True)
@@ -152,7 +172,7 @@ class MappingService:
             self.requests.put(
                 (ticket, g, spec, quality, time.perf_counter()),
                 timeout=timeout)
-        self._peak_depth = max(self._peak_depth, self.requests.qsize())
+        self._g_peak_depth.set_max(self.requests.qsize())
         return ticket
 
     def map(self, g, spec=None, quality: str | None = None,
@@ -190,38 +210,51 @@ class MappingService:
             time.sleep(0.001)    # don't spin hot on a foreign result
 
     def reset_stats(self) -> None:
-        """Zero the counters and latency window (keeps caches/plans) —
-        call after warm-up so ``stats()`` reflects steady state."""
-        self._served = self._batches = self._batched_requests = 0
-        self._max_batch_seen = self._cache_hits = self._deduped = 0
-        self._errors = self._peak_depth = 0
-        self._quality_served = {}
-        self._latencies = deque(maxlen=65536)
+        """Zero every metric in the registry — counters, gauges, the
+        latency window, engine aggregates — atomically (keeps
+        caches/plans); call after warm-up so ``stats()`` reflects steady
+        state."""
+        self.metrics.reset()
 
     def stats(self) -> dict:
-        # list() first: the worker thread appends concurrently, and
-        # sorting the live deque would race its mutation
-        lat = sorted(list(self._latencies))
+        """Legacy-keyed view over ``self.metrics.snapshot()``.
 
-        def pct(q: float) -> float:
-            if not lat:
-                return 0.0
-            return lat[min(len(lat) - 1, int(q * len(lat)))]
-
+        The snapshot is taken atomically under the registry lock and is
+        a deep copy — the returned dict never aliases live state, and
+        grouped updates (``served`` + latency, see ``_emit``) are always
+        observed together: a monitoring thread polling during a burst
+        never sees ``served`` ahead of the latency count."""
+        snap = self.metrics.snapshot()
+        lat = snap["latency_s"]
+        served = snap["served"]
+        passes = snap["engine_passes"]
         return {
-            "served": self._served,
-            "batches": self._batches,
-            "batched_requests": self._batched_requests,
-            "max_batch_seen": self._max_batch_seen,
-            "result_cache_hits": self._cache_hits,
-            "in_tick_deduped": self._deduped,
+            "served": served,
+            "batches": snap["batches"],
+            "batched_requests": snap["batched_requests"],
+            "max_batch_seen": int(snap["max_batch_seen"]),
+            "result_cache_hits": snap["result_cache_hits"],
+            "in_tick_deduped": snap["in_tick_deduped"],
             "result_cache_size": len(self._result_cache),
-            "errors": self._errors,
-            "quality_served": dict(self._quality_served),
+            "errors": snap["errors"],
+            "quality_served": {
+                name.split(".", 1)[1]: v for name, v in snap.items()
+                if name.startswith("quality_served.")},
             "queue_depth": self.requests.qsize(),
-            "peak_queue_depth": self._peak_depth,
-            "latency_p50_s": pct(0.50),
-            "latency_p99_s": pct(0.99),
+            "peak_queue_depth": int(snap["peak_queue_depth"]),
+            "latency_p50_s": lat["p50"],
+            "latency_p99_s": lat["p99"],
+            "latency_count": lat["count"],
+            # engine aggregates (sweeps for every request; the counter
+            # block only when collect_telemetry is on)
+            "engine_sweeps_total": snap["engine_sweeps"],
+            "engine_mean_sweeps_per_request":
+                snap["engine_sweeps"] / served if served else 0.0,
+            "engine_exchanges_total": snap["engine_exchanges"],
+            "engine_downhill_escapes": snap["engine_downhill_escapes"],
+            "aspiration_rate":
+                snap["engine_aspirations"] / passes if passes else 0.0,
+            "telemetry_requests": snap["telemetry_requests"],
         }
 
     def close(self, timeout: float | None = None):
@@ -263,7 +296,8 @@ class MappingService:
         while True:
             batch, stop = self._gather()
             if batch:
-                self._process(batch)
+                with _TR.span("service.tick", batch=len(batch)):
+                    self._process(batch)
             if stop:
                 break
 
@@ -303,15 +337,14 @@ class MappingService:
                 ckey = (skey, spec.seed,
                         _structure_key(g, with_weights=True))
                 qname = quality or "default"
-                self._quality_served[qname] = \
-                    self._quality_served.get(qname, 0) + 1
+                self.metrics.counter(f"quality_served.{qname}").inc()
             except Exception as exc:
                 self._emit(ticket, exc, t_sub)
                 continue
             hit = self._result_cache.get(ckey)
             if hit is not None:
                 self._result_cache.move_to_end(ckey)
-                self._cache_hits += 1
+                self._c_cache_hits.inc()
                 self._emit(ticket, self._copy_result(hit), t_sub)
                 continue
             bucket = self.mapper.bucket_of(g, schedule=self.schedule)
@@ -333,6 +366,7 @@ class MappingService:
         full batch — and no batch-size recompiles ever hit the hot
         path."""
         spec = items[0][2]
+        tel = self.collect_telemetry
         uniq: "OrderedDict[tuple, object]" = OrderedDict()
         for _, g, _, _, ckey in items:
             uniq.setdefault(ckey, g)
@@ -343,7 +377,7 @@ class MappingService:
             if plan.engines is None:
                 # host engine executes serially — no vmapped executable,
                 # so neither lane padding nor batching helps
-                results = [plan.execute(g, seed=spec.seed)
+                results = [plan.execute(g, seed=spec.seed, telemetry=tel)
                            for g in graphs]
             elif 2 * b > self.max_batch:
                 # at least half the padded lanes are real work: one
@@ -351,16 +385,16 @@ class MappingService:
                 # max_batch keeps a single compiled batch shape
                 lanes = graphs + [graphs[i % b]
                                   for i in range(self.max_batch - b)]
-                results = plan.execute_batch(lanes, seed=spec.seed)[:b]
-                self._batches += 1
-                self._batched_requests += len(items)
-                self._max_batch_seen = max(self._max_batch_seen,
-                                           len(items))
+                results = plan.execute_batch(lanes, seed=spec.seed,
+                                             telemetry=tel)[:b]
+                self._c_batches.inc()
+                self._c_batched.inc(len(items))
+                self._g_max_batch.set_max(len(items))
             else:
                 # under-utilized batch: padded lanes would outweigh the
                 # dispatch savings, so run the few uniques singly (they
                 # still share the plan's compiled single executable)
-                results = [plan.execute(g, seed=spec.seed)
+                results = [plan.execute(g, seed=spec.seed, telemetry=tel)
                            for g in graphs]
             self.mapper._requests += len(graphs)
         except Exception:
@@ -368,7 +402,8 @@ class MappingService:
             results = []
             for ckey, g in uniq.items():
                 try:
-                    results.append(self.mapper.map(g, spec=spec))
+                    results.append(self.mapper.map(g, spec=spec,
+                                                   telemetry=tel))
                 except Exception as exc:
                     results.append(exc)
         by_key = dict(zip(uniq.keys(), results))
@@ -380,7 +415,7 @@ class MappingService:
                     self._result_cache.popitem(last=False)
                 res = self._copy_result(res)
             self._emit(ticket, res, t_sub)
-        self._deduped += len(items) - len(graphs)
+        self._c_deduped.inc(len(items) - len(graphs))
 
     @staticmethod
     def _copy_result(res):
@@ -394,10 +429,29 @@ class MappingService:
             search_stats=copy.deepcopy(res.search_stats))
 
     def _emit(self, ticket, res, t_sub):
-        self._served += 1
-        if isinstance(res, Exception):
-            self._errors += 1
-        self._latencies.append(time.perf_counter() - t_sub)
+        # one lock around the whole group: served, errors, the latency
+        # histogram, and the engine aggregates land as ONE observable
+        # step — stats() can never catch served ahead of latency_count
+        lat = time.perf_counter() - t_sub
+        with self.metrics.lock:
+            self._c_served.inc()
+            if isinstance(res, Exception):
+                self._c_errors.inc()
+            else:
+                st = getattr(res, "search_stats", None)
+                trace = None if st is None else \
+                    getattr(st, "objective_trace", None)
+                if trace is not None and len(trace) > 1:
+                    self._c_sweeps.inc(len(trace) - 1)
+                tel = None if st is None else \
+                    getattr(st, "telemetry", None)
+                if tel is not None:
+                    self._c_telemetry.inc()
+                    self._c_passes.inc(int(tel.passes))
+                    self._c_exchanges.inc(int(tel.total_exchanges))
+                    self._c_aspirations.inc(int(tel.aspiration_fires))
+                    self._c_downhill.inc(int(tel.downhill_escapes))
+            self._h_latency.observe(lat)
         self.results.put((ticket, res))
 
 

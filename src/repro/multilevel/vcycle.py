@@ -2,18 +2,26 @@
 down.  Pure orchestration — pyramids come from :mod:`.coarsen`, per-level
 refinement is the device :class:`~repro.engine.RefinementEngine` (host
 syncs only at level boundaries), and the Mapper supplies cached engines.
+
+Timing flows through :mod:`repro.obs` tracer spans (the one timing
+source of truth): construction and every per-level refinement record a
+span — with level geometry, engine retrace deltas, and (when telemetry
+collection is on) the engine counter block — and the result fields are
+read back off the spans' measured durations.
 """
 
 from __future__ import annotations
 
-import time
 from dataclasses import dataclass, field
 
 import numpy as np
 
 from ..core.local_search import SearchStats
 from ..core.objective import qap_objective
+from ..obs import get_tracer
 from .coarsen import Level, project_perm
+
+_TR = get_tracer()
 
 
 @dataclass
@@ -44,8 +52,28 @@ def _engine_at(engine_of, lvl: int, machine):
     return engine_of[lvl]
 
 
+def _refine_level(engine, lvl: int, level: Level, perm, j0, bucket,
+                  telemetry: bool):
+    """One level's refinement under a traced span: level geometry,
+    wall-time, and the engine's compile-vs-execute split (trace-count
+    delta — >0 means this call paid a retrace)."""
+    tc = getattr(engine, "trace_count", None)
+    before = tc() if tc is not None else 0
+    with _TR.span("vcycle.refine", level=lvl, n=level.graph.n,
+                  pairs=len(level.pairs)) as sp:
+        stats = engine.refine(level.graph, perm, level.pairs, j0=j0,
+                              bucket=bucket, telemetry=telemetry)
+    if tc is not None:
+        sp.attrs["retraces"] = tc() - before
+    sp.attrs["final_objective"] = stats.final_objective
+    if stats.telemetry is not None:
+        sp.attrs["telemetry"] = stats.telemetry
+    return stats
+
+
 def vcycle_map(pyramid: list[Level], engine_of, construct_fn, cfg,
-               seed: int = 0, objective0=None, bucket=None) -> VCycleResult:
+               seed: int = 0, objective0=None, bucket=None,
+               telemetry: bool = False) -> VCycleResult:
     """Run one V-cycle over a built pyramid (finest first).
 
     ``engine_of`` supplies each level's refinement engine (sequence or
@@ -53,12 +81,15 @@ def vcycle_map(pyramid: list[Level], engine_of, construct_fn, cfg,
     seed, cfg)`` maps the coarsest level; ``objective0(graph, perm)``
     scores the finest level (defaults to the host float64 objective).
     ``bucket`` is the plan's finest-level :class:`ShapeBucket` — coarse
-    levels keep their own (graph-independent) geometry.
+    levels keep their own (graph-independent) geometry.  ``telemetry``
+    threads the engine counter collection through every level's
+    refinement (the finest level's counters ride the returned stats).
     """
     coarsest = pyramid[-1]
-    t0 = time.perf_counter()
-    perm = _construct_coarsest(coarsest, construct_fn, cfg, seed)
-    t_cons = time.perf_counter() - t0
+    with _TR.span("vcycle.construct", level=len(pyramid) - 1,
+                  n=coarsest.graph.n) as sp:
+        perm = _construct_coarsest(coarsest, construct_fn, cfg, seed)
+    t_cons = sp.dur
 
     level_objectives: list[float] = []
     stats = SearchStats()
@@ -72,9 +103,9 @@ def vcycle_map(pyramid: list[Level], engine_of, construct_fn, cfg,
             jl = j0_fine
         else:
             jl = qap_objective(level.graph, level.machine, perm)
-        stats = _engine_at(engine_of, lvl, level.machine).refine(
-            level.graph, perm, level.pairs, j0=jl,
-            bucket=bucket if lvl == 0 else None)
+        stats = _refine_level(
+            _engine_at(engine_of, lvl, level.machine), lvl, level, perm,
+            jl, bucket if lvl == 0 else None, telemetry)
         level_objectives.append(stats.final_objective)
         if lvl > 0:
             perm = project_perm(perm, level.fine_u, level.fine_v)
@@ -85,7 +116,8 @@ def vcycle_map(pyramid: list[Level], engine_of, construct_fn, cfg,
 
 def vcycle_map_batch(pyramids: list[list[Level]], engine_of, construct_fn,
                      cfg, seed: int = 0, objective0=None,
-                     bucket=None) -> list[VCycleResult]:
+                     bucket=None, telemetry: bool = False
+                     ) -> list[VCycleResult]:
     """Batched V-cycles over same-n graphs: the forced perfect pairing
     makes every pyramid the same depth with the same level sizes, so each
     level's refinement across the whole batch is ONE vmapped engine call
@@ -98,10 +130,11 @@ def vcycle_map_batch(pyramids: list[list[Level]], engine_of, construct_fn,
     if len(depths) != 1:
         raise ValueError(f"batched V-cycles need one pyramid depth, "
                          f"got {sorted(depths)}")
-    t0 = time.perf_counter()
-    perms = [_construct_coarsest(p[-1], construct_fn, cfg, seed)
-             for p in pyramids]
-    t_cons = (time.perf_counter() - t0) / len(pyramids)
+    with _TR.span("vcycle.construct", level=len(pyramids[0]) - 1,
+                  batch=len(pyramids)) as sp:
+        perms = [_construct_coarsest(p[-1], construct_fn, cfg, seed)
+                 for p in pyramids]
+    t_cons = sp.dur / len(pyramids)
 
     level_objectives = [[] for _ in pyramids]
     stats_list = [SearchStats() for _ in pyramids]
@@ -116,11 +149,18 @@ def vcycle_map_batch(pyramids: list[list[Level]], engine_of, construct_fn,
                    for lv, perm in zip(levels, perms)]
         if lvl == 0:
             j0_fine = j0s
-        stats_list = _engine_at(engine_of, lvl, levels[0].machine
-                                ).refine_batch(
-            [lv.graph for lv in levels], perms,
-            [lv.pairs for lv in levels], j0s=j0s,
-            bucket=bucket if lvl == 0 else None)
+        engine = _engine_at(engine_of, lvl, levels[0].machine)
+        tc = getattr(engine, "trace_count", None)
+        before = tc() if tc is not None else 0
+        with _TR.span("vcycle.refine", level=lvl, n=levels[0].graph.n,
+                      batch=len(levels)) as sp:
+            stats_list = engine.refine_batch(
+                [lv.graph for lv in levels], perms,
+                [lv.pairs for lv in levels], j0s=j0s,
+                bucket=bucket if lvl == 0 else None,
+                telemetry=telemetry)
+        if tc is not None:
+            sp.attrs["retraces"] = tc() - before
         for i, st in enumerate(stats_list):
             level_objectives[i].append(st.final_objective)
         if lvl > 0:

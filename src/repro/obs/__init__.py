@@ -1,0 +1,50 @@
+"""Observability layer: device-side engine telemetry, host-side tracing
+spans, and export pipelines (Chrome ``trace_event`` JSON, JSON-lines,
+metrics registry).
+
+Three pieces, layered from device to host:
+
+* :mod:`.telemetry` — :class:`EngineTelemetry`, the host-facing view of
+  the fixed-shape counter arrays the sweep loop
+  (:mod:`repro.engine.sweep`) carries through its ``lax.while_loop``:
+  gain passes executed, exchanges applied per sweep, tabu-masked pairs,
+  aspiration fires, downhill escapes, matching rounds, and the objective
+  trajectory.  Collection is a *runtime* toggle (``telemetry=True`` on
+  ``refine``/``execute``/``map``) that masks rather than retraces — the
+  same no-retrace discipline as the tabu knobs — and the off path is
+  bit-identical to the untelemetered engine.
+
+* :mod:`.trace` — :class:`Span`/:class:`Tracer`, a lightweight
+  context-manager + decorator tracing API with a bounded in-memory ring
+  buffer.  Spans always measure wall-time (callers read ``span.dur`` for
+  result accounting) but are only *recorded* when the tracer is enabled,
+  so the disabled hot path costs one ``perf_counter`` pair — the same
+  price as the ad-hoc timing it replaced.  ``Mapper.lower``,
+  ``MappingPlan.execute(_batch)``, every V-cycle level, portfolio
+  stages, and ``MappingService`` ticks record spans, including
+  compile-vs-execute splits via engine ``trace_count()`` deltas.
+
+* :mod:`.export` / :mod:`.metrics` — ``write_chrome_trace`` emits
+  Perfetto/``chrome://tracing``-loadable ``trace_event`` JSON (spans as
+  complete events, per-sweep engine counters as counter tracks),
+  ``write_jsonl`` a line-per-span event log; :class:`MetricsRegistry`
+  holds counters/gauges/histograms behind one lock with atomic
+  deep-copied snapshots (the backing store of
+  ``MappingService.stats()``).
+
+Surfaces: ``viem --profile out.trace.json`` / ``viem --telemetry``,
+``plan.describe()["timings"]``, ``MappingService.stats()`` engine
+aggregates, and the span breakdowns stamped into every ``BENCH_*.json``.
+"""
+
+from .export import (chrome_trace_events, span_breakdown,
+                     write_chrome_trace, write_jsonl)
+from .metrics import Counter, Gauge, Histogram, MetricsRegistry
+from .telemetry import EngineTelemetry
+from .trace import Span, Tracer, get_tracer, traced
+
+__all__ = [
+    "Counter", "EngineTelemetry", "Gauge", "Histogram", "MetricsRegistry",
+    "Span", "Tracer", "chrome_trace_events", "get_tracer",
+    "span_breakdown", "traced", "write_chrome_trace", "write_jsonl",
+]

@@ -53,7 +53,7 @@ def _make_rounds(kind: str, params: tuple, max_sweeps: int, lanes: int,
                           use_pallas=use_pallas, interpret=interpret)
     vrefine = jax.vmap(refine, in_axes=(None, None, None, None, None,
                                         None, None, 0, None, 0, None,
-                                        None))
+                                        None, None))
     half = (lanes + 1) // 2                 # lanes=1 → nobody adopts
 
     def rounds_fn(nbr, wgt, eu, ev, ew, us, vs, perms, D, epss,
@@ -91,8 +91,12 @@ def _make_rounds(kind: str, params: tuple, max_sweeps: int, lanes: int,
             ps = jnp.where(adopt[:, None], st["inc_perm"][None, :],
                            st["perms"])
             ps = vkick(ps, jax.random.split(kk, lanes))
-            ps, _, sw, sp = vrefine(nbr, wgt, eu, ev, ew, us, vs, ps,
-                                    D, epss, tenure, dlb)
+            # telemetry stays off inside the round loop: per-sweep
+            # counters are collected at round 0 (refine_lanes); the
+            # rounds' sweep/swap totals are already carried below
+            ps, _, sw, sp, _ = vrefine(nbr, wgt, eu, ev, ew, us, vs, ps,
+                                       D, epss, tenure, dlb,
+                                       jnp.bool_(False))
             js = vobj(ps)
             b = jnp.argmin(js)
             improved = js[b] < st["inc_j"]
@@ -181,14 +185,15 @@ class PortfolioRunner:
                 for i, (_, fn) in enumerate(self.lane_constructions)]
 
     def refine_lanes(self, g: CommGraph, perms, pairs, j0s=None,
-                     bucket=None, engine: RefinementEngine | None = None
-                     ) -> list[SearchStats]:
+                     bucket=None, engine: RefinementEngine | None = None,
+                     telemetry: bool = False) -> list[SearchStats]:
         """One vmapped refine of all lanes (round 0, and every coarse
         V-cycle level) — the engine's lane path with this portfolio's
         tabu toggles applied."""
         return (engine or self.engine).refine_lanes(
             g, perms, pairs, j0s=j0s, bucket=bucket,
-            tabu_tenure=self.tabu_tenure, dlb=self.dlb)
+            tabu_tenure=self.tabu_tenure, dlb=self.dlb,
+            telemetry=telemetry)
 
     def _rounds(self):
         if self._rounds_jit is None:
@@ -225,13 +230,13 @@ class PortfolioRunner:
         else:
             dg = eng._device_graph(g)
             us, vs = eng._device_pairs(pairs)
+        tenure, dlb_, _ = eng._toggles(self.tabu_tenure, self.dlb)
         inc_perm, _, round_js, rounds_done, sweeps, swaps = self._rounds()(
             dg.nbr, dg.wgt, dg.eu, dg.ev, dg.ew, us, vs,
             jnp.stack([jnp.asarray(p, jnp.int32) for p in perms]),
             eng._D,
             jnp.asarray([eng._eps(j) for j in j0s], jnp.float32),
-            *eng._toggles(self.tabu_tenure, self.dlb),
-            jax.random.PRNGKey(seed))
+            tenure, dlb_, jax.random.PRNGKey(seed))
         rounds_done = int(rounds_done)
         return RoundsResult(
             perm=np.asarray(inc_perm, dtype=np.int64),

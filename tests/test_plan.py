@@ -118,8 +118,11 @@ def test_plan_serialization_round_trip_bit_identical(spec):
     r3 = plan3.execute(g)
     assert np.array_equal(r1.perm, r3.perm)
     assert r1.final_objective == r3.final_objective
-    # the rebuilt plan reports identical geometry
-    assert plan2.describe() == plan.describe()
+    # the rebuilt plan reports identical geometry ("timings" holds
+    # per-instance wall-clock observations, not geometry)
+    d1, d2 = plan.describe(), plan2.describe()
+    d1.pop("timings"), d2.pop("timings")
+    assert d1 == d2
 
 
 def test_plan_reload_in_fresh_process_bit_identical(tmp_path):
