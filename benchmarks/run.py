@@ -23,7 +23,8 @@ def main() -> None:
     print("name,us_per_call,derived")
     bench_construction.run(report)
     bench_local_search.run(report)
-    bench_kernels.run(report)
+    # kernel-layer axis: writes BENCH_kernels.json (forms x paths x dtypes)
+    bench_kernels.run(report, smoke=smoke)
     bench_mesh_mapping.run(report)
     # machine-model axis: writes BENCH_topology.json next to the CSV stream
     bench_topology.run(report, smoke=smoke)

@@ -17,6 +17,8 @@ Usage:
         [--portfolio] [--portfolio_lanes=8] [--portfolio_rounds=4]
         [--portfolio_tabu_tenure=8] [--portfolio_kick=0.15]
         [--portfolio_stagnation=3]
+        [--kernel_block_rows=N] [--kernel_lanes=N]   # pin tile geometry
+        [--kernel_quantize={auto,off,int8,int16}]    # distance packing
         [--preconfiguration={strong,eco,fast}]  # one flag: partition +
                                         # engine sweeps + multilevel knobs
         [--config=spec.json]            # load a MappingSpec (flags override)
@@ -98,8 +100,10 @@ def main(argv=None):
     ap.add_argument("--explain", action="store_true",
                     help="lower the plan for this graph WITHOUT executing "
                          "and pretty-print plan.describe(): levels, "
-                         "padded shape bucket, kernel form per level, "
-                         "engine sweep budgets")
+                         "padded shape bucket, kernel form and selected "
+                         "KernelConfig per level (tile geometry, "
+                         "quantized table dtype under 'kernels'), engine "
+                         "sweep budgets")
     ap.add_argument("--multilevel",
                     action=argparse.BooleanOptionalAction, default=None,
                     help="coarsen → map → uncoarsen V-cycle over the "
@@ -131,6 +135,22 @@ def main(argv=None):
     ap.add_argument("--portfolio_stagnation", type=int, default=None,
                     help="stop after this many rounds without improving "
                          "the incumbent")
+    ap.add_argument("--kernel_block_rows", type=int, default=None,
+                    help="pin the kernel reduction-tile row count "
+                         "(default: derived from the plan bucket and "
+                         "backend at lower time; see --explain "
+                         "'kernels')")
+    ap.add_argument("--kernel_lanes", type=int, default=None,
+                    help="pin the kernel lane width (multiple of 128; "
+                         "default: derived)")
+    ap.add_argument("--kernel_quantize", default=None,
+                    choices=["auto", "off", "int8", "int16"],
+                    help="matrix-topology distance-table packing: 'auto' "
+                         "packs to int8/int16 when lossless (bit-"
+                         "identical results, 4-8x less gather "
+                         "bandwidth), 'off' keeps float32 tables, an "
+                         "explicit width errors if the table does not "
+                         "fit losslessly")
     ap.add_argument("--profile", metavar="TRACE_JSON", default=None,
                     help="record tracer spans for this run and write a "
                          "Chrome trace_event JSON (load in Perfetto or "

@@ -194,15 +194,12 @@ class DeviceGraph:
         rows = np.repeat(np.arange(n), deg)
         nbr[rows, cols] = g.adjncy[pos]
         wgt[rows, cols] = g.adjwgt[pos]
+        from ..kernels.pad import pad_edge_arrays
         u, v, w = g.edge_list()
-        e = max(pad_edges_to,
-                -(-max(len(u), 1) // pad_edges_to) * pad_edges_to)
-        pad = e - len(u)
+        eu, ev, ew = pad_edge_arrays(u, v, w, base=pad_edges_to)
         return cls(
             nbr=jnp.asarray(nbr), wgt=jnp.asarray(wgt),
-            eu=jnp.asarray(np.pad(u, (0, pad)).astype(np.int32)),
-            ev=jnp.asarray(np.pad(v, (0, pad)).astype(np.int32)),
-            ew=jnp.asarray(np.pad(w, (0, pad)).astype(np.float32)),
+            eu=eu, ev=ev, ew=ew,
             n=n, num_edges=len(u))
 
     def pad_to(self, max_deg: int, num_edges: int) -> "DeviceGraph":

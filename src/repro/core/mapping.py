@@ -113,16 +113,22 @@ class Mapper:
         self._ml_machines: list = [self.topology]
         self._requests = 0
 
-    def _shared_engine(self, machine, max_sweeps: int):
+    def _shared_engine(self, machine, max_sweeps: int, kernel_config=None):
         """Plan engine factory: one RefinementEngine per (machine kernel
-        form — content-fingerprinted for matrices, sweep budget), shared
-        by every plan this session lowers.  Returns (engine, built)."""
+        form — content-fingerprinted for matrices, sweep budget, kernel
+        config), shared by every plan this session lowers.  The kernel
+        config is part of the pool key because it is baked into the
+        compiled sweep (tile geometry, quantized table) — two plans with
+        different configs must not alias one engine.  Returns
+        (engine, built)."""
         from ..engine import RefinementEngine
         before = self._engine_pool.builds
+        cfg_key = None if kernel_config is None else kernel_config.key()
         eng = self._engine_pool.get_or_build(
-            (machine.kernel_params(), int(max_sweeps)),
+            (machine.kernel_params(), int(max_sweeps), cfg_key),
             lambda: RefinementEngine(machine, max_sweeps=max_sweeps,
-                                     cache_caps=self._engine_caps))
+                                     cache_caps=self._engine_caps,
+                                     kernel_config=kernel_config))
         return eng, self._engine_pool.builds > before
 
     def _coarse_machines(self, depth: int) -> list:

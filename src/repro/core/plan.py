@@ -134,31 +134,44 @@ def _structure_key(g: CommGraph, with_weights: bool = False) -> tuple:
     return key
 
 
-def build_objective_kernel(topology, interpret: bool | None = None):
+def build_objective_kernel(topology, interpret: bool | None = None,
+                           config=None):
     """The edge-list QAP objective entry for the topology's device-side
     distance form: closed-form tree/torus oracles computed in-register,
-    or the gather path against the materialized matrix."""
+    or the gather path against the materialized matrix.  ``config`` (a
+    :class:`~repro.kernels.config.KernelConfig`) fixes the reduction-tile
+    geometry and, for the matrix form, stores the table in its lossless
+    int8/int16 packing — bit-identical objectives, narrower gathers."""
     import functools
 
     from ..kernels import qap_objective as qk
     if interpret is None:
         import jax
         interpret = jax.default_backend() != "tpu"
+    geom = {} if config is None else {"lanes": config.lanes,
+                                      "block_rows": config.block_rows}
     kp = topology.kernel_params()
     kind = kp[0]
     if kind == "tree":
         _, strides, dists = kp
         return functools.partial(qk.qap_objective_edges, strides=strides,
-                                 dists=dists, interpret=interpret)
+                                 dists=dists, interpret=interpret, **geom)
     if kind == "torus":
         _, dims, weights = kp
         return functools.partial(qk.qap_objective_edges_torus, dims=dims,
-                                 weights=weights, interpret=interpret)
+                                 weights=weights, interpret=interpret,
+                                 **geom)
     if kind == "matrix":
         import jax.numpy as jnp
-        D = jnp.asarray(topology.matrix(), jnp.float32)
+        dist_dtype = getattr(config, "dist_dtype", None)
+        if dist_dtype is not None:
+            from ..kernels.config import quantize_table
+            D = jnp.asarray(quantize_table(topology.matrix(),
+                                           dist_dtype)[0])
+        else:
+            D = jnp.asarray(topology.matrix(), jnp.float32)
         return functools.partial(qk.qap_objective_edges_matrix, D=D,
-                                 interpret=interpret)
+                                 interpret=interpret, **geom)
     raise ValueError(f"unknown kernel_params kind {kind!r}")
 
 
@@ -217,24 +230,45 @@ class MappingPlan:
                 for _ in range(depth - 1):
                     machines.append(coarsen_machine(machines[-1]))
         self.machines = machines
+        # kernel geometry: ONE KernelConfig per pyramid level, derived
+        # from the plan bucket + backend (overridable via spec.kernel) at
+        # lower time — part of the AOT artifact, reported by describe()
+        # under "kernels".  Coarse matrix machines whose averaged
+        # distances are no longer exact integers simply derive
+        # dist_dtype=None (float tables) — quantization is per level.
+        import jax
+
+        from ..kernels.config import derive_kernel_config
+        self.kernel_backend = jax.default_backend()
+        kspec = self.spec.kernel
+        kover = {} if kspec is None else {
+            "block_rows": kspec.block_rows, "lanes": kspec.lanes,
+            "acc_dtype": kspec.acc_dtype, "quantize": kspec.quantize}
+        self.kernel_configs = []
+        for m in machines:
+            kind = m.kernel_params()[0]
+            self.kernel_configs.append(derive_kernel_config(
+                kind, bucket=self.bucket, backend=self.kernel_backend,
+                table=m.matrix() if kind == "matrix" else None, **kover))
         # one jitted engine per level (device engine only); jax compiles
         # lazily on the first execute, then every same-bucket request
-        # reuses the executable.  ``engine_factory(machine, max_sweeps)
-        # -> (engine, built)`` lets a Mapper session pool engines across
-        # plans (they are bucket-agnostic — the bucket is a per-call
-        # argument), with ``built`` telling this plan whether to count
-        # the construction; a standalone plan builds its own.
+        # reuses the executable.  ``engine_factory(machine, max_sweeps,
+        # kernel_config) -> (engine, built)`` lets a Mapper session pool
+        # engines across plans (they are bucket-agnostic — the bucket is
+        # a per-call argument), with ``built`` telling this plan whether
+        # to count the construction; a standalone plan builds its own.
         self.engine_builds = 0
         self.engines = None
         if self.spec.engine == "device":
             if engine_factory is None:
                 from ..engine import RefinementEngine
 
-                def engine_factory(m, sweeps):
-                    return RefinementEngine(m, max_sweeps=sweeps), True
+                def engine_factory(m, sweeps, config=None):
+                    return RefinementEngine(m, max_sweeps=sweeps,
+                                            kernel_config=config), True
             self.engines = []
-            for m in machines:
-                eng, built = engine_factory(m, self.max_sweeps)
+            for m, cfg in zip(machines, self.kernel_configs):
+                eng, built = engine_factory(m, self.max_sweeps, cfg)
                 self.engine_builds += bool(built)
                 self.engines.append(eng)
         # portfolio runner: the vmapped multistart/tabu search layer over
@@ -252,7 +286,8 @@ class MappingPlan:
         self.kernel_compiles = 0
         self._objective_fn = None
         if self.spec.backend == "pallas":
-            self._objective_fn = build_objective_kernel(self.topology)
+            self._objective_fn = build_objective_kernel(
+                self.topology, config=self.kernel_configs[0])
             self.kernel_compiles += 1
         self._swap_gain_fn = None
         # --- per-request state (graph-content keyed, LRU-bounded)
@@ -273,6 +308,7 @@ class MappingPlan:
                 "n": n >> i,
                 "machine_kind": m.kind,
                 "kernel_form": m.kernel_params()[0],
+                "kernel_config": self.kernel_configs[i].tag(),
                 "engine_compiled": self.engines is not None,
                 "max_sweeps": (self.max_sweeps if self.engines is not None
                                else self.spec.max_sweeps),
@@ -291,6 +327,12 @@ class MappingPlan:
                             "coarsen_min": self._ml[1]}),
             "portfolio": (None if self.portfolio is None else
                           self.portfolio.describe()),
+            "kernels": {
+                "backend": self.kernel_backend,
+                "configs": [cfg.to_dict() for cfg in self.kernel_configs],
+                "quantized": any(cfg.dist_dtype is not None
+                                 for cfg in self.kernel_configs),
+            },
             "levels": levels,
             "compiled": {"engines": self.engine_builds,
                          "kernels": self.kernel_compiles},

@@ -323,6 +323,59 @@ class PortfolioSpec:
 
 
 @dataclass(frozen=True)
+class KernelSpec:
+    """User-facing kernel-geometry overrides (all optional — the plan
+    derives concrete :class:`~repro.kernels.config.KernelConfig` values
+    from its :class:`ShapeBucket` and the jax backend at ``lower`` time;
+    anything set here wins over derivation).
+
+    ``block_rows``/``lanes`` pin the reduction-tile geometry (lanes must
+    be a multiple of 128); ``acc_dtype`` pins the tiled-reduction
+    accumulator; ``quantize`` controls the matrix-topology distance-table
+    packing: ``"auto"`` (the default) packs to int8/int16 when lossless,
+    ``"off"`` keeps float32 tables, and an explicit ``"int8"``/``"int16"``
+    forces that width (raising at lower time if the table does not fit —
+    a forced packing must never silently change results).
+    """
+
+    block_rows: int | None = None
+    lanes: int | None = None
+    acc_dtype: str | None = None
+    quantize: str = "auto"
+
+    def validate(self) -> "KernelSpec":
+        if self.block_rows is not None and self.block_rows < 1:
+            raise ValueError("kernel block_rows must be None or >= 1")
+        if self.lanes is not None and (self.lanes < 128 or self.lanes % 128):
+            raise ValueError("kernel lanes must be None or a positive "
+                             "multiple of 128")
+        if self.acc_dtype not in (None, "float32", "float64"):
+            raise ValueError(f"unknown kernel acc_dtype "
+                             f"{self.acc_dtype!r}; choose None, "
+                             f"'float32', or 'float64'")
+        if self.quantize not in ("auto", "off", "int8", "int16"):
+            raise ValueError(f"unknown kernel quantize mode "
+                             f"{self.quantize!r}; choose from "
+                             f"['auto', 'off', 'int8', 'int16']")
+        return self
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "KernelSpec":
+        known = {f.name for f in dataclasses.fields(cls)}
+        unknown = sorted(set(d) - known)
+        if unknown:
+            raise ValueError(f"unknown KernelSpec keys {unknown}; "
+                             f"known keys: {sorted(known)}")
+        return cls(**d)
+
+    def replace(self, **changes) -> "KernelSpec":
+        return dataclasses.replace(self, **changes)
+
+
+@dataclass(frozen=True)
 class MappingSpec:
     """Declarative description of one mapping computation (guide §4.1).
 
@@ -363,6 +416,7 @@ class MappingSpec:
     topology: TopologySpec | None = None
     multilevel: MultilevelSpec | None = None
     portfolio: PortfolioSpec | None = None
+    kernel: KernelSpec | None = None
 
     def __post_init__(self):
         if self.neighborhood in _NONE_ALIASES:
@@ -376,6 +430,9 @@ class MappingSpec:
         if isinstance(self.portfolio, dict):
             object.__setattr__(self, "portfolio",
                                PortfolioSpec.from_dict(self.portfolio))
+        if isinstance(self.kernel, dict):
+            object.__setattr__(self, "kernel",
+                               KernelSpec.from_dict(self.kernel))
 
     # ------------------------------------------------------------ validation
     def validate(self) -> "MappingSpec":
@@ -417,6 +474,8 @@ class MappingSpec:
                 raise ValueError(
                     "portfolio search runs the vmapped device refinement "
                     "engine; set engine='device' (or pass --engine=device)")
+        if self.kernel is not None:
+            self.kernel.validate()
         return self
 
     # ------------------------------------------------------- dict/json forms
@@ -428,6 +487,8 @@ class MappingSpec:
             d["multilevel"] = self.multilevel.to_dict()
         if self.portfolio is not None:
             d["portfolio"] = self.portfolio.to_dict()
+        if self.kernel is not None:
+            d["kernel"] = self.kernel.to_dict()
         return d
 
     # -------------------------------------------------------- resolution
@@ -522,6 +583,15 @@ class MappingSpec:
             if getattr(args, "engine", None) is None and \
                     overrides.get("engine", spec.engine) == "host":
                 overrides["engine"] = "device"
+        kn_flags = {
+            "block_rows": getattr(args, "kernel_block_rows", None),
+            "lanes": getattr(args, "kernel_lanes", None),
+            "quantize": getattr(args, "kernel_quantize", None),
+        }
+        kn_set = {k: v for k, v in kn_flags.items() if v is not None}
+        if kn_set:
+            kn = spec.kernel or KernelSpec()
+            overrides["kernel"] = kn.replace(**kn_set)
         return spec.replace(**overrides) if overrides else spec
 
     def replace(self, **changes) -> "MappingSpec":

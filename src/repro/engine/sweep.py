@@ -27,7 +27,8 @@ _EPS_REL = 1e-6
 
 
 def _make_refine(kind: str, params: tuple, max_sweeps: int,
-                 use_pallas: bool = False, interpret: bool = False):
+                 use_pallas: bool = False, interpret: bool = False,
+                 config=None):
     """The device sweep fn for one distance form.
 
     Signature: ``(nbr, wgt, eu, ev, ew, us, vs, perm0, D, eps, tenure,
@@ -79,8 +80,10 @@ def _make_refine(kind: str, params: tuple, max_sweeps: int,
     def gains_of(nbr, wgt, perm, us, vs, D):
         if use_pallas:
             return pg.pair_gains_pallas(kind, params, nbr, wgt, perm,
-                                        us, vs, D, interpret=interpret)
-        return pg.pair_gains(kind, params, nbr, wgt, perm, us, vs, D)
+                                        us, vs, D, interpret=interpret,
+                                        config=config)
+        return pg.pair_gains(kind, params, nbr, wgt, perm, us, vs, D,
+                             config=config)
 
     def refine_fn(nbr, wgt, eu, ev, ew, us, vs, perm0, D, eps,
                   tenure, dlb, collect):
@@ -93,7 +96,8 @@ def _make_refine(kind: str, params: tuple, max_sweeps: int,
         neg_inf = jnp.float32(-jnp.inf)
 
         def objective(perm):
-            return pg.edge_objective(kind, params, eu, ev, ew, perm, D)
+            return pg.edge_objective(kind, params, eu, ev, ew, perm, D,
+                                     config=config)
 
         j0 = objective(perm0)
         trace0 = jnp.full((max_sweeps + 1,), jnp.nan,
@@ -277,18 +281,26 @@ class EngineResult:
 class RefinementEngine:
     """Compiled sweep-loop executables for one machine topology.
 
-    One instance per (``kernel_params()``, ``max_sweeps``) — the Mapper
-    keys its engine cache exactly so.  jax re-specializes the jitted fn
-    per array shape; :class:`DeviceGraph`/pair padding buckets shapes so
-    same-shape graphs share one executable.  ``use_pallas`` routes the
-    gain reduction through the hand-tiled Pallas kernel (default: only on
-    real TPU backends; the fused-jnp path is best everywhere else).
+    One instance per (``kernel_params()``, ``max_sweeps``,
+    ``kernel_config``) — the Mapper keys its engine cache exactly so.
+    jax re-specializes the jitted fn per array shape;
+    :class:`DeviceGraph`/pair padding buckets shapes so same-shape graphs
+    share one executable.  ``use_pallas`` routes the gain reduction
+    through the hand-tiled Pallas kernel (default: only on real TPU
+    backends; the fused-jnp path is best everywhere else).
+
+    ``kernel_config`` (a :class:`~repro.kernels.config.KernelConfig`,
+    normally derived at ``Mapper.lower`` time) fixes the tile geometry
+    baked into the compiled sweep and, for matrix-form topologies with a
+    ``dist_dtype``, stores the distance table in its lossless int8/int16
+    packing — results bit-identical, gather bandwidth 4–8× lower.
     """
 
     def __init__(self, topology, max_sweeps: int = 64,
                  eps_rel: float = _EPS_REL, use_pallas: bool | None = None,
                  interpret: bool | None = None,
-                 cache_caps: dict | None = None):
+                 cache_caps: dict | None = None,
+                 kernel_config=None):
         import jax
         import jax.numpy as jnp
         kp = topology.kernel_params()
@@ -296,6 +308,7 @@ class RefinementEngine:
         self.kind = kp[0]
         self.max_sweeps = int(max_sweeps)
         self.eps_rel = float(eps_rel)
+        self.kernel_config = kernel_config
         on_tpu = jax.default_backend() == "tpu"
         self.use_pallas = on_tpu if use_pallas is None else bool(use_pallas)
         self.interpret = (not on_tpu) if interpret is None \
@@ -303,13 +316,20 @@ class RefinementEngine:
         interpret = self.interpret
         if self.kind == "matrix":
             params = ()
-            self._D = jnp.asarray(topology.matrix(), jnp.float32)
+            dist_dtype = getattr(kernel_config, "dist_dtype", None)
+            if dist_dtype is not None:
+                from ..kernels.config import quantize_table
+                packed, _ = quantize_table(topology.matrix(), dist_dtype)
+                self._D = jnp.asarray(packed)
+            else:
+                self._D = jnp.asarray(topology.matrix(), jnp.float32)
         else:
             params = kp[1:]
             self._D = jnp.zeros((1, 1), jnp.float32)    # ignored dummy
         self.params = params
         fn = _make_refine(self.kind, params, self.max_sweeps,
-                          use_pallas=self.use_pallas, interpret=interpret)
+                          use_pallas=self.use_pallas, interpret=interpret,
+                          config=kernel_config)
         self._refine_fn = fn            # raw sweep fn (fn.traces counts
         self._refine = jax.jit(fn)      # retraces — the tabu-masking
         # regression check asserts toggling tenure/dlb adds none)

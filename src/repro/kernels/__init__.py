@@ -1,22 +1,38 @@
 """Pallas TPU kernels for the perf-critical hot spots (DESIGN §3):
 
-  swap_gain        — full QAP pair-exchange gain matrix (MXU matmul form)
   pair_gain        — sparse per-pair swap gains over padded ELL neighbor
                      rows (the refinement engine's gain pass)
   qap_objective    — sparse edge-sum objective w/ in-register hierarchy oracle
+  config           — `KernelConfig`: bucket/backend-derived tile geometry
+                     and lossless int8/int16 distance-table packing,
+                     selected at `Mapper.lower` time
+  pad              — the one set of padding helpers every entry pads with
+                     (inert zero padding, append-only)
   flash_attention  — fused causal/SWA attention forward (§Perf A3)
+  swap_gain        — dense O(n²) pair-exchange gain matrix (MXU matmul
+                     form).  REFERENCE PATH: never selected by plans —
+                     the engine's sparse candidate-pair gains are the
+                     product path (wiring the dense form into selection
+                     would change candidate sets and results).  It stays
+                     importable for `kernels.ops.gain_matrix`, the
+                     `--backend pallas` dense gain surface, and the
+                     microbench's dense/sparse crossover report
+                     (BENCH_kernels.json), but is deliberately not in
+                     ``__all__``.
 
 Each kernel ships with a jit'd wrapper (ops.py) and a pure-jnp oracle
 (ref.py); CPU validation runs interpret=True (tests/test_kernels.py,
 tests/test_flash_kernel.py, tests/test_engine.py).
 """
 
-from . import ops, ref
+from . import ops, pad, ref
+from .config import KernelConfig, derive_kernel_config, quantize_table
 from .flash_attention import flash_attention_kernel
 from .pair_gain import edge_objective, pair_gains, pair_gains_pallas
 from .qap_objective import qap_objective_edges
-from .swap_gain import swap_gain_matrix
+from .swap_gain import swap_gain_matrix  # noqa: F401  (reference path)
 
-__all__ = ["ops", "ref", "flash_attention_kernel", "qap_objective_edges",
-           "swap_gain_matrix", "pair_gains", "pair_gains_pallas",
-           "edge_objective"]
+__all__ = ["ops", "pad", "ref", "flash_attention_kernel",
+           "qap_objective_edges", "pair_gains", "pair_gains_pallas",
+           "edge_objective", "KernelConfig", "derive_kernel_config",
+           "quantize_table"]

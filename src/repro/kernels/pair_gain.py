@@ -19,15 +19,22 @@ Distance forms (the same three the edge-objective kernels use):
   tree    — in-register hierarchical oracle (strides, dists),
   torus   — closed-form k-ary n-cube ring distance (dims, weights),
   matrix  — explicit D: the (P, K) gathers run as XLA gathers in the
-            wrapper, the kernel reduces the weighted difference.
+            wrapper, the kernel reduces the weighted difference.  D may
+            be a lossless int8/int16 packing (``KernelConfig.dist_dtype``)
+            — gathers then read 1–2 bytes per element instead of 4 and
+            the conversion to f32 is exact, so gains are bit-identical
+            to the float-table path.
 
 Two interchangeable implementations (tested equal):
   * :func:`pair_gains` — fused jnp, traceable inside ``lax.while_loop``;
-    the refinement engine's default (XLA fuses the gather + form + rowsum
-    into one pass on CPU and TPU alike),
-  * :func:`pair_gains_pallas` — hand-tiled Pallas kernel streaming (bp, K)
-    row blocks through VMEM, for TPU runs where the candidate set is
-    large enough that explicit tiling wins.
+    the refinement engine's default.  With a :class:`KernelConfig` whose
+    pair tile is smaller than P it switches to a ``fori_loop`` over
+    byte-homogeneous pair tiles, so peak memory scales with the tile
+    rather than the (P, K) row block; each pair's row reduction is
+    unchanged, so results stay bit-identical to the fused form.
+  * :func:`pair_gains_pallas` — hand-tiled Pallas kernel streaming
+    (block_rows, K) row blocks through VMEM, for TPU runs where the
+    candidate set is large enough that explicit tiling wins.
 
 :func:`edge_objective` is the matching device-side objective
 Σ w_e · D(π_u, π_v) used by the engine's on-device objective updates.
@@ -41,17 +48,21 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from .config import KernelConfig
+from .pad import pad1, pad2, round_up
 from .qap_objective import _hier_distance, _torus_distance
 
 _LANES = 128      # lane-dim padding multiple for the Pallas row blocks
-_BP = 8           # sublane rows per Pallas grid step
+_BP = 8           # sublane rows per Pallas grid step (no-config default)
 
 
 # ------------------------------------------------------------ distance forms
 def distance_form(kind: str, params: tuple):
     """Device distance fn ``d(p, q, D) -> f32`` for a ``kernel_params``
-    kind.  ``D`` is the explicit matrix for ``kind == "matrix"`` and an
-    ignored dummy for the closed forms (one uniform signature so the
+    kind.  ``D`` is the explicit matrix for ``kind == "matrix"`` — float32
+    or a lossless int8/int16 packing (the post-gather ``astype`` is exact
+    for small integers, so both give bit-identical f32 distances) — and
+    an ignored dummy for the closed forms (one uniform signature so the
     engine threads a single argument list through ``jit``/``vmap``)."""
     if kind == "tree":
         strides, dists = params
@@ -65,18 +76,43 @@ def distance_form(kind: str, params: tuple):
             return _torus_distance(p, q, dims, weights)
     elif kind == "matrix":
         def d(p, q, D):
-            return D[p, q]
+            return D[p, q].astype(jnp.float32)
     else:
         raise ValueError(f"unknown kernel_params kind {kind!r}")
     return d
 
 
 def edge_objective(kind: str, params: tuple, eu: jax.Array, ev: jax.Array,
-                   ew: jax.Array, perm: jax.Array, D: jax.Array) -> jax.Array:
+                   ew: jax.Array, perm: jax.Array, D: jax.Array,
+                   config: KernelConfig | None = None) -> jax.Array:
     """Σ w_e · D(perm[u_e], perm[v_e]) — the device-side objective.  Edge
-    padding (w = 0) is inert; f32."""
+    padding (w = 0) is inert; f32.
+
+    Without a config (or when one edge tile covers the list — the derived
+    CPU geometry) this is the flat fused reduction.  With a smaller tile
+    it becomes a ``fori_loop`` over (block_rows · lanes)-element chunks:
+    the perm gathers and the weighted distance are materialized one chunk
+    at a time, so peak memory scales with the tile, not E.
+    """
     d = distance_form(kind, params)
-    return jnp.sum(ew * d(perm[eu], perm[ev], D))
+    e = eu.shape[0]
+    chunk = config.block_rows * config.lanes if config is not None else None
+    if chunk is None or chunk >= e:
+        return jnp.sum(ew * d(perm[eu], perm[ev], D))
+    acc_dtype = jnp.dtype(config.acc_dtype)
+    e_pad = round_up(e, chunk)
+    eu_c = pad1(eu, e_pad).reshape(-1, chunk)
+    ev_c = pad1(ev, e_pad).reshape(-1, chunk)
+    ew_c = pad1(ew, e_pad).reshape(-1, chunk)
+
+    def body(i, acc):
+        w = ew_c[i]
+        return acc + jnp.sum(w * d(perm[eu_c[i]], perm[ev_c[i]], D),
+                             dtype=acc_dtype)
+
+    total = jax.lax.fori_loop(0, eu_c.shape[0], body,
+                              jnp.zeros((), acc_dtype))
+    return total.astype(jnp.float32)
 
 
 def _side_weights(nbr_rows: jax.Array, wgt_rows: jax.Array,
@@ -89,24 +125,49 @@ def _side_weights(nbr_rows: jax.Array, wgt_rows: jax.Array,
 # ------------------------------------------------------------------ jnp path
 def pair_gains(kind: str, params: tuple, nbr: jax.Array, wgt: jax.Array,
                perm: jax.Array, us: jax.Array, vs: jax.Array,
-               D: jax.Array) -> jax.Array:
+               D: jax.Array, config: KernelConfig | None = None) -> jax.Array:
     """Exact swap gains for P candidate pairs, fused jnp (f32).
 
     ``nbr``/``wgt``: the (n, K) ELL arrays of a ``DeviceGraph``;
     ``perm``: (n,) process→PE; ``us``/``vs``: (P,) pair endpoints.
     Padding pairs with u == v yields exactly 0 (both sides cancel).
     Positive gain = objective decreases by that amount when swapped.
+
+    With a config whose pair tile (``config.pair_tile(K)``) is smaller
+    than P, the gather + row reduction runs tile-by-tile in a
+    ``fori_loop``; every pair's gain is the same K-slot reduction either
+    way, so tiled and fused results are bit-identical.
     """
     d = distance_form(kind, params)
 
-    def side(a, b):
-        ta = perm[nbr[a]]                               # (P, K) PE targets
+    def gains_of(a, b):
+        ta = perm[nbr[a]]                               # (p, K) PE targets
         wa = _side_weights(nbr[a], wgt[a], b)
         pa = jnp.broadcast_to(perm[a][:, None], ta.shape)
         pb = jnp.broadcast_to(perm[b][:, None], ta.shape)
-        return jnp.sum(wa * (d(pa, ta, D) - d(pb, ta, D)), axis=1)
+        sa = jnp.sum(wa * (d(pa, ta, D) - d(pb, ta, D)), axis=1)
+        tb = perm[nbr[b]]
+        wb = _side_weights(nbr[b], wgt[b], a)
+        qa = jnp.broadcast_to(perm[a][:, None], tb.shape)
+        qb = jnp.broadcast_to(perm[b][:, None], tb.shape)
+        return sa + jnp.sum(wb * (d(qb, tb, D) - d(qa, tb, D)), axis=1)
 
-    return side(us, vs) + side(vs, us)
+    p = us.shape[0]
+    tile = config.pair_tile(nbr.shape[1]) if config is not None else None
+    if tile is None or tile >= p:
+        return gains_of(us, vs)
+    p_pad = round_up(p, tile)
+    us_p = pad1(us, p_pad)                              # (u, v) = (0, 0)
+    vs_p = pad1(vs, p_pad)                              # padding: zero gain
+
+    def body(i, out):
+        a = jax.lax.dynamic_slice(us_p, (i * tile,), (tile,))
+        b = jax.lax.dynamic_slice(vs_p, (i * tile,), (tile,))
+        return jax.lax.dynamic_update_slice(out, gains_of(a, b), (i * tile,))
+
+    out = jax.lax.fori_loop(0, p_pad // tile, body,
+                            jnp.zeros((p_pad,), jnp.float32))
+    return out[:p]
 
 
 # --------------------------------------------------------------- Pallas path
@@ -125,31 +186,47 @@ def _diff_kernel(da_ref, db_ref, w_ref, out_ref):
                            axis=1, keepdims=True)
 
 
-def _pad2(a: jax.Array, rows: int, cols: int) -> jax.Array:
-    return jnp.pad(a, ((0, rows - a.shape[0]), (0, cols - a.shape[1])))
+def _wdelta_kernel(delta_ref, w_ref, out_ref):
+    """Quantized matrix-form row block: the exact integer distance
+    difference is computed in the wrapper (int32 subtract of the narrow
+    gathers, exact f32 convert); the kernel reduces w · Δ."""
+    out_ref[...] = jnp.sum(w_ref[...] * delta_ref[...], axis=1,
+                           keepdims=True)
 
 
 def _pallas_side(kind: str, params: tuple, pa, pb, tgt, w, D,
-                 interpret: bool) -> jax.Array:
+                 interpret: bool, bp: int) -> jax.Array:
     """(P,) masked row-sum Σ w·(d(pa,·)−d(pb,·)) through a tiled kernel."""
     p, k = tgt.shape
-    pp = -(-max(p, 1) // _BP) * _BP
-    kp = -(-max(k, 1) // _LANES) * _LANES
-    w_p = _pad2(w.astype(jnp.float32), pp, kp)          # 0-pad kills terms
-    grid = (pp // _BP,)
-    row_spec = pl.BlockSpec((_BP, 1), lambda r: (r, 0))
-    blk_spec = pl.BlockSpec((_BP, kp), lambda r: (r, 0))
+    pp = round_up(p, bp)
+    kp = round_up(k, _LANES)
+    w_p = pad2(w.astype(jnp.float32), pp, kp)           # 0-pad kills terms
+    grid = (pp // bp,)
+    row_spec = pl.BlockSpec((bp, 1), lambda r: (r, 0))
+    blk_spec = pl.BlockSpec((bp, kp), lambda r: (r, 0))
     out_shape = jax.ShapeDtypeStruct((pp, 1), jnp.float32)
     if kind == "matrix":
         da = D[pa[:, None], tgt]                        # XLA gathers: D may
         db = D[pb[:, None], tgt]                        # not fit VMEM
-        out = pl.pallas_call(
-            _diff_kernel, grid=grid,
-            in_specs=[blk_spec, blk_spec, blk_spec],
-            out_specs=row_spec, out_shape=out_shape,
-            interpret=interpret,
-        )(_pad2(da.astype(jnp.float32), pp, kp),
-          _pad2(db.astype(jnp.float32), pp, kp), w_p)
+        if jnp.issubdtype(D.dtype, jnp.integer):
+            # int gathers move 1-2 bytes/elem; the int32 difference is
+            # exact and converts exactly to f32 (bit-identical gains)
+            delta = (da.astype(jnp.int32) - db.astype(jnp.int32)).astype(
+                jnp.float32)
+            out = pl.pallas_call(
+                _wdelta_kernel, grid=grid,
+                in_specs=[blk_spec, blk_spec],
+                out_specs=row_spec, out_shape=out_shape,
+                interpret=interpret,
+            )(pad2(delta, pp, kp), w_p)
+        else:
+            out = pl.pallas_call(
+                _diff_kernel, grid=grid,
+                in_specs=[blk_spec, blk_spec, blk_spec],
+                out_specs=row_spec, out_shape=out_shape,
+                interpret=interpret,
+            )(pad2(da.astype(jnp.float32), pp, kp),
+              pad2(db.astype(jnp.float32), pp, kp), w_p)
     else:
         d = distance_form(kind, params)
         out = pl.pallas_call(
@@ -159,24 +236,27 @@ def _pallas_side(kind: str, params: tuple, pa, pb, tgt, w, D,
             in_specs=[row_spec, row_spec, blk_spec, blk_spec],
             out_specs=row_spec, out_shape=out_shape,
             interpret=interpret,
-        )(_pad2(pa[:, None].astype(jnp.int32), pp, 1),
-          _pad2(pb[:, None].astype(jnp.int32), pp, 1),
-          _pad2(tgt.astype(jnp.int32), pp, kp), w_p)
+        )(pad2(pa[:, None].astype(jnp.int32), pp, 1),
+          pad2(pb[:, None].astype(jnp.int32), pp, 1),
+          pad2(tgt.astype(jnp.int32), pp, kp), w_p)
     return out[:p, 0]
 
 
 def pair_gains_pallas(kind: str, params: tuple, nbr: jax.Array,
                       wgt: jax.Array, perm: jax.Array, us: jax.Array,
                       vs: jax.Array, D: jax.Array,
-                      interpret: bool = False) -> jax.Array:
+                      interpret: bool = False,
+                      config: KernelConfig | None = None) -> jax.Array:
     """:func:`pair_gains`, with the masked row-sum reduction hand-tiled as
-    a Pallas kernel ((bp, K) VMEM blocks, closed-form distances computed
-    in-register).  Semantics identical to the jnp path (tested)."""
+    a Pallas kernel ((block_rows, K) VMEM blocks, closed-form distances
+    computed in-register; block_rows from the config, seed-era 8 without
+    one).  Semantics identical to the jnp path (tested)."""
+    bp = config.block_rows if config is not None else _BP
 
     def side(a, b):
         tgt = perm[nbr[a]]
         w = _side_weights(nbr[a], wgt[a], b)
         return _pallas_side(kind, params, perm[a], perm[b], tgt, w, D,
-                            interpret)
+                            interpret, bp)
 
     return side(us, vs) + side(vs, us)

@@ -13,12 +13,18 @@ selected by the machine topology's ``kernel_params()``:
   matrix  — explicit-D topologies: the (E,)-gather d_e = D[pu_e, pv_e]
             runs in the jit'd wrapper (XLA's gather is the right tool; D
             may exceed VMEM), and the Pallas kernel reduces Σ w_e · d_e.
+            D may be a lossless int8/int16 packing — the gather then
+            moves 1–2 bytes per edge instead of 4 and the post-gather
+            f32 convert is exact, so the objective is bit-identical.
 
 Inputs are pre-gathered PE ids pu = Π[u], pv = Π[v] (the gather is done in
 the jit'd wrapper; XLA handles it well) shaped (rows, L) so each grid step
-streams one (1, L) lane-aligned block from VMEM and accumulates a partial
-sum in SMEM scratch; the single grid dimension is sequential on TPU which
-makes the scalar accumulation race-free.
+streams one (block_rows, L) lane-aligned block from VMEM and accumulates a
+partial sum in SMEM scratch; the single grid dimension is sequential on
+TPU which makes the scalar accumulation race-free.  ``lanes`` and
+``block_rows`` come from the plan's :class:`~repro.kernels.config
+.KernelConfig` (seed-era (1, 1024) without one); peak VMEM per step is
+the (block_rows, lanes) tile, independent of E.
 """
 
 from __future__ import annotations
@@ -29,6 +35,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from .pad import pad_to_lanes as _pad_to_lanes
 
 
 def _hier_distance(pu, pv, strides, dists):
@@ -61,7 +69,7 @@ def _torus_distance(pu, pv, dims, weights):
 
 
 def _qap_obj_kernel(pu_ref, pv_ref, w_ref, out_ref, acc_ref, *,
-                    strides: tuple, dists: tuple, rows: int):
+                    strides: tuple, dists: tuple, steps: int):
     r = pl.program_id(0)
 
     @pl.when(r == 0)
@@ -74,13 +82,13 @@ def _qap_obj_kernel(pu_ref, pv_ref, w_ref, out_ref, acc_ref, *,
     d = _hier_distance(pu, pv, strides, dists)
     acc_ref[0, 0] += jnp.sum(w * d)
 
-    @pl.when(r == rows - 1)
+    @pl.when(r == steps - 1)
     def _done():
         out_ref[0, 0] = acc_ref[0, 0]
 
 
 def _qap_obj_torus_kernel(pu_ref, pv_ref, w_ref, out_ref, acc_ref, *,
-                          dims: tuple, weights: tuple, rows: int):
+                          dims: tuple, weights: tuple, steps: int):
     r = pl.program_id(0)
 
     @pl.when(r == 0)
@@ -90,12 +98,12 @@ def _qap_obj_torus_kernel(pu_ref, pv_ref, w_ref, out_ref, acc_ref, *,
     d = _torus_distance(pu_ref[...], pv_ref[...], dims, weights)
     acc_ref[0, 0] += jnp.sum(w_ref[...] * d)
 
-    @pl.when(r == rows - 1)
+    @pl.when(r == steps - 1)
     def _done():
         out_ref[0, 0] = acc_ref[0, 0]
 
 
-def _weighted_sum_kernel(d_ref, w_ref, out_ref, acc_ref, *, rows: int):
+def _weighted_sum_kernel(d_ref, w_ref, out_ref, acc_ref, *, steps: int):
     r = pl.program_id(0)
 
     @pl.when(r == 0)
@@ -104,17 +112,39 @@ def _weighted_sum_kernel(d_ref, w_ref, out_ref, acc_ref, *, rows: int):
 
     acc_ref[0, 0] += jnp.sum(w_ref[...] * d_ref[...])
 
-    @pl.when(r == rows - 1)
+    @pl.when(r == steps - 1)
     def _done():
         out_ref[0, 0] = acc_ref[0, 0]
 
 
+def _reduce_call(kernel, blocks, block_rows: int, lanes: int,
+                 interpret: bool):
+    """Shared pallas_call shape for the three reductions: stream
+    (block_rows, lanes) tiles down a sequential grid, accumulate one
+    scalar in SMEM scratch."""
+    rows = blocks[0].shape[0]
+    steps = rows // block_rows
+    out = pl.pallas_call(
+        functools.partial(kernel, steps=steps),
+        grid=(steps,),
+        in_specs=[pl.BlockSpec((block_rows, lanes), lambda r: (r, 0))
+                  for _ in blocks],
+        out_specs=pl.BlockSpec((1, 1), lambda r: (0, 0),
+                               memory_space=pltpu.SMEM),
+        out_shape=jax.ShapeDtypeStruct((1, 1), jnp.float32),
+        scratch_shapes=[pltpu.SMEM((1, 1), jnp.float32)],
+        interpret=interpret,
+    )(*blocks)
+    return out[0, 0]
+
+
 @functools.partial(jax.jit,
-                   static_argnames=("strides", "dists", "lanes", "interpret"))
+                   static_argnames=("strides", "dists", "lanes",
+                                    "block_rows", "interpret"))
 def qap_objective_edges(pu: jax.Array, pv: jax.Array, w: jax.Array,
                         strides: tuple, dists: tuple,
-                        lanes: int = 1024, interpret: bool = False
-                        ) -> jax.Array:
+                        lanes: int = 1024, block_rows: int = 1,
+                        interpret: bool = False) -> jax.Array:
     """Σ w_e · D(pu_e, pv_e) with the hierarchy (strides, dists).
 
     pu, pv: (E,) int32 PE ids; w: (E,) f32.  Padded with pu == pv (distance
@@ -123,93 +153,48 @@ def qap_objective_edges(pu: jax.Array, pv: jax.Array, w: jax.Array,
     e = pu.shape[0]
     pu_p, pv_p, w_p = _pad_to_lanes(
         [pu.astype(jnp.int32), pv.astype(jnp.int32),
-         w.astype(jnp.float32)], e, lanes)
-    rows, lanes = pu_p.shape
-    out = pl.pallas_call(
-        functools.partial(_qap_obj_kernel, strides=tuple(strides),
-                          dists=tuple(dists), rows=rows),
-        grid=(rows,),
-        in_specs=[
-            pl.BlockSpec((1, lanes), lambda r: (r, 0)),
-            pl.BlockSpec((1, lanes), lambda r: (r, 0)),
-            pl.BlockSpec((1, lanes), lambda r: (r, 0)),
-        ],
-        out_specs=pl.BlockSpec((1, 1), lambda r: (0, 0),
-                               memory_space=pltpu.SMEM),
-        out_shape=jax.ShapeDtypeStruct((1, 1), jnp.float32),
-        scratch_shapes=[pltpu.SMEM((1, 1), jnp.float32)],
-        interpret=interpret,
-    )(pu_p, pv_p, w_p)
-    return out[0, 0]
-
-
-def _pad_to_lanes(arrs, e: int, lanes: int):
-    """Zero-pad 1-D edge arrays to a lane multiple and reshape to
-    (rows, lanes).  Zero padding is inert for every oracle form: pu == pv
-    == 0 gives distance 0 for tree/torus/matrix, and w == 0 kills the
-    term regardless."""
-    lanes = min(lanes, max(128, 1 << (max(e - 1, 1)).bit_length()))
-    e_pad = -(-max(e, 1) // lanes) * lanes
-    pad = e_pad - e
-    return [jnp.pad(a, (0, pad)).reshape(-1, lanes) for a in arrs]
+         w.astype(jnp.float32)], e, lanes, block_rows)
+    kernel = functools.partial(_qap_obj_kernel, strides=tuple(strides),
+                               dists=tuple(dists))
+    return _reduce_call(kernel, [pu_p, pv_p, w_p], block_rows,
+                        pu_p.shape[1], interpret)
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("dims", "weights", "lanes", "interpret"))
+                   static_argnames=("dims", "weights", "lanes",
+                                    "block_rows", "interpret"))
 def qap_objective_edges_torus(pu: jax.Array, pv: jax.Array, w: jax.Array,
                               dims: tuple, weights: tuple,
-                              lanes: int = 1024, interpret: bool = False
-                              ) -> jax.Array:
+                              lanes: int = 1024, block_rows: int = 1,
+                              interpret: bool = False) -> jax.Array:
     """Σ w_e · D_torus(pu_e, pv_e) for the k-ary n-cube (dims, weights)."""
     e = pu.shape[0]
     pu_p, pv_p, w_p = _pad_to_lanes(
         [pu.astype(jnp.int32), pv.astype(jnp.int32),
-         w.astype(jnp.float32)], e, lanes)
-    rows, lanes_ = pu_p.shape
-    out = pl.pallas_call(
-        functools.partial(_qap_obj_torus_kernel, dims=tuple(dims),
-                          weights=tuple(weights), rows=rows),
-        grid=(rows,),
-        in_specs=[
-            pl.BlockSpec((1, lanes_), lambda r: (r, 0)),
-            pl.BlockSpec((1, lanes_), lambda r: (r, 0)),
-            pl.BlockSpec((1, lanes_), lambda r: (r, 0)),
-        ],
-        out_specs=pl.BlockSpec((1, 1), lambda r: (0, 0),
-                               memory_space=pltpu.SMEM),
-        out_shape=jax.ShapeDtypeStruct((1, 1), jnp.float32),
-        scratch_shapes=[pltpu.SMEM((1, 1), jnp.float32)],
-        interpret=interpret,
-    )(pu_p, pv_p, w_p)
-    return out[0, 0]
+         w.astype(jnp.float32)], e, lanes, block_rows)
+    kernel = functools.partial(_qap_obj_torus_kernel, dims=tuple(dims),
+                               weights=tuple(weights))
+    return _reduce_call(kernel, [pu_p, pv_p, w_p], block_rows,
+                        pu_p.shape[1], interpret)
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("lanes", "interpret"))
+                   static_argnames=("lanes", "block_rows", "interpret"))
 def qap_objective_edges_matrix(pu: jax.Array, pv: jax.Array, w: jax.Array,
                                D: jax.Array, lanes: int = 1024,
+                               block_rows: int = 1,
                                interpret: bool = False) -> jax.Array:
     """Σ w_e · D[pu_e, pv_e] for an explicit distance matrix.
 
     The per-edge gather runs as an XLA gather in this wrapper (D may not
     fit VMEM, and XLA pipelines HBM gathers well); the Pallas kernel does
-    the lane-aligned weighted reduction.
+    the lane-aligned weighted reduction.  Gather-then-convert keeps the
+    table in its storage dtype — an int8/int16 packing moves 1–2 bytes
+    per edge and converts exactly, bit-identical to a float32 table.
     """
     e = pu.shape[0]
-    d = D.astype(jnp.float32)[pu, pv]
-    d_p, w_p = _pad_to_lanes([d, w.astype(jnp.float32)], e, lanes)
-    rows, lanes_ = d_p.shape
-    out = pl.pallas_call(
-        functools.partial(_weighted_sum_kernel, rows=rows),
-        grid=(rows,),
-        in_specs=[
-            pl.BlockSpec((1, lanes_), lambda r: (r, 0)),
-            pl.BlockSpec((1, lanes_), lambda r: (r, 0)),
-        ],
-        out_specs=pl.BlockSpec((1, 1), lambda r: (0, 0),
-                               memory_space=pltpu.SMEM),
-        out_shape=jax.ShapeDtypeStruct((1, 1), jnp.float32),
-        scratch_shapes=[pltpu.SMEM((1, 1), jnp.float32)],
-        interpret=interpret,
-    )(d_p, w_p)
-    return out[0, 0]
+    d = D[pu, pv].astype(jnp.float32)
+    d_p, w_p = _pad_to_lanes([d, w.astype(jnp.float32)], e, lanes,
+                             block_rows)
+    return _reduce_call(_weighted_sum_kernel, [d_p, w_p], block_rows,
+                        d_p.shape[1], interpret)

@@ -59,14 +59,12 @@ def coarsen_graph(g: CommGraph) -> tuple[CommGraph, np.ndarray, np.ndarray]:
     if n > MAX_N:
         raise ValueError(f"contraction keys need n <= {MAX_N}, got {n}")
     import jax.numpy as jnp
+
+    from ..kernels.pad import pad_edge_arrays
     u, v, w = g.edge_list()
-    e = max(128, -(-max(len(u), 1) // 128) * 128)
-    pad = e - len(u)
+    eu, ev, ew = pad_edge_arrays(u, v, w)
     labels, ceu, cev, cew, cvw = _coarsen_jit()(
-        jnp.asarray(np.pad(u, (0, pad)).astype(np.int32)),
-        jnp.asarray(np.pad(v, (0, pad)).astype(np.int32)),
-        jnp.asarray(np.pad(w, (0, pad)).astype(np.float32)),
-        jnp.asarray(g.vwgt.astype(np.float32)))
+        eu, ev, ew, jnp.asarray(g.vwgt.astype(np.float32)))
     labels = np.asarray(labels, dtype=np.int64)
     nc = n // 2
     # stable sort by label: each label appears exactly twice, members in
