@@ -9,8 +9,8 @@ import sys
 def main() -> None:
     from . import (bench_construction, bench_engine, bench_kernels,
                    bench_local_search, bench_mesh_mapping,
-                   bench_multilevel, bench_portfolio, bench_serve,
-                   bench_topology)
+                   bench_multilevel, bench_portfolio, bench_remap,
+                   bench_serve, bench_topology)
 
     def report(name: str, us: float, derived: str = ""):
         print(f"{name},{us:.0f},{derived}", flush=True)
@@ -36,6 +36,8 @@ def main() -> None:
     bench_portfolio.run(report, smoke=smoke)
     # serving axis: writes BENCH_serve.json (MappingService vs per-request)
     bench_serve.run(report, smoke=smoke)
+    # closed-loop axis: writes BENCH_remap.json (drift -> gate -> remap)
+    bench_remap.run(report, smoke=smoke)
 
 
 if __name__ == "__main__":

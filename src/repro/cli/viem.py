@@ -68,6 +68,12 @@ def build_spec(args) -> MappingSpec:
 
 
 def main(argv=None):
+    argv = sys.argv[1:] if argv is None else list(argv)
+    if argv and argv[0] == "remap-watch":
+        # the closed-loop monitor driver (repro.monitor): profile →
+        # drift → what-if replay → incremental remap
+        from .remap_watch import main as remap_watch_main
+        return remap_watch_main(argv[1:])
     ap = argparse.ArgumentParser(prog="viem", description=__doc__)
     ap.add_argument("file", nargs="?", help="Path to file (model).")
     ap.add_argument("--list-algorithms", action="store_true",
@@ -161,6 +167,11 @@ def main(argv=None):
                          "(exchanges, tabu-masked pairs, aspiration "
                          "fires, downhill escapes) and print a summary — "
                          "a runtime toggle, never a recompile")
+    ap.add_argument("--metrics-out", metavar="FILE", default=None,
+                    help="write the run's metrics registry as Prometheus "
+                         "text (objectives, timings, engine counters) — "
+                         "the same exposition MappingService.prometheus() "
+                         "serves")
     ap.add_argument("--output_filename", default="permutation")
     args = ap.parse_args(argv)
 
@@ -221,6 +232,27 @@ def main(argv=None):
         n_events = write_chrome_trace(tracer.spans(), args.profile)
         print(f"wrote {args.profile} ({len(tracer)} spans, "
               f"{n_events} trace events)")
+    if args.metrics_out:
+        from ..obs import MetricsRegistry
+        reg = MetricsRegistry()
+        with reg.lock:
+            reg.counter("run.count").inc()
+            reg.gauge("run.initial_objective").set(res.initial_objective)
+            reg.gauge("run.final_objective").set(res.final_objective)
+            reg.gauge("run.improvement").set(res.improvement)
+            reg.histogram("run.construction_seconds").observe(
+                res.construction_seconds)
+            reg.histogram("run.search_seconds").observe(
+                res.search_seconds)
+            if tel is not None:
+                s = tel.summary()
+                reg.counter("engine.sweeps").inc(s["sweeps"])
+                reg.counter("engine.exchanges").inc(s["exchanges"])
+                reg.counter("engine.tabu_masked").inc(
+                    s["tabu_masked"])
+        with open(args.metrics_out, "w") as fh:
+            fh.write(reg.to_prometheus())
+        print(f"wrote {args.metrics_out}")
     print(f"wrote {args.output_filename}")
 
 

@@ -539,6 +539,86 @@ class MappingPlan:
                                            seed=seed, **kw)
         return self._finish(g, perm, j0, t_cons, rsp.dur, stats)
 
+    def candidate_pairs(self, g: CommGraph,
+                        seed: int | None = None) -> np.ndarray:
+        """The plan's candidate exchange pairs for this graph — the same
+        (p, 2) array ``execute`` refines over, LRU-cached per structure.
+        Exposed so incremental callers (:mod:`repro.monitor`) can build a
+        runtime activity mask over a *fixed* pair set and keep the padded
+        pair shape — and therefore the compiled executable — unchanged
+        across warm re-executions."""
+        if self._nb is None:
+            return np.zeros((0, 2), np.int64)
+        seed = self.spec.seed if seed is None else int(seed)
+        return self._pairs(g, seed)
+
+    def execute_warm(self, g: CommGraph, perm: np.ndarray,
+                     pairs: np.ndarray | None = None,
+                     active: np.ndarray | None = None,
+                     seed: int | None = None,
+                     telemetry: bool = False) -> MappingResult:
+        """Warm-start: refine an incumbent ``perm`` on ``g`` with NO
+        construction phase — the incremental-remap hot path.
+
+        ``pairs`` fixes the candidate set (default: the plan's own
+        ``candidate_pairs(g)``); ``active`` is an optional boolean mask
+        over it.  Inactive pairs are replaced by inert ``(u, u)``
+        self-pairs — exactly the engine's padding convention, zero gain
+        and never selected — so the array length, the padded pair shape
+        P, and the compiled executable are all unchanged: masking, never
+        retracing (trace-count tested).  Dirty-region remaps pass the
+        mask of pairs touching drifted vertices and leave the rest of
+        the mapping frozen in place by construction of the sweep.
+
+        The incumbent is *not* mutated; the result carries the refined
+        copy.  ``initial_objective`` is the incumbent's objective on
+        ``g``, so ``result.improvement`` reads as recovered drift."""
+        seed = self.spec.seed if seed is None else int(seed)
+        self._check(g)
+        self.executes += 1
+        perm = np.array(perm, dtype=np.int64, copy=True)
+        with _TR.span("plan.execute_warm", n=g.n, engine=self.spec.engine,
+                      seed=seed) as sp:
+            j0 = self.objective(g, perm)
+            stats = None
+            with _TR.span("plan.refine", n=g.n, engine=self.spec.engine,
+                          warm=True) as rsp:
+                if pairs is None:
+                    pairs = self.candidate_pairs(g, seed)
+                pairs = np.asarray(pairs, dtype=np.int64)
+                if active is not None:
+                    active = np.asarray(active, dtype=bool)
+                    if active.shape != (len(pairs),):
+                        raise ValueError(
+                            f"active mask shape {active.shape} does not "
+                            f"match {len(pairs)} candidate pairs")
+                    masked = np.where(active[:, None], pairs,
+                                      pairs[:, [0, 0]])
+                else:
+                    masked = pairs
+                rsp.attrs["pairs"] = len(pairs)
+                rsp.attrs["active"] = (len(pairs) if active is None
+                                       else int(active.sum()))
+                if len(pairs) and self.spec.engine == "device":
+                    eng = self.engines[0]
+                    before = eng.trace_count()
+                    stats = eng.refine(g, perm, masked, j0=j0,
+                                       bucket=self.bucket,
+                                       telemetry=telemetry)
+                    rsp.attrs["retraces"] = eng.trace_count() - before
+                    if stats.telemetry is not None:
+                        rsp.attrs["telemetry"] = stats.telemetry
+                elif len(pairs):
+                    live = masked if active is None else pairs[active]
+                    kw = {} if self.spec.max_sweeps is None else \
+                        {"max_sweeps": self.spec.max_sweeps}
+                    stats = parallel_sweep_search(g, self.topology, perm,
+                                                  live, seed=seed, **kw)
+            res = self._finish(g, perm, j0, 0.0, rsp.dur, stats)
+            sp.attrs["final_objective"] = res.final_objective
+        self.execute_seconds_total += sp.dur
+        return res
+
     def execute_batch(self, graphs, seed: int | None = None,
                       telemetry: bool = False) -> list[MappingResult]:
         """Map a batch through one vmapped device dispatch per level.

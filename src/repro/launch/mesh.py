@@ -79,3 +79,46 @@ def viem_device_order(hlo_text: str, n_devices: int, pods: int = 2,
     res = Mapper(h, spec).map(g)
     # res.perm[logical] = physical  →  device_order[logical] = physical
     return np.asarray(res.perm, dtype=np.int64), res
+
+
+def fleet_monitor(hlo_text: str, n_devices: int, pods: int = 2,
+                  preconfiguration: str = "eco",
+                  neighborhood_dist: int = 10, seed: int = 0,
+                  machine_model: str = "tree", config=None,
+                  cost=None, registry=None, on_remap=None):
+    """Closed-loop counterpart of :func:`viem_device_order`: map once,
+    then keep watching.
+
+    Builds a :class:`~repro.monitor.RemapMonitor` whose incumbent is the
+    initial VieM device order for this program, lowered with ``pow2``
+    bucket headroom so drifted traffic keeps fitting the compiled
+    executables.  Feed it windows (``observe_hlo`` on recompiles,
+    ``observe_edges`` from transport counters), ``tick()`` per window,
+    and ``attach(straggler_monitor)`` so ``REBALANCE`` signals flow
+    through the same replay gate.  Committed remaps invoke
+    ``on_remap(device_order, verdict)`` — rebuild the mesh with
+    ``make_production_mesh(devices=np.array(jax.devices())
+    [device_order])``.
+
+    Returns ``(monitor, device_order)``.
+    """
+    from ..core import Mapper, MappingSpec
+    from ..core.comm_model import device_comm_graph
+    from ..monitor import MonitorConfig, RemapMonitor
+
+    g = device_comm_graph(hlo_text, n_devices)
+    h = fleet_model(machine_model, pods=pods)
+    if h.n_pe != n_devices:
+        raise ValueError(f"fleet has {h.n_pe} PEs but program uses "
+                         f"{n_devices} devices")
+    spec = MappingSpec(construction="hierarchytopdown",
+                       neighborhood="communication",
+                       neighborhood_dist=neighborhood_dist,
+                       preconfiguration=preconfiguration, seed=seed,
+                       engine="device")
+    plan = Mapper(h, spec).lower_for(g, schedule="pow2")
+    monitor = RemapMonitor(plan, g,
+                           config=config or MonitorConfig(),
+                           cost=cost, registry=registry,
+                           on_remap=on_remap, seed=seed)
+    return monitor, monitor.incumbent.copy()

@@ -216,6 +216,12 @@ class MappingService:
         state."""
         self.metrics.reset()
 
+    def prometheus(self) -> str:
+        """The registry as Prometheus text exposition — serve this at a
+        ``/metrics`` endpoint (or dump via ``viem --metrics-out``) so
+        service and monitor counters are scrapeable."""
+        return self.metrics.to_prometheus()
+
     def stats(self) -> dict:
         """Legacy-keyed view over ``self.metrics.snapshot()``.
 

@@ -39,12 +39,14 @@ aggregates, and the span breakdowns stamped into every ``BENCH_*.json``.
 
 from .export import (chrome_trace_events, span_breakdown,
                      write_chrome_trace, write_jsonl)
-from .metrics import Counter, Gauge, Histogram, MetricsRegistry
+from .metrics import (Counter, Gauge, Histogram, MetricsRegistry,
+                      parse_prometheus)
 from .telemetry import EngineTelemetry
 from .trace import Span, Tracer, get_tracer, traced
 
 __all__ = [
     "Counter", "EngineTelemetry", "Gauge", "Histogram", "MetricsRegistry",
     "Span", "Tracer", "chrome_trace_events", "get_tracer",
-    "span_breakdown", "traced", "write_chrome_trace", "write_jsonl",
+    "parse_prometheus", "span_breakdown", "traced", "write_chrome_trace",
+    "write_jsonl",
 ]

@@ -24,7 +24,8 @@ from __future__ import annotations
 import threading
 from collections import deque
 
-__all__ = ["Counter", "Gauge", "Histogram", "MetricsRegistry"]
+__all__ = ["Counter", "Gauge", "Histogram", "MetricsRegistry",
+           "parse_prometheus"]
 
 
 class Counter:
@@ -158,3 +159,69 @@ class MetricsRegistry:
         with self.lock:
             for m in self._metrics.values():
                 m.reset()
+
+    def to_prometheus(self, prefix: str = "viem_") -> str:
+        """Prometheus text exposition (one atomic snapshot).
+
+        Counters/gauges map 1:1; histograms expose as summaries
+        (``_count``/``_sum`` plus p50/p99 quantile samples from the
+        sliding window).  Metric names sanitize dots to underscores
+        under ``prefix`` — ``monitor.drift.score`` scrapes as
+        ``viem_monitor_drift_score``.  Round-trips through
+        :func:`parse_prometheus`.
+        """
+        with self.lock:
+            metrics = sorted(self._metrics.items())
+            lines: list[str] = []
+            for name, m in metrics:
+                pname = prefix + name.replace(".", "_").replace("-", "_")
+                if isinstance(m, Counter):
+                    lines.append(f"# TYPE {pname} counter")
+                    lines.append(f"{pname} {m.snapshot()}")
+                elif isinstance(m, Gauge):
+                    lines.append(f"# TYPE {pname} gauge")
+                    lines.append(f"{pname} {m.snapshot()}")
+                else:
+                    snap = m.snapshot()
+                    lines.append(f"# TYPE {pname} summary")
+                    lines.append(f'{pname}{{quantile="0.5"}} '
+                                 f'{snap["p50"]}')
+                    lines.append(f'{pname}{{quantile="0.99"}} '
+                                 f'{snap["p99"]}')
+                    lines.append(f"{pname}_count {snap['count']}")
+                    lines.append(f"{pname}_sum {snap['sum']}")
+        return "\n".join(lines) + ("\n" if lines else "")
+
+
+def parse_prometheus(text: str) -> dict:
+    """Parse the subset of the Prometheus text format
+    :meth:`MetricsRegistry.to_prometheus` emits, back into
+    ``{name: {"type": ..., "samples": {label-or-"": value}}}`` — the
+    round-trip check scrapers rely on."""
+    out: dict = {}
+    types: dict = {}
+    for raw in text.splitlines():
+        line = raw.strip()
+        if not line:
+            continue
+        if line.startswith("#"):
+            parts = line.split()
+            if len(parts) >= 4 and parts[1] == "TYPE":
+                types[parts[2]] = parts[3]
+            continue
+        name_part, value = line.rsplit(" ", 1)
+        if "{" in name_part:
+            name, labels = name_part.split("{", 1)
+            labels = labels.rstrip("}")
+        else:
+            name, labels = name_part, ""
+        base = name
+        for suffix in ("_count", "_sum"):
+            if name.endswith(suffix) and name[:-len(suffix)] in types:
+                base = name[:-len(suffix)]
+                labels = suffix[1:]
+                break
+        entry = out.setdefault(base, {"type": types.get(base, "untyped"),
+                                      "samples": {}})
+        entry["samples"][labels] = float(value)
+    return out

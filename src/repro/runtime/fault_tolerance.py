@@ -40,21 +40,45 @@ class HostStats:
 class StragglerMonitor:
     """Flags hosts whose step time exceeds fleet median by `threshold`×
     for `patience` consecutive steps; escalates to eviction after
-    `evict_after` flags or `max_missed` heartbeats (dead host)."""
+    `evict_after` flags or `max_missed` heartbeats (dead host).
+
+    Decisions are consumable two ways besides the return values:
+    ``on_action(action, hosts)`` fires for every non-CONTINUE decision
+    (``RemapMonitor.attach`` subscribes here to route REBALANCE through
+    its replay gate), and the ``actions`` deque queues the same events
+    for pull-style consumers (``drain_actions()`` empties it).
+    """
 
     def __init__(self, n_hosts: int, threshold: float = 1.5,
                  patience: int = 3, evict_after: int = 10,
-                 max_missed: int = 5):
+                 max_missed: int = 5, on_action=None,
+                 queue_len: int = 256):
         self.hosts = {h: HostStats() for h in range(n_hosts)}
         self.threshold = threshold
         self.patience = patience
         self.evict_after = evict_after
         self.max_missed = max_missed
+        self.on_action = on_action
+        self.actions: deque = deque(maxlen=queue_len)
         self._flags = {h: 0 for h in range(n_hosts)}
+
+    def _emit(self, action: Action, hosts: list[int]) -> None:
+        if action == Action.CONTINUE:
+            return
+        self.actions.append((action, list(hosts)))
+        if self.on_action is not None:
+            self.on_action(action, list(hosts))
+
+    def drain_actions(self) -> list[tuple[Action, list[int]]]:
+        """Pop every queued non-CONTINUE decision (oldest first)."""
+        out = list(self.actions)
+        self.actions.clear()
+        return out
 
     def heartbeat_missed(self, host: int) -> Action:
         self.hosts[host].missed_heartbeats += 1
         if self.hosts[host].missed_heartbeats >= self.max_missed:
+            self._emit(Action.EVICT_RESTART, [host])
             return Action.EVICT_RESTART
         return Action.CONTINUE
 
@@ -80,9 +104,10 @@ class StragglerMonitor:
         if not slow:
             return Action.CONTINUE, []
         worst = max(slow, key=lambda h: self._flags[h])
-        if self._flags[worst] >= self.evict_after:
-            return Action.EVICT_RESTART, slow
-        return Action.REBALANCE, slow
+        action = Action.EVICT_RESTART \
+            if self._flags[worst] >= self.evict_after else Action.REBALANCE
+        self._emit(action, slow)
+        return action, slow
 
 
 @dataclass

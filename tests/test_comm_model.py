@@ -1,0 +1,120 @@
+"""Comm-graph extraction (`core.comm_model` + `analysis.hlo`) on the
+checked-in HLO fixture: collective pricing, symmetry/weight-conservation
+invariants, and `logical_traffic_summary` parity with a hand-computed
+example."""
+
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.analysis.hlo import analyze, collective_instances
+from repro.core.comm_model import (device_comm_graph, generate_model,
+                                   logical_traffic_summary)
+from repro.core.graph import random_geometric, validate
+from repro.core.hierarchy import Hierarchy
+
+FIXTURE = Path(__file__).parent / "fixtures" / "collectives.hlo"
+N_DEV = 8
+
+# hand-priced fixture collectives (ring model, core.comm_model docstring):
+#   all-reduce  g=4, f32[16,16]=1024B, while trip count 4
+#               -> per ring link 4 * 2*(3/4)*1024 = 6144
+#   collective-permute f32[8,8]=256B, pairs (0,4),(1,5),(2,6),(3,7)
+#   all-to-all  g=4 over {0,2,4,6}, f32[4,4]=64B -> 16 per pair
+AR = 4 * 2.0 * (3 / 4) * 1024
+CP = 256.0
+A2A = 64.0 / 4
+EXPECTED = {
+    (0, 1): AR, (1, 2): AR, (2, 3): AR, (0, 3): AR,
+    (4, 5): AR, (5, 6): AR, (6, 7): AR, (4, 7): AR,
+    (0, 4): CP + A2A, (1, 5): CP, (2, 6): CP + A2A, (3, 7): CP,
+    (0, 2): A2A, (0, 6): A2A, (2, 4): A2A, (4, 6): A2A,
+}
+
+
+@pytest.fixture(scope="module")
+def hlo_text():
+    return FIXTURE.read_text()
+
+
+@pytest.fixture(scope="module")
+def comm_graph(hlo_text):
+    return device_comm_graph(hlo_text, N_DEV)
+
+
+def test_collective_instances_fixture(hlo_text):
+    got = {(op, tuple(map(tuple, groups)), nbytes, mult)
+           for op, groups, nbytes, mult in collective_instances(hlo_text)}
+    assert got == {
+        ("all-reduce", ((0, 1, 2, 3), (4, 5, 6, 7)), 1024, 4.0),
+        ("collective-permute", ((0, 4), (1, 5), (2, 6), (3, 7)), 256, 1.0),
+        ("all-to-all", ((0, 2, 4, 6),), 64, 1.0),
+    }
+    # the analyzer agrees on the loop multiplier
+    assert analyze(hlo_text, pod_size=4).trip_counts == {"w": 4}
+
+
+def test_device_comm_graph_exact_weights(comm_graph):
+    u, v, w = comm_graph.edge_list()
+    got = {(int(a), int(b)): float(c) for a, b, c in zip(u, v, w)}
+    assert got == pytest.approx(EXPECTED)
+
+
+def test_device_comm_graph_invariants(comm_graph):
+    g = comm_graph
+    validate(g)
+    # CSR symmetry: every (u, v, w) has its (v, u, w) mirror
+    fwd = {}
+    for a in range(g.n):
+        for idx in range(g.xadj[a], g.xadj[a + 1]):
+            fwd[(a, int(g.adjncy[idx]))] = float(g.adjwgt[idx])
+    assert set(fwd) == {(b, a) for a, b in fwd}
+    for (a, b), w in fwd.items():
+        assert fwd[(b, a)] == w
+    # weight conservation: undirected total equals the ring-priced sum
+    _, _, w = g.edge_list()
+    assert np.sum(w) == pytest.approx(sum(EXPECTED.values()))
+    assert np.sum(g.adjwgt) == pytest.approx(2 * sum(EXPECTED.values()))
+
+
+def test_device_comm_graph_no_collectives():
+    g = device_comm_graph("HloModule empty\n\nENTRY %main () -> f32[] {\n"
+                          "  ROOT %c = f32[] constant(0)\n}\n", 4)
+    assert g.n == 4 and g.num_edges == 0
+
+
+def test_logical_traffic_summary_hand_computed(comm_graph):
+    h = Hierarchy((2, 2, 2), (1.0, 10.0, 100.0))
+    perm = np.arange(N_DEV)
+    out = logical_traffic_summary(comm_graph, h, perm)
+    # level 1 (pairs sharing a size-2 subtree): (0,1),(2,3),(4,5),(6,7)
+    assert out["level_1_bytes"] == pytest.approx(4 * AR)
+    # level 2 (size-4 subtree, different size-2): (0,3),(1,2),(0,2),
+    # (4,7),(5,6),(4,6)
+    assert out["level_2_bytes"] == pytest.approx(4 * AR + 2 * A2A)
+    # level 3 (cross-half): the permutes plus (0,4),(2,6),(2,4),(0,6)
+    assert out["level_3_bytes"] == pytest.approx(4 * CP + 4 * A2A)
+    # levels partition every byte
+    assert sum(out.values()) == pytest.approx(sum(EXPECTED.values()))
+
+
+def test_logical_traffic_summary_tracks_permutation(comm_graph):
+    h = Hierarchy((2, 2, 2), (1.0, 10.0, 100.0))
+    # map the two all-reduce rings onto the two halves contiguously but
+    # scramble within: cross-half bytes must not change
+    perm = np.array([1, 0, 3, 2, 5, 4, 7, 6])
+    out = logical_traffic_summary(comm_graph, h, perm)
+    assert out["level_3_bytes"] == pytest.approx(4 * CP + 4 * A2A)
+    assert sum(out.values()) == pytest.approx(sum(EXPECTED.values()))
+
+
+def test_generate_model_quotient_conserves_cut_weight():
+    g = random_geometric(64, radius=0.3, seed=3)
+    model, labels = generate_model(g, k=4, seed=0)
+    assert model.n == 4 and len(labels) == 64
+    validate(model)
+    u, v, w = g.edge_list()
+    cross = labels[u] != labels[v]
+    _, _, mw = model.edge_list()
+    assert np.sum(mw) == pytest.approx(np.sum(w[cross]))

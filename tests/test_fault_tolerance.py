@@ -1,0 +1,138 @@
+"""StragglerMonitor decision logic: threshold/patience/hysteresis edges,
+escalation, and the consumer interface (callback + queue) the closed
+remapping loop subscribes to."""
+
+import pytest
+
+from repro.runtime.fault_tolerance import (Action, RestartPolicy,
+                                           StragglerMonitor,
+                                           run_with_restarts)
+
+
+def steps(n_hosts, slow=(), factor=3.0, base=1.0):
+    return {h: base * (factor if h in slow else 1.0)
+            for h in range(n_hosts)}
+
+
+def test_healthy_fleet_continues():
+    mon = StragglerMonitor(n_hosts=4)
+    for _ in range(20):
+        action, hosts = mon.record_step(steps(4))
+        assert action == Action.CONTINUE and hosts == []
+    assert mon.drain_actions() == []
+
+
+def test_straggler_needs_patience_consecutive_steps():
+    mon = StragglerMonitor(n_hosts=4, threshold=1.5, patience=3)
+    # two slow steps: flagged but below patience
+    for _ in range(2):
+        action, hosts = mon.record_step(steps(4, slow={2}))
+        assert action == Action.CONTINUE
+    action, hosts = mon.record_step(steps(4, slow={2}))
+    assert action == Action.REBALANCE and hosts == [2]
+
+
+def test_threshold_edge_is_exclusive():
+    # exactly threshold x median must NOT flag (strict >)
+    mon = StragglerMonitor(n_hosts=4, threshold=1.5, patience=1)
+    for _ in range(5):
+        action, _ = mon.record_step(steps(4, slow={1}, factor=1.5))
+        assert action == Action.CONTINUE
+    mon2 = StragglerMonitor(n_hosts=4, threshold=1.5, patience=1)
+    action, hosts = mon2.record_step(steps(4, slow={1}, factor=1.51))
+    assert action == Action.REBALANCE and hosts == [1]
+
+
+def test_flag_decay_hysteresis():
+    """Alternating slow/fast steps never accumulate to patience."""
+    mon = StragglerMonitor(n_hosts=4, threshold=1.5, patience=3)
+    for i in range(30):
+        # one slow step, then enough fast ones to drag the median back
+        slow = {3} if i % 4 == 0 else set()
+        action, _ = mon.record_step(steps(4, slow=slow, factor=10.0))
+        assert action == Action.CONTINUE
+    assert mon._flags[3] < mon.patience
+
+
+def test_escalates_to_eviction_after_evict_after():
+    mon = StragglerMonitor(n_hosts=4, threshold=1.5, patience=2,
+                           evict_after=5)
+    seen = []
+    for _ in range(10):
+        action, hosts = mon.record_step(steps(4, slow={0}))
+        seen.append(action)
+    assert Action.REBALANCE in seen
+    assert seen[-1] == Action.EVICT_RESTART
+
+
+def test_heartbeat_eviction_threshold():
+    mon = StragglerMonitor(n_hosts=2, max_missed=3)
+    assert mon.heartbeat_missed(1) == Action.CONTINUE
+    assert mon.heartbeat_missed(1) == Action.CONTINUE
+    assert mon.heartbeat_missed(1) == Action.EVICT_RESTART
+    # a successful step resets the missed count
+    mon.record_step(steps(2))
+    assert mon.hosts[1].missed_heartbeats == 0
+
+
+def test_on_action_callback_and_queue():
+    events = []
+    mon = StragglerMonitor(n_hosts=4, patience=2,
+                           on_action=lambda a, h: events.append((a, h)))
+    for _ in range(4):
+        mon.record_step(steps(4, slow={2}))
+    assert events and all(a == Action.REBALANCE and h == [2]
+                          for a, h in events)
+    # the queue saw the same decisions, and drains exactly once
+    drained = mon.drain_actions()
+    assert drained == events
+    assert mon.drain_actions() == []
+
+
+def test_callback_not_fired_on_continue():
+    events = []
+    mon = StragglerMonitor(n_hosts=4,
+                           on_action=lambda a, h: events.append(a))
+    for _ in range(10):
+        mon.record_step(steps(4))
+    assert events == []
+
+
+def test_queue_is_bounded():
+    mon = StragglerMonitor(n_hosts=4, patience=1, evict_after=10**9,
+                           queue_len=8)
+    for _ in range(50):
+        mon.record_step(steps(4, slow={1}))
+    assert len(mon.actions) <= 8
+
+
+def test_restart_policy_backoff_and_exhaustion():
+    pol = RestartPolicy(max_restarts=3, backoff_s=1.0, backoff_mult=2.0,
+                        max_backoff_s=3.0)
+    assert [pol.next_delay() for _ in range(3)] == [1.0, 2.0, 3.0]
+    assert pol.next_delay() is None
+
+
+def test_run_with_restarts_recovers():
+    calls = {"n": 0}
+
+    def train(state):
+        calls["n"] += 1
+        if calls["n"] < 3:
+            raise RuntimeError("flake")
+        return state + calls["n"]
+
+    out = run_with_restarts(train, lambda: 100,
+                            RestartPolicy(max_restarts=5, backoff_s=0.0),
+                            sleep=lambda _: None)
+    assert out == 103
+
+
+def test_run_with_restarts_exhausts():
+    def train(state):
+        raise RuntimeError("persistent")
+
+    with pytest.raises(RuntimeError):
+        run_with_restarts(train, lambda: 0,
+                          RestartPolicy(max_restarts=2, backoff_s=0.0),
+                          sleep=lambda _: None)

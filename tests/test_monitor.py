@@ -1,0 +1,424 @@
+"""Closed-loop remapping (`repro.monitor`): profiler EMA windows, drift
+hysteresis, dirty-region masking (inert pairs, zero retraces), the
+what-if replay gate, the end-to-end loop, and the fault-tolerance
+wiring."""
+
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.core import Mapper, MappingSpec
+from repro.core.graph import from_edges, grid3d
+from repro.monitor import (DriftDetector, MonitorConfig, RemapMonitor,
+                           TrafficProfiler, WhatIfReplay, dirty_pair_mask,
+                           dirty_vertices, edge_weight_l1, expand_dirty)
+from repro.runtime.fault_tolerance import Action, StragglerMonitor
+from repro.topology import make_topology
+
+FIXTURE = Path(__file__).parent / "fixtures" / "collectives.hlo"
+N = 64
+
+
+def _graph():
+    return grid3d(4, 4, 4)
+
+
+def _plan(schedule="pow2", **spec_kw):
+    spec = MappingSpec(construction="hierarchytopdown",
+                       neighborhood="communication", neighborhood_dist=10,
+                       engine="device", seed=0, **spec_kw)
+    topo = make_topology("torus", dims=[8, 8])
+    return Mapper(topo, spec).lower_for(_graph(), schedule=schedule)
+
+
+def _scaled(g, vertices, factor):
+    """Scale every edge incident to ``vertices`` by ``factor``."""
+    u, v, w = g.edge_list()
+    m = np.zeros(g.n, bool)
+    m[vertices] = True
+    return from_edges(g.n, u, v, np.where(m[u] | m[v], w * factor, w))
+
+
+# ---------------------------------------------------------------- profiler
+def test_profiler_ema_and_pruning():
+    p = TrafficProfiler(4, alpha=0.5, min_weight=1.0)
+    p.ingest_edges([0, 1], [1, 2], [8.0, 4.0])
+    p.end_window()
+    assert p.live_edges() == {(0, 1): 4.0, (1, 2): 2.0}
+    p.end_window()    # empty window decays everything by (1 - alpha)
+    assert p.live_edges() == {(0, 1): 2.0, (1, 2): 1.0}
+    p.end_window()    # (1, 2) decays to 0.5 < min_weight: pruned
+    assert p.live_edges() == {(0, 1): 1.0}
+
+
+def test_profiler_prime_is_exact():
+    g = _graph()
+    p = TrafficProfiler(g.n, alpha=0.5)
+    p.prime(g)
+    assert edge_weight_l1(g, p.live()) == 0.0
+
+
+def test_profiler_folds_directions_and_rejects_bad_edges():
+    p = TrafficProfiler(4)
+    p.ingest_edges([0, 1], [1, 0], [3.0, 5.0])
+    p.end_window()
+    assert p.live_edges() == {(0, 1): pytest.approx(0.5 * 8.0)}
+    with pytest.raises(ValueError, match="outside device range"):
+        p.ingest_edges([0], [9], [1.0])
+
+
+def test_profiler_ingests_hlo_fixture():
+    p = TrafficProfiler(8, alpha=1.0, min_weight=0.0)
+    p.ingest_hlo(FIXTURE.read_text())
+    live = p.end_window()
+    # the ring-priced all-reduce dominates: 8 links x 6144 B
+    assert live.num_edges == 16
+    assert p.live_edges()[(0, 1)] == pytest.approx(4 * 2 * (3 / 4) * 1024)
+
+
+def test_profiler_publishes_window_metrics():
+    p = TrafficProfiler(4, alpha=1.0)
+    p.ingest_edges([0], [1], [100.0])
+    p.end_window()
+    snap = p.registry.snapshot()
+    assert snap["monitor.windows"] == 1
+    assert snap["monitor.traffic.bytes"] == 100.0
+    assert snap["monitor.traffic.edges"] == 1.0
+
+
+# ------------------------------------------------------------------- drift
+def test_edge_weight_l1_hand_values():
+    a = from_edges(3, [0, 1], [1, 2], [10.0, 10.0])
+    assert edge_weight_l1(a, a) == 0.0
+    b = from_edges(3, [0, 1], [1, 2], [15.0, 10.0])
+    assert edge_weight_l1(a, b) == pytest.approx(0.25)
+    c = from_edges(3, [0], [1], [10.0])      # (1,2) vanished
+    assert edge_weight_l1(a, c) == pytest.approx(0.5)
+
+
+def test_drift_hysteresis_patience_and_rearm():
+    g = _graph()
+    perm = np.arange(g.n)
+    obj = lambda gg, p: float(gg.edge_list()[2].sum())  # noqa: E731
+    det = DriftDetector(g, perm, obj, high=0.10, low=0.05, patience=2)
+    hot = _scaled(g, range(16), 4.0)
+    # patience: first hot window scores high but does not trigger
+    assert not det.update(hot).triggered
+    s = det.update(hot)
+    assert s.triggered
+    # disarmed: staying hot cannot re-trigger
+    assert not det.update(hot).triggered
+    assert not det.update(hot).triggered
+    # one quiet window is below `low`: re-arms
+    assert not det.update(g).triggered
+    r = [det.update(hot) for _ in range(2)]
+    assert sum(x.triggered for x in r) == 1
+
+
+def test_drift_jitter_never_accumulates():
+    g = _graph()
+    u, v, w = g.edge_list()
+    rng = np.random.default_rng(0)
+    obj = lambda gg, p: float(gg.edge_list()[2].sum())  # noqa: E731
+    det = DriftDetector(g, np.arange(g.n), obj, high=0.10, low=0.05,
+                        patience=2)
+    for _ in range(50):
+        jit = from_edges(g.n, u, v,
+                         w * rng.uniform(0.98, 1.02, size=len(w)))
+        assert not det.update(jit).triggered
+
+
+def test_drift_rebaseline_resets():
+    g = _graph()
+    obj = lambda gg, p: float(gg.edge_list()[2].sum())  # noqa: E731
+    det = DriftDetector(g, np.arange(g.n), obj, high=0.1, low=0.05,
+                        patience=1)
+    hot = _scaled(g, range(16), 4.0)
+    assert det.update(hot).triggered
+    det.rebaseline(hot, np.arange(g.n))
+    s = det.update(hot)
+    assert s.score == pytest.approx(0.0) and not s.triggered
+
+
+# ------------------------------------------------------------ dirty region
+def test_dirty_vertices_and_mask():
+    base = from_edges(6, [0, 2, 4], [1, 3, 5], [10.0, 10.0, 10.0])
+    live = from_edges(6, [0, 2, 4], [1, 3, 5], [10.2, 20.0, 10.0])
+    d = dirty_vertices(base, live, rel_tol=0.05)
+    assert list(np.nonzero(d)[0]) == [2, 3]
+    pairs = np.array([[0, 1], [2, 5], [4, 5]])
+    assert list(dirty_pair_mask(pairs, d)) == [False, True, False]
+    # appear/disappear always dirty
+    gone = from_edges(6, [0, 2], [1, 3], [10.0, 10.0])
+    d2 = dirty_vertices(base, gone, rel_tol=0.5)
+    assert list(np.nonzero(d2)[0]) == [4, 5]
+
+
+def test_expand_dirty_halo():
+    g = from_edges(5, [0, 1, 2, 3], [1, 2, 3, 4], np.ones(4))
+    d = np.zeros(5, bool)
+    d[0] = True
+    assert list(np.nonzero(expand_dirty(g, d, hops=1))[0]) == [0, 1]
+    assert list(np.nonzero(expand_dirty(g, d, hops=2))[0]) == [0, 1, 2]
+    assert expand_dirty(g, d, hops=0).sum() == 1
+
+
+# ------------------------------------------------------- warm execution
+def test_execute_warm_full_mask_matches_unmasked():
+    plan = _plan()
+    g = _graph()
+    res0 = plan.execute(g)
+    live = _scaled(g, range(16), 8.0)
+    pairs = plan.candidate_pairs(g)
+    r_none = plan.execute_warm(live, res0.perm, pairs=pairs)
+    r_all = plan.execute_warm(live, res0.perm, pairs=pairs,
+                              active=np.ones(len(pairs), bool))
+    assert np.array_equal(r_none.perm, r_all.perm)
+    assert r_none.final_objective == r_all.final_objective
+    assert r_none.final_objective <= r_none.initial_objective
+
+
+def test_execute_warm_does_not_mutate_incumbent():
+    plan = _plan()
+    g = _graph()
+    res0 = plan.execute(g)
+    incumbent = res0.perm.copy()
+    plan.execute_warm(_scaled(g, range(16), 8.0), res0.perm)
+    assert np.array_equal(res0.perm, incumbent)
+
+
+def test_execute_warm_mask_freezes_untouched_vertices():
+    plan = _plan()
+    g = _graph()
+    res0 = plan.execute(g)
+    live = _scaled(g, range(8), 8.0)
+    pairs = plan.candidate_pairs(g)
+    dirty = expand_dirty(live, dirty_vertices(g, live), hops=1)
+    mask = dirty_pair_mask(pairs, dirty)
+    res = plan.execute_warm(live, res0.perm, pairs=pairs, active=mask)
+    # vertices in no active pair can never be exchanged
+    movable = np.zeros(g.n, bool)
+    movable[pairs[mask].ravel()] = True
+    frozen = ~movable
+    assert np.array_equal(res.perm[frozen], res0.perm[frozen])
+
+
+def test_execute_warm_rejects_bad_mask_shape():
+    plan = _plan()
+    g = _graph()
+    res0 = plan.execute(g)
+    with pytest.raises(ValueError, match="active mask"):
+        plan.execute_warm(g, res0.perm, active=np.ones(3, bool))
+
+
+def test_execute_warm_masking_adds_zero_traces():
+    plan = _plan()
+    g = _graph()
+    res0 = plan.execute(g)     # compiles the (K, E, P) executable
+    pairs = plan.candidate_pairs(g)
+    eng = plan.engines[0]
+    before = eng.trace_count()
+    rng = np.random.default_rng(0)
+    for factor in (2.0, 8.0, 0.5):
+        live = _scaled(g, rng.permutation(g.n)[:16], factor)
+        mask = dirty_pair_mask(pairs, dirty_vertices(g, live))
+        plan.execute_warm(live, res0.perm, pairs=pairs, active=mask)
+        plan.execute_warm(live, res0.perm, pairs=pairs)   # full refine
+    assert eng.trace_count() == before
+
+
+def test_execute_warm_host_engine_parity():
+    # host-engine fallback refines only the active pairs
+    spec = MappingSpec(construction="hierarchytopdown",
+                       neighborhood="communication", neighborhood_dist=10,
+                       engine="host", parallel_sweeps=True, seed=0)
+    topo = make_topology("torus", dims=[8, 8])
+    plan = Mapper(topo, spec).lower_for(_graph())
+    g = _graph()
+    res0 = plan.execute(g)
+    live = _scaled(g, range(16), 8.0)
+    res = plan.execute_warm(live, res0.perm)
+    assert res.final_objective <= res.initial_objective
+
+
+# ------------------------------------------------------------------ replay
+def test_replay_gate_accepts_only_above_margin():
+    topo = make_topology("torus", dims=[8, 8])
+    g = _graph()
+    rep = WhatIfReplay(topo, margin=0.02)
+    perm = np.arange(N)
+    worse = np.roll(perm, 7)
+    ji = rep._objective(g, perm)
+    jw = rep._objective(g, worse)
+    assert jw > ji
+    # candidate better than incumbent by a lot: accepted
+    v = rep.evaluate(g, worse, perm)
+    assert v.accepted and v.predicted_improvement >= 0.02
+    # candidate == incumbent: rejected (no strict objective win)
+    v2 = rep.evaluate(g, perm, perm.copy())
+    assert not v2.accepted and v2.predicted_improvement == 0.0
+    # tiny win below the margin: rejected
+    rep_wide = WhatIfReplay(topo, margin=0.99)
+    assert not rep_wide.evaluate(g, worse, perm).accepted
+
+
+def test_replay_compute_bound_program_gates_off():
+    # a compute-dominated HloCost: comm improvements cannot move the
+    # max-of-terms step time, so the gate must reject
+    from repro.analysis.hlo import HloCost
+    topo = make_topology("torus", dims=[8, 8])
+    g = _graph()
+    cost = HloCost(flops=1e18, hbm_bytes=0.0)
+    rep = WhatIfReplay(topo, margin=0.02, cost=cost)
+    perm, worse = np.arange(N), np.roll(np.arange(N), 7)
+    v = rep.evaluate(g, worse, perm)
+    assert not v.accepted and v.predicted_improvement == 0.0
+
+
+def test_replay_counters_and_prediction_consistency():
+    topo = make_topology("torus", dims=[8, 8])
+    g = _graph()
+    rep = WhatIfReplay(topo, margin=0.0)
+    perm, worse = np.arange(N), np.roll(np.arange(N), 7)
+    rep.evaluate(g, worse, perm)
+    rep.evaluate(g, perm, worse)
+    snap = rep.registry.snapshot()
+    assert snap["monitor.replay.evaluated"] == 2
+    assert snap["monitor.replay.accepted"] == 1
+    assert snap["monitor.replay.rejected"] == 1
+    t = rep.predict_step_time(g, perm)
+    assert t == pytest.approx(rep.comm_seconds(g, perm))
+
+
+# -------------------------------------------------------------- the loop
+@pytest.fixture(scope="module")
+def loop_setup():
+    plan = _plan()
+    g = _graph()
+    return plan, g
+
+
+def _monitor(plan, g, **cfg_kw):
+    kw = dict(drift_patience=2, min_weight=0.01)
+    kw.update(cfg_kw)
+    return RemapMonitor(plan, g, config=MonitorConfig(**kw), seed=0)
+
+
+def test_loop_jitter_triggers_zero_remaps(loop_setup):
+    plan, g = loop_setup
+    mon = _monitor(plan, g)
+    u, v, w = g.edge_list()
+    rng = np.random.default_rng(1)
+    for _ in range(6):
+        mon.observe_graph(from_edges(
+            g.n, u, v, w * rng.uniform(0.99, 1.01, size=len(w))))
+        r = mon.tick()
+        assert not r.triggered and not r.remapped
+    assert mon.remaps == 0
+    assert mon.registry.snapshot().get("monitor.remaps.committed", 0) == 0
+
+
+def test_loop_shift_detects_gates_and_remaps(loop_setup):
+    plan, g = loop_setup
+    mon = _monitor(plan, g)
+    incumbent0 = mon.incumbent.copy()
+    shifted = _scaled(g, range(16), 8.0)
+    reports = []
+    for _ in range(4):
+        mon.observe_graph(shifted)
+        reports.append(mon.tick())
+    remapped = [r for r in reports if r.remapped]
+    assert len(remapped) >= 1
+    r = remapped[0]
+    assert r.verdict.accepted
+    assert r.verdict.objective_candidate < r.verdict.objective_incumbent
+    assert r.retraces == 0
+    assert 0 < r.dirty <= g.n
+    assert not np.array_equal(mon.incumbent, incumbent0)
+    # the committed incumbent prices better on the live graph
+    live = mon.baseline
+    assert plan.objective(live, mon.incumbent) \
+        < plan.objective(live, incumbent0)
+
+
+def test_loop_warm_remaps_add_zero_engine_traces(loop_setup):
+    plan, g = loop_setup
+    mon = _monitor(plan, g)
+    before = sum(e.trace_count() for e in plan.engines)
+    shifted = _scaled(g, range(24), 6.0)
+    for _ in range(4):
+        mon.observe_graph(shifted)
+        mon.tick()
+    assert mon.remaps >= 1
+    assert sum(e.trace_count() for e in plan.engines) == before
+
+
+def test_loop_rebalance_action_forces_gated_attempt(loop_setup):
+    plan, g = loop_setup
+    mon = _monitor(plan, g)
+    mon.handle_action(Action.REBALANCE, [3], pes_per_host=16)
+    u, v, w = g.edge_list()
+    mon.observe_graph(from_edges(g.n, u, v, w.copy()))
+    r = mon.tick()
+    # forced: triggered without drift, evaluated through the gate
+    assert r.triggered and r.forced_by == "rebalance"
+    assert r.verdict is not None
+    # traffic did not change, so the gate must hold the incumbent
+    assert not r.remapped
+    snap = mon.registry.snapshot()
+    assert snap["monitor.action.rebalance"] == 1
+    assert snap["monitor.remaps.rolled_back"] == 1
+
+
+def test_loop_attach_straggler_monitor(loop_setup):
+    plan, g = loop_setup
+    mon = _monitor(plan, g)
+    sm = StragglerMonitor(n_hosts=4, patience=2)
+    mon.attach(sm)
+    for _ in range(3):
+        sm.record_step({h: (3.0 if h == 1 else 1.0) for h in range(4)})
+    assert mon._forced and mon._forced[0][0] == "rebalance"
+
+
+def test_loop_evict_restart_marks_all_dirty(loop_setup):
+    plan, g = loop_setup
+    mon = _monitor(plan, g)
+    mon.handle_action(Action.EVICT_RESTART, [0])
+    assert mon._forced[0][1].all()
+
+
+def test_loop_bucket_exceeded_skips_instead_of_retracing():
+    plan = _plan(schedule="tight")
+    g = _graph()
+    mon = _monitor(plan, g, drift_patience=1)
+    # densify: a clique over the first 16 vertices blows the tight bucket
+    u, v, w = g.edge_list()
+    uu, vv = np.triu_indices(16, k=1)
+    live = from_edges(g.n, np.concatenate([u, uu]),
+                      np.concatenate([v, vv]),
+                      np.concatenate([w, np.full(len(uu), 50.0)]))
+    assert not plan.bucket.admits(live)
+    mon.observe_graph(live)
+    r = mon.tick()
+    assert r.triggered and r.skipped == "bucket_exceeded"
+    assert not r.remapped
+    assert mon.registry.snapshot()["monitor.bucket_exceeded"] == 1
+
+
+def test_fleet_monitor_wires_hlo_to_loop():
+    from repro.launch.mesh import fleet_monitor
+    topo = make_topology("torus", dims=[4, 2])
+    mon, order = fleet_monitor(FIXTURE.read_text(), 8,
+                               machine_model=topo)
+    assert sorted(order) == list(range(8))
+    committed = []
+    mon.on_remap = lambda p, v: committed.append(p.copy())
+    # shift the fixture's traffic hard and tick until the gate decides
+    live = _scaled(mon.baseline, [0, 1, 2, 3], 16.0)
+    for _ in range(4):
+        mon.observe_graph(live)
+        mon.tick()
+    assert mon.ticks == 4
+    for p in committed:
+        assert sorted(p) == list(range(8))

@@ -286,6 +286,52 @@ def test_metrics_histogram_percentiles_use_recent_window():
     assert snap["p99"] == 4.0
 
 
+def test_prometheus_exposition_round_trips():
+    from repro.obs import parse_prometheus
+    m = MetricsRegistry()
+    m.counter("monitor.remaps.committed").inc(3)
+    m.gauge("monitor.drift.score").set(0.125)
+    h = m.histogram("monitor.remap_seconds")
+    for v in (0.1, 0.2, 0.3, 0.4):
+        h.observe(v)
+    text = m.to_prometheus()
+    assert "# TYPE viem_monitor_remaps_committed counter" in text
+    assert "# TYPE viem_monitor_drift_score gauge" in text
+    assert "# TYPE viem_monitor_remap_seconds summary" in text
+    back = parse_prometheus(text)
+    assert back["viem_monitor_remaps_committed"]["type"] == "counter"
+    assert back["viem_monitor_remaps_committed"]["samples"][""] == 3
+    assert back["viem_monitor_drift_score"]["samples"][""] == 0.125
+    summ = back["viem_monitor_remap_seconds"]
+    assert summ["type"] == "summary"
+    assert summ["samples"]["count"] == 4
+    assert summ["samples"]["sum"] == pytest.approx(1.0)
+    assert summ["samples"]['quantile="0.5"'] == pytest.approx(
+        m.histogram("monitor.remap_seconds").percentile(0.5))
+
+
+def test_prometheus_empty_registry_and_snapshot_parity():
+    from repro.obs import parse_prometheus
+    m = MetricsRegistry()
+    assert m.to_prometheus() == ""
+    m.counter("a.b-c").inc()
+    back = parse_prometheus(m.to_prometheus())
+    assert back == {"viem_a_b_c": {"type": "counter", "samples": {"": 1.0}}}
+
+
+def test_service_prometheus_exposes_served_counters():
+    from repro.launch.serve import MappingService
+    from repro.obs import parse_prometheus
+    kw = {"max_wait_s": 0.002}
+    with MappingService(Mapper(H64, _dev_spec()), **kw) as svc:
+        svc.map(_workload(), timeout=300)
+        text = svc.prometheus()
+    back = parse_prometheus(text)
+    assert back["viem_served"]["samples"][""] >= 1.0
+    assert back["viem_served"]["type"] == "counter"
+    assert back["viem_latency_s"]["type"] == "summary"
+
+
 # ------------------------------------------------------------------ export
 def test_chrome_trace_events_structure_and_counters(tmp_path):
     tr = Tracer(enabled=True)
