@@ -74,6 +74,11 @@ def main(argv=None):
         # drift → what-if replay → incremental remap
         from .remap_watch import main as remap_watch_main
         return remap_watch_main(argv[1:])
+    if argv and argv[0] == "lint":
+        # the invariant lint engine (repro.staticcheck): VIEM001-004
+        # AST rules + the lowered-jaxpr audit
+        from ..staticcheck.__main__ import main as lint_main
+        return lint_main(argv[1:])
     ap = argparse.ArgumentParser(prog="viem", description=__doc__)
     ap.add_argument("file", nargs="?", help="Path to file (model).")
     ap.add_argument("--list-algorithms", action="store_true",

@@ -18,6 +18,7 @@ import numpy as np
 from ..core.graph import CommGraph, DeviceGraph, device_pairs
 from ..core.local_search import SearchStats
 from ..core.objective import qap_objective
+from ..runtime.boundary import host_boundary
 
 # Gain/acceptance threshold relative to |J0|: must sit above the f32
 # noise of the device objective (~1e-7 · J0 for the edge-sum) while not
@@ -468,8 +469,9 @@ class RefinementEngine:
         value changes never retrace the compiled executables (masking,
         not retracing)."""
         import jax.numpy as jnp
-        return jnp.int32(tabu_tenure), jnp.bool_(dlb), \
-            jnp.bool_(telemetry)
+        with host_boundary("engine.toggles"):
+            return jnp.int32(tabu_tenure), jnp.bool_(dlb), \
+                jnp.bool_(telemetry)
 
     # ------------------------------------------------------------------ API
     def refine(self, g: CommGraph, perm: np.ndarray, pairs: np.ndarray,
@@ -513,15 +515,17 @@ class RefinementEngine:
             dg = self._device_graph(g)
             us, vs = self._device_pairs(pairs)
         tenure, dlb_, tel_ = self._toggles(tabu_tenure, dlb, telemetry)
-        out_perm, trace, sweeps, swaps, tel = self._refine(
-            dg.nbr, dg.wgt, dg.eu, dg.ev, dg.ew, us, vs,
-            jnp.asarray(perm, jnp.int32), self._D,
-            jnp.float32(self._eps(j0)), tenure, dlb_, tel_)
-        perm[:] = np.asarray(out_perm, dtype=perm.dtype)
-        return self._stats(g, perm, j0, np.asarray(trace), int(sweeps),
-                           int(swaps), len(pairs),
-                           telemetry=self._tel_slice(tel)
-                           if telemetry else None)
+        with host_boundary("engine.dispatch"):
+            out_perm, trace, sweeps, swaps, tel = self._refine(
+                dg.nbr, dg.wgt, dg.eu, dg.ev, dg.ew, us, vs,
+                jnp.asarray(perm, jnp.int32), self._D,
+                jnp.float32(self._eps(j0)), tenure, dlb_, tel_)
+        with host_boundary("engine.readback"):
+            perm[:] = np.asarray(out_perm, dtype=perm.dtype)
+            return self._stats(g, perm, j0, np.asarray(trace),
+                               int(sweeps), int(swaps), len(pairs),
+                               telemetry=self._tel_slice(tel)
+                               if telemetry else None)
 
     def refine_batch(self, graphs, perms, pairs_list,
                      j0s=None, bucket=None, tabu_tenure: int = 0,
@@ -558,24 +562,28 @@ class RefinementEngine:
                      for p in pairs_list]
         tenure, dlb_, tel_ = self._toggles(tabu_tenure, dlb, telemetry)
         stack = lambda xs: jnp.stack(xs)                      # noqa: E731
-        out_perm, trace, sweeps, swaps, tel = self._vrefine(
-            stack([dg.nbr for dg in dgs]), stack([dg.wgt for dg in dgs]),
-            stack([dg.eu for dg in dgs]), stack([dg.ev for dg in dgs]),
-            stack([dg.ew for dg in dgs]),
-            stack([u for u, _ in dev_pairs]),
-            stack([v for _, v in dev_pairs]),
-            stack([jnp.asarray(p, jnp.int32) for p in perms]),
-            self._D,
-            jnp.asarray([self._eps(j) for j in j0s], jnp.float32),
-            tenure, dlb_, tel_)
+        with host_boundary("engine.dispatch"):
+            out_perm, trace, sweeps, swaps, tel = self._vrefine(
+                stack([dg.nbr for dg in dgs]),
+                stack([dg.wgt for dg in dgs]),
+                stack([dg.eu for dg in dgs]),
+                stack([dg.ev for dg in dgs]),
+                stack([dg.ew for dg in dgs]),
+                stack([u for u, _ in dev_pairs]),
+                stack([v for _, v in dev_pairs]),
+                stack([jnp.asarray(p, jnp.int32) for p in perms]),
+                self._D,
+                jnp.asarray([self._eps(j) for j in j0s], jnp.float32),
+                tenure, dlb_, tel_)
         out = []
-        for i, (g, perm) in enumerate(zip(graphs, perms)):
-            perm[:] = np.asarray(out_perm[i], dtype=perm.dtype)
-            out.append(self._stats(g, perm, j0s[i], np.asarray(trace[i]),
-                                   int(sweeps[i]), int(swaps[i]),
-                                   len(pairs_list[i]),
-                                   telemetry=self._tel_slice(tel, i)
-                                   if telemetry else None))
+        with host_boundary("engine.readback"):
+            for i, (g, perm) in enumerate(zip(graphs, perms)):
+                perm[:] = np.asarray(out_perm[i], dtype=perm.dtype)
+                out.append(self._stats(
+                    g, perm, j0s[i], np.asarray(trace[i]),
+                    int(sweeps[i]), int(swaps[i]), len(pairs_list[i]),
+                    telemetry=self._tel_slice(tel, i)
+                    if telemetry else None))
         return out
 
     def refine_lanes(self, g: CommGraph, perms, pairs: np.ndarray,
@@ -612,20 +620,22 @@ class RefinementEngine:
             dg = self._device_graph(g)
             us, vs = self._device_pairs(pairs)
         tenure, dlb_, tel_ = self._toggles(tabu_tenure, dlb, telemetry)
-        out_perm, trace, sweeps, swaps, tel = self._lrefine(
-            dg.nbr, dg.wgt, dg.eu, dg.ev, dg.ew, us, vs,
-            jnp.stack([jnp.asarray(p, jnp.int32) for p in perms]),
-            self._D,
-            jnp.asarray([self._eps(j) for j in j0s], jnp.float32),
-            tenure, dlb_, tel_)
+        with host_boundary("engine.dispatch"):
+            out_perm, trace, sweeps, swaps, tel = self._lrefine(
+                dg.nbr, dg.wgt, dg.eu, dg.ev, dg.ew, us, vs,
+                jnp.stack([jnp.asarray(p, jnp.int32) for p in perms]),
+                self._D,
+                jnp.asarray([self._eps(j) for j in j0s], jnp.float32),
+                tenure, dlb_, tel_)
         out = []
-        for i, perm in enumerate(perms):
-            perm[:] = np.asarray(out_perm[i], dtype=perm.dtype)
-            out.append(self._stats(g, perm, j0s[i], np.asarray(trace[i]),
-                                   int(sweeps[i]), int(swaps[i]),
-                                   len(pairs),
-                                   telemetry=self._tel_slice(tel, i)
-                                   if telemetry else None))
+        with host_boundary("engine.readback"):
+            for i, perm in enumerate(perms):
+                perm[:] = np.asarray(out_perm[i], dtype=perm.dtype)
+                out.append(self._stats(
+                    g, perm, j0s[i], np.asarray(trace[i]),
+                    int(sweeps[i]), int(swaps[i]), len(pairs),
+                    telemetry=self._tel_slice(tel, i)
+                    if telemetry else None))
         return out
 
 

@@ -12,6 +12,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import ref
+from ..runtime.boundary import host_boundary
 from .qap_objective import qap_objective_edges
 from .swap_gain import swap_gain_matrix
 
@@ -52,18 +53,21 @@ def objective(graph, hierarchy, perm,
     perm = np.asarray(perm)
     pu = jnp.asarray(perm[u], jnp.int32)
     pv = jnp.asarray(perm[v], jnp.int32)
-    return float(qap_objective_edges(
-        pu, pv, jnp.asarray(w, jnp.float32),
-        strides=tuple(int(s) for s in hierarchy.strides),
-        dists=tuple(float(d) for d in hierarchy.distances),
-        interpret=interpret))
+    with host_boundary("objective.readback"):
+        return float(qap_objective_edges(
+            pu, pv, jnp.asarray(w, jnp.float32),
+            strides=tuple(int(s) for s in hierarchy.strides),
+            dists=tuple(float(d) for d in hierarchy.distances),
+            interpret=interpret))
 
 
 def objective_ref(graph, hierarchy, perm) -> float:
     u, v, w = graph.edge_list()
     perm = np.asarray(perm)
-    return float(ref.qap_objective_edges_ref(
-        jnp.asarray(perm[u], jnp.int32), jnp.asarray(perm[v], jnp.int32),
-        jnp.asarray(w, jnp.float32),
-        tuple(int(s) for s in hierarchy.strides),
-        tuple(float(d) for d in hierarchy.distances)))
+    with host_boundary("objective.readback"):
+        return float(ref.qap_objective_edges_ref(
+            jnp.asarray(perm[u], jnp.int32),
+            jnp.asarray(perm[v], jnp.int32),
+            jnp.asarray(w, jnp.float32),
+            tuple(int(s) for s in hierarchy.strides),
+            tuple(float(d) for d in hierarchy.distances)))

@@ -18,6 +18,7 @@ Usage (local smoke):
 from __future__ import annotations
 
 import argparse
+import functools
 import itertools
 import queue
 import threading
@@ -35,6 +36,19 @@ from ..train.steps import serve_step
 _TR = get_tracer()
 
 
+@functools.lru_cache(maxsize=8)
+def _compiled_prefill(cfg, max_len: int):
+    # one jitted prefill per (cfg, max_len): repeated serve() calls hit
+    # the compiled artifact instead of retracing a fresh lambda
+    return jax.jit(functools.partial(prefill_with_cache, cfg=cfg,
+                                     max_len=max_len))
+
+
+@functools.lru_cache(maxsize=8)
+def _compiled_serve_step(cfg):
+    return jax.jit(functools.partial(serve_step, cfg=cfg))
+
+
 def serve(arch: str, batch: int, prompt_len: int, gen: int,
           smoke: bool = False, seed: int = 0) -> dict:
     cfg = get_smoke_config(arch) if smoke else get_config(arch)
@@ -45,12 +59,11 @@ def serve(arch: str, batch: int, prompt_len: int, gen: int,
                                  cfg.vocab_size)
 
     t0 = time.time()
-    logits, caches = jax.jit(
-        lambda p, t: prefill_with_cache(p, t, cfg, max_len))(params, prompts)
+    logits, caches = _compiled_prefill(cfg, max_len)(params, prompts)
     next_tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
     t_prefill = time.time() - t0
 
-    step_fn = jax.jit(lambda p, t, c, s: serve_step(p, t, c, s, cfg))
+    step_fn = _compiled_serve_step(cfg)
     generated = [next_tok]
     t0 = time.time()
     for i in range(gen - 1):

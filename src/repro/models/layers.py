@@ -6,12 +6,19 @@ import jax
 import jax.numpy as jnp
 
 
+def bcast_right(a, ndim: int):
+    """Right-align ``a`` against an ``ndim``-rank operand by prepending
+    unit axes — the explicit form of numpy rank promotion, legal under
+    ``jax_numpy_rank_promotion='raise'``."""
+    return a.reshape((1,) * (ndim - a.ndim) + a.shape)
+
+
 def rms_norm(x, scale, eps: float = 1e-6):
     dt = x.dtype
     x = x.astype(jnp.float32)
     var = jnp.mean(x * x, axis=-1, keepdims=True)
-    return ((x * jax.lax.rsqrt(var + eps)) * scale.astype(jnp.float32)
-            ).astype(dt)
+    scale = bcast_right(scale.astype(jnp.float32), x.ndim)
+    return ((x * jax.lax.rsqrt(var + eps)) * scale).astype(dt)
 
 
 def init_mlp(key, d_model: int, d_ff: int, mlp_type: str, dtype):
@@ -45,9 +52,10 @@ def apply_rope(x, positions, theta: float):
     """x: (..., T, H, hd); positions: broadcastable to (..., T)."""
     hd = x.shape[-1]
     freqs = rope_freqs(hd, theta)                       # (hd/2,)
-    ang = positions[..., None].astype(jnp.float32) * freqs   # (..., T, hd/2)
-    cos = jnp.cos(ang)[..., None, :]                    # (..., T, 1, hd/2)
-    sin = jnp.sin(ang)[..., None, :]
+    ang = positions[..., None].astype(jnp.float32) \
+        * bcast_right(freqs, positions.ndim + 1)        # (..., T, hd/2)
+    cos = bcast_right(jnp.cos(ang)[..., None, :], x.ndim)
+    sin = bcast_right(jnp.sin(ang)[..., None, :], x.ndim)
     x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
     out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
     return out.astype(x.dtype)

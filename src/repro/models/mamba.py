@@ -15,6 +15,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from .layers import bcast_right
+
 
 def init_mamba(key, cfg):
     d, di = cfg.d_model, cfg.d_inner
@@ -50,10 +52,11 @@ def _causal_conv(x, w, b, state=None):
     t = x.shape[1]
     out = jnp.zeros_like(x, dtype=jnp.float32)
     for i in range(dc):
-        out = out + x_ext[:, i:i + t].astype(jnp.float32) * w[i].astype(
-            jnp.float32)
+        out = out + x_ext[:, i:i + t].astype(jnp.float32) \
+            * bcast_right(w[i].astype(jnp.float32), 3)
     new_state = x_ext[:, -(dc - 1):] if dc > 1 else None
-    return (out + b.astype(jnp.float32)).astype(x.dtype), new_state
+    return (out + bcast_right(b.astype(jnp.float32), 3)).astype(
+        x.dtype), new_state
 
 
 def _ssm_params(params, xc, cfg):
@@ -63,9 +66,9 @@ def _ssm_params(params, xc, cfg):
     dt_r, b_mat, c_mat = jnp.split(proj, [dr, dr + ds], axis=-1)
     delta = jax.nn.softplus(
         (dt_r @ params["w_dt"]).astype(jnp.float32)
-        + params["b_dt"].astype(jnp.float32))        # (B,T,di)
+        + bcast_right(params["b_dt"].astype(jnp.float32), 3))  # (B,T,di)
     a = -jnp.exp(params["a_log"])                    # (di, ds)
-    abar = jnp.exp(delta[..., None] * a)             # (B,T,di,ds)
+    abar = jnp.exp(delta[..., None] * bcast_right(a, 4))  # (B,T,di,ds)
     bx = (delta[..., None] * b_mat[:, :, None, :].astype(jnp.float32)
           * xc[..., None].astype(jnp.float32))       # (B,T,di,ds)
     return abar, bx, c_mat.astype(jnp.float32)
@@ -112,7 +115,7 @@ def mamba_block(params, x, cfg):
     xc = jax.nn.silu(xc)
     h0 = jnp.zeros((b, di, ds), jnp.float32)
     y, _ = _chunked_ssm(params, xc, cfg, h0)
-    y = y + params["d_skip"] * xc.astype(jnp.float32)
+    y = y + bcast_right(params["d_skip"], 3) * xc.astype(jnp.float32)
     y = (y.astype(x.dtype)) * jax.nn.silu(z)
     return y @ params["w_out"]
 
@@ -136,7 +139,7 @@ def decode_mamba_block(params, x, cache, cfg):
     abar, bx, c_mat = _ssm_params(params, xc, cfg)     # T = 1
     h = abar[:, 0] * cache["ssm"] + bx[:, 0]           # (B, di, ds)
     y = jnp.einsum("bds,bs->bd", h, c_mat[:, 0])[:, None]
-    y = y + params["d_skip"] * xc.astype(jnp.float32)
+    y = y + bcast_right(params["d_skip"], 3) * xc.astype(jnp.float32)
     y = y.astype(x.dtype) * jax.nn.silu(z)
     out = y @ params["w_out"]
     return out, {"conv": conv_state, "ssm": h}

@@ -27,6 +27,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from .layers import bcast_right
+
 
 def ep_split(cfg, n_data: int) -> int:
     """Virtual-expert split factor: E·s == data axis when possible."""
@@ -64,7 +66,7 @@ def _route_row(x, router, e: int, k: int, cap: int, split: int):
     topw = topw / jnp.maximum(topw.sum(-1, keepdims=True), 1e-9)
     # expand to virtual experts: assignment (token, e) → s × (token, e·s+j)
     flat_e = (topi[..., None] * split
-              + jnp.arange(split)).reshape(-1)         # (T·k·s,)
+              + bcast_right(jnp.arange(split), 3)).reshape(-1)  # (T·k·s,)
     flat_w = jnp.repeat(topw.reshape(-1), split)
     flat_t = jnp.repeat(jnp.arange(t), k * split)
     order = jnp.argsort(flat_e, stable=True)

@@ -18,6 +18,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from .layers import bcast_right
+
 LOG_W_MIN = -5.0        # decay floor: w ≥ e^-5 ≈ 0.007 — bounds the
 LOG_W_MAX = -1e-4       # factored-chunk exponents to e^{|min|·c/2} ≤ e^80
 
@@ -69,18 +71,19 @@ def _group_norm(y, gamma, beta, eps=1e-5):
     yn = (yf - mu) * jax.lax.rsqrt(var + eps)
     b_, t, h, hd = y.shape
     yn = yn.reshape(b_, t, h * hd)
-    return yn * gamma.astype(jnp.float32) + beta.astype(jnp.float32)
+    return (yn * bcast_right(gamma.astype(jnp.float32), yn.ndim)
+            + bcast_right(beta.astype(jnp.float32), yn.ndim))
 
 
 def _rkvgw(params, x, xx, cfg):
     def mix(mu):
-        return x + (xx - x) * mu
+        return x + (xx - x) * bcast_right(mu, x.ndim)
     hd = cfg.rwkv_head_size
     r = _heads(mix(params["mu_r"]) @ params["wr"], hd)
     k = _heads(mix(params["mu_k"]) @ params["wk"], hd)
     v = _heads(mix(params["mu_v"]) @ params["wv"], hd)
     g = jax.nn.silu(mix(params["mu_g"]) @ params["wg"])
-    w_pre = (params["w0"]
+    w_pre = (bcast_right(params["w0"], x.ndim)
              + (jnp.tanh(mix(params["mu_w"]) @ params["w_lora_a"])
                 @ params["w_lora_b"]).astype(jnp.float32))
     log_w = jnp.clip(-jnp.exp(w_pre), LOG_W_MIN, LOG_W_MAX)
@@ -178,8 +181,8 @@ def init_rwkv_channel_mix(key, cfg):
 
 def rwkv_channel_mix(params, x, shift_state=None):
     xx = _shift(x, shift_state)
-    xk = x + (xx - x) * params["mu_k"]
-    xr = x + (xx - x) * params["mu_r"]
+    xk = x + (xx - x) * bcast_right(params["mu_k"], x.ndim)
+    xr = x + (xx - x) * bcast_right(params["mu_r"], x.ndim)
     kk = jnp.square(jax.nn.relu(xk @ params["wk"]))
     return jax.nn.sigmoid(xr @ params["wr"]) * (kk @ params["wv"]), x[:, -1]
 

@@ -19,8 +19,8 @@ import jax.numpy as jnp
 
 from .attention import (attention_block, decode_attention_block,
                         init_attention, init_kv_cache, _qkv)
-from .layers import (embed_tokens, init_embeddings, init_mlp, lm_logits,
-                     mlp, rms_norm)
+from .layers import (bcast_right, embed_tokens, init_embeddings, init_mlp,
+                     lm_logits, mlp, rms_norm)
 from .mamba import (decode_mamba_block, init_mamba, init_mamba_cache,
                     mamba_block)
 from .moe import init_moe, moe_ffn
@@ -261,7 +261,8 @@ def prefill_with_cache(params, tokens, cfg, max_len: int):
                 h0 = jnp.zeros((b, cfg.d_inner, cfg.mamba_d_state),
                                jnp.float32)
                 y, h_f = _chunked_ssm(p["mixer"], xc, cfg, h0)
-                y = y + p["mixer"]["d_skip"] * xc.astype(jnp.float32)
+                y = y + bcast_right(p["mixer"]["d_skip"], 3) \
+                    * xc.astype(jnp.float32)
                 y = y.astype(x.dtype) * jax.nn.silu(z)
                 nc["mamba"] = {"conv": conv_state, "ssm": h_f}
                 h = h + y @ p["mixer"]["w_out"]

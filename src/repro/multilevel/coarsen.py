@@ -18,6 +18,7 @@ import numpy as np
 
 from ..core.graph import CommGraph, from_edges
 from ..kernels.contract import MAX_N
+from ..runtime.boundary import host_boundary
 from ..topology.base import Topology
 
 
@@ -65,17 +66,18 @@ def coarsen_graph(g: CommGraph) -> tuple[CommGraph, np.ndarray, np.ndarray]:
     eu, ev, ew = pad_edge_arrays(u, v, w)
     labels, ceu, cev, cew, cvw = _coarsen_jit()(
         eu, ev, ew, jnp.asarray(g.vwgt.astype(np.float32)))
-    labels = np.asarray(labels, dtype=np.int64)
-    nc = n // 2
-    # stable sort by label: each label appears exactly twice, members in
-    # ascending fine-vertex order
-    members = np.argsort(labels, kind="stable")
-    fine_u, fine_v = members[0::2].copy(), members[1::2].copy()
-    cew = np.asarray(cew, dtype=np.float64)
-    live = cew > 0
-    coarse = from_edges(nc, np.asarray(ceu, np.int64)[live],
-                        np.asarray(cev, np.int64)[live], cew[live],
-                        vwgt=np.asarray(cvw, np.float64)[:nc])
+    with host_boundary("coarsen.rebuild"):
+        labels = np.asarray(labels, dtype=np.int64)
+        nc = n // 2
+        # stable sort by label: each label appears exactly twice,
+        # members in ascending fine-vertex order
+        members = np.argsort(labels, kind="stable")
+        fine_u, fine_v = members[0::2].copy(), members[1::2].copy()
+        cew = np.asarray(cew, dtype=np.float64)
+        live = cew > 0
+        coarse = from_edges(nc, np.asarray(ceu, np.int64)[live],
+                            np.asarray(cev, np.int64)[live], cew[live],
+                            vwgt=np.asarray(cvw, np.float64)[:nc])
     return coarse, fine_u, fine_v
 
 

@@ -40,10 +40,12 @@ class Counter:
             self.value += n
 
     def snapshot(self):
-        return self.value
+        with self._lock:
+            return self.value
 
     def reset(self) -> None:
-        self.value = 0
+        with self._lock:
+            self.value = 0
 
 
 class Gauge:
@@ -63,10 +65,12 @@ class Gauge:
                 self.value = v
 
     def snapshot(self):
-        return self.value
+        with self._lock:
+            return self.value
 
     def reset(self) -> None:
-        self.value = 0.0
+        with self._lock:
+            self.value = 0.0
 
 
 class Histogram:
@@ -79,11 +83,13 @@ class Histogram:
         self.reset()
 
     def reset(self) -> None:
-        self.count = 0
-        self.total = 0.0
-        self.min = None
-        self.max = None
-        self._recent: deque = deque(maxlen=self.window)
+        # RLock: re-enters cleanly from __init__ and registry holders
+        with self._lock:
+            self.count = 0
+            self.total = 0.0
+            self.min = None
+            self.max = None
+            self._recent: deque = deque(maxlen=self.window)
 
     def observe(self, v: float) -> None:
         with self._lock:
@@ -101,14 +107,19 @@ class Histogram:
         return lat[min(len(lat) - 1, int(q * len(lat)))]
 
     def snapshot(self) -> dict:
-        return {
-            "count": self.count, "sum": self.total,
-            "min": 0.0 if self.min is None else self.min,
-            "max": 0.0 if self.max is None else self.max,
-            "mean": self.total / self.count if self.count else 0.0,
-            "p50": self._pct_locked(0.50), "p99": self._pct_locked(0.99),
-            "window": len(self._recent),
-        }
+        # one lock scope: count/sum/min/max and the percentile window
+        # come from the same instant (and sorted(_recent) must not race
+        # a concurrent observe() append)
+        with self._lock:
+            return {
+                "count": self.count, "sum": self.total,
+                "min": 0.0 if self.min is None else self.min,
+                "max": 0.0 if self.max is None else self.max,
+                "mean": self.total / self.count if self.count else 0.0,
+                "p50": self._pct_locked(0.50),
+                "p99": self._pct_locked(0.99),
+                "window": len(self._recent),
+            }
 
     def _pct_locked(self, q: float) -> float:
         # callers already hold the registry lock (snapshot path)

@@ -73,10 +73,13 @@ class Tracer:
     # ------------------------------------------------------------ control
     def enable(self, capacity: int | None = None) -> "Tracer":
         """Start recording (optionally resizing the ring buffer)."""
-        if capacity is not None and int(capacity) != self.capacity:
+        if capacity is not None:
+            # compare-and-resize under one lock scope: the bare-read
+            # check raced a concurrent enable() resizing the buffer
             with self._lock:
-                self.capacity = int(capacity)
-                self._buf = deque(self._buf, maxlen=self.capacity)
+                if int(capacity) != self.capacity:
+                    self.capacity = int(capacity)
+                    self._buf = deque(self._buf, maxlen=self.capacity)
         self.enabled = True
         return self
 

@@ -27,6 +27,7 @@ import numpy as np
 from ..core.graph import CommGraph
 from ..core.local_search import SearchStats
 from ..engine.sweep import RefinementEngine, _make_refine
+from ..runtime.boundary import host_boundary
 
 
 def _make_rounds(kind: str, params: tuple, max_sweeps: int, lanes: int,
@@ -231,18 +232,24 @@ class PortfolioRunner:
             dg = eng._device_graph(g)
             us, vs = eng._device_pairs(pairs)
         tenure, dlb_, _ = eng._toggles(self.tabu_tenure, self.dlb)
-        inc_perm, _, round_js, rounds_done, sweeps, swaps = self._rounds()(
-            dg.nbr, dg.wgt, dg.eu, dg.ev, dg.ew, us, vs,
-            jnp.stack([jnp.asarray(p, jnp.int32) for p in perms]),
-            eng._D,
-            jnp.asarray([eng._eps(j) for j in j0s], jnp.float32),
-            tenure, dlb_, jax.random.PRNGKey(seed))
-        rounds_done = int(rounds_done)
-        return RoundsResult(
-            perm=np.asarray(inc_perm, dtype=np.int64),
-            round_objectives=[float(x)
-                              for x in np.asarray(round_js)[:rounds_done]],
-            rounds=rounds_done, sweeps=int(sweeps), swaps=int(swaps))
+        with host_boundary("portfolio.dispatch"):
+            inc_perm, _, round_js, rounds_done, sweeps, swaps = \
+                self._rounds()(
+                    dg.nbr, dg.wgt, dg.eu, dg.ev, dg.ew, us, vs,
+                    jnp.stack([jnp.asarray(p, jnp.int32)
+                               for p in perms]),
+                    eng._D,
+                    jnp.asarray([eng._eps(j) for j in j0s], jnp.float32),
+                    tenure, dlb_, jax.random.PRNGKey(seed))
+        with host_boundary("portfolio.readback"):
+            rounds_done = int(rounds_done)
+            return RoundsResult(
+                perm=np.asarray(inc_perm, dtype=np.int64),
+                round_objectives=[
+                    float(x)
+                    for x in np.asarray(round_js)[:rounds_done]],
+                rounds=rounds_done, sweeps=int(sweeps),
+                swaps=int(swaps))
 
 
 def qap_objective_of(engine: RefinementEngine, g: CommGraph,

@@ -1,0 +1,34 @@
+"""Invariant lint engine for the repro tree (`viem lint`).
+
+Three load-bearing disciplines hold this codebase together — zero-retrace
+warm paths, padding-inert fixed-shape execution, and lock-guarded threaded
+serving/monitoring — and every one of them is invisible to a generic
+linter.  This package encodes them as repo-specific checks:
+
+- an AST rule engine (:mod:`repro.staticcheck.rules`) with four rules:
+  VIEM001 host-sync hazards in device modules, VIEM002 retrace hazards
+  (per-call ``jax.jit`` over Python-scalar closures), VIEM003 Python
+  control flow on traced values, VIEM004 lock discipline on threaded
+  classes;
+- a jaxpr audit (:mod:`repro.staticcheck.jaxpr_audit`) that lowers every
+  registered construction x topology through ``Mapper.lower`` and walks
+  the engine jaxprs for forbidden callback primitives, host transfers and
+  accumulator-dtype drift;
+- a CLI (``python -m repro.staticcheck`` / ``viem lint``) emitting human
+  and JSON reports, with ``# viem: noqa[VIEMxxx]`` inline suppressions
+  and a checked-in baseline file.
+"""
+
+from .engine import LintConfig, lint_paths, load_baseline
+from .rules import Finding, analyze_source
+from .report import render_human, render_json
+
+__all__ = [
+    "Finding",
+    "LintConfig",
+    "analyze_source",
+    "lint_paths",
+    "load_baseline",
+    "render_human",
+    "render_json",
+]

@@ -1,0 +1,773 @@
+"""AST rules encoding the repo's execution-discipline invariants.
+
+Every rule works on a plain ``ast`` parse of one module — no imports are
+executed — plus a small amount of repo knowledge (which packages are
+device-resident, which modules are threaded).  The analyses are
+deliberately conservative: a rule only fires where the hazard is
+structural (a ``np.*`` call inside a function that is demonstrably
+traced, an attribute written under ``self._lock`` in one method and
+read bare in another), so a finding is actionable rather than noise.
+
+Rules
+-----
+VIEM001   host-sync hazard in a device module: ``.item()``, ``float()``/
+          ``int()``/``bool()`` on device values, ``np.*`` on device
+          values, host timing (``time.perf_counter``) — each one a
+          silent device->host sync on the hot path.
+VIEM002   retrace hazard: ``jax.jit``/``jax.vmap`` called inside a
+          per-call function over a callable that closes over that
+          function's locals.  Every call traces afresh; the codebase
+          convention is a builder that jits once, with runtime knobs
+          passed as ``jnp.int32``/``jnp.bool_`` operands (see the
+          tabu/telemetry toggles in ``engine/sweep.py``).
+VIEM003   Python ``if``/``while`` on a traced expression: inside a
+          traced function the parameters ARE tracers, so branching on
+          them (or anything computed from them, or any ``jnp``/``lax``
+          result in a device module) either fails under jit or forces a
+          concretization sync.
+VIEM004   lock discipline: an attribute of a threaded class written
+          under ``with self._lock`` in one method and accessed bare in
+          another is a data race waiting for a free-threaded build.
+"""
+
+from __future__ import annotations
+
+import ast
+from dataclasses import dataclass, field
+
+# packages whose modules run on (or trace onto) the accelerator
+DEVICE_PACKAGES = ("engine", "kernels", "multilevel", "portfolio")
+
+# modules whose classes serve concurrent threads; VIEM004 scope
+LOCK_MODULES = (
+    "launch/serve.py",
+    "obs/metrics.py",
+    "obs/trace.py",
+    "monitor/",
+    "runtime/fault_tolerance.py",
+    "core/mapping.py",
+)
+
+# dotted call prefixes whose results live on device
+_DEVICE_PREFIXES = (
+    "jax.numpy.",
+    "jax.lax.",
+    "jax.random.",
+    "jax.nn.",
+    "jax.scipy.",
+)
+
+# dotted name -> positional argument indices holding traced callables
+_TRACING_WRAPPERS: dict[str, tuple[int, ...] | str] = {
+    "jax.jit": (0,),
+    "jax.vmap": (0,),
+    "jax.pmap": (0,),
+    "jax.grad": (0,),
+    "jax.value_and_grad": (0,),
+    "jax.checkpoint": (0,),
+    "jax.remat": (0,),
+    "jax.lax.while_loop": (0, 1),
+    "jax.lax.fori_loop": (2,),
+    "jax.lax.scan": (0,),
+    "jax.lax.map": (0,),
+    "jax.lax.cond": (1, 2),
+    "jax.lax.switch": "rest",          # every arg from 1 on is a branch
+    "jax.experimental.pallas.pallas_call": (0,),
+}
+
+# function-name fragments that mark a scope as a build-once site: jitting
+# there is the convention, not a hazard (VIEM002 exemption)
+_BUILDER_FRAGMENTS = ("build", "make", "lower", "factory", "compile")
+_BUILDER_EXACT = {"__init__", "__post_init__", "__call__"}
+
+_HOST_TIMING = {
+    "time.perf_counter", "time.perf_counter_ns", "time.time",
+    "time.monotonic", "time.process_time",
+}
+
+_LOCK_FACTORIES = {"threading.Lock", "threading.RLock", "threading.Condition"}
+
+
+@dataclass
+class Finding:
+    rule: str
+    path: str            # repo-relative, forward slashes
+    line: int
+    col: int
+    message: str
+    snippet: str = ""
+    suppressed: bool = False
+    justification: str = ""
+
+    def fingerprint(self) -> str:
+        # line numbers churn; the (rule, path, snippet) triple is stable
+        # across unrelated edits, which is what a baseline needs
+        return f"{self.rule}:{self.path}:{self.snippet.strip()}"
+
+    def to_dict(self) -> dict:
+        return {
+            "rule": self.rule,
+            "path": self.path,
+            "line": self.line,
+            "col": self.col,
+            "message": self.message,
+            "snippet": self.snippet,
+            "suppressed": self.suppressed,
+            "justification": self.justification,
+        }
+
+
+def _dotted(node: ast.AST, aliases: dict[str, str]) -> str | None:
+    """Resolve an attribute chain to a dotted name, expanding import
+    aliases at the root (``jnp.where`` -> ``jax.numpy.where``)."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if not isinstance(node, ast.Name):
+        return None
+    root = aliases.get(node.id, node.id)
+    parts.append(root)
+    return ".".join(reversed(parts))
+
+
+def _collect_aliases(tree: ast.Module) -> dict[str, str]:
+    aliases: dict[str, str] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                aliases[a.asname or a.name.split(".")[0]] = (
+                    a.name if a.asname else a.name.split(".")[0])
+        elif isinstance(node, ast.ImportFrom) and node.module \
+                and node.level == 0:
+            for a in node.names:
+                aliases[a.asname or a.name] = f"{node.module}.{a.name}"
+    return aliases
+
+
+_FUNC_NODES = (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)
+
+
+class _ModuleIndex:
+    """Parent links, per-scope function tables, and the traced-scope
+    fixpoint shared by VIEM001/002/003."""
+
+    def __init__(self, tree: ast.Module, aliases: dict[str, str]):
+        self.tree = tree
+        self.aliases = aliases
+        self.parent: dict[ast.AST, ast.AST] = {}
+        for node in ast.walk(tree):
+            for child in ast.iter_child_nodes(node):
+                self.parent[child] = node
+        # scope -> {name: FunctionDef} for defs immediately inside it
+        self.defs_in_scope: dict[ast.AST, dict[str, ast.AST]] = {}
+        for node in ast.walk(tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                scope = self.enclosing_scope(node)
+                self.defs_in_scope.setdefault(scope, {})[node.name] = node
+        self.traced: set[ast.AST] = set()
+        # fn node -> param names known static (static_argnames/argnums,
+        # functools.partial keyword bindings)
+        self.static_params: dict[ast.AST, set[str]] = {}
+        self._mark_traced()
+
+    def enclosing_scope(self, node: ast.AST) -> ast.AST:
+        """Nearest enclosing function/lambda, else the module."""
+        cur = self.parent.get(node)
+        while cur is not None and not isinstance(cur, _FUNC_NODES):
+            cur = self.parent.get(cur)
+        return cur if cur is not None else self.tree
+
+    def enclosing_function(self, node: ast.AST):
+        scope = self.enclosing_scope(node)
+        return None if isinstance(scope, ast.Module) else scope
+
+    def lookup_def(self, name: str, from_node: ast.AST):
+        """Resolve a bare name to a FunctionDef visible from a node."""
+        scope = self.enclosing_scope(from_node)
+        while True:
+            found = self.defs_in_scope.get(scope, {}).get(name)
+            if found is not None:
+                return found
+            if isinstance(scope, ast.Module):
+                return None
+            scope = self.enclosing_scope(scope)
+
+    def _callable_args(self, call: ast.Call) -> list[ast.AST]:
+        name = _dotted(call.func, self.aliases)
+        spec = None
+        if name is not None:
+            spec = _TRACING_WRAPPERS.get(name)
+            if spec is None and name.endswith(".pallas_call"):
+                spec = (0,)
+        if spec is None:
+            return []
+        if spec == "rest":
+            return list(call.args[1:])
+        return [call.args[i] for i in spec if i < len(call.args)]
+
+    def _as_traced_target(self, node: ast.AST):
+        if isinstance(node, ast.Lambda):
+            return node
+        if isinstance(node, ast.Name):
+            return self.lookup_def(node.id, node)
+        if isinstance(node, ast.Call):
+            # functools.partial(fn, ...): keyword bindings are
+            # trace-time constants, not runtime operands
+            fname = _dotted(node.func, self.aliases)
+            if fname in ("functools.partial", "partial") and node.args:
+                tgt = self._as_traced_target(node.args[0])
+                if tgt is not None:
+                    self.static_params.setdefault(tgt, set()).update(
+                        kw.arg for kw in node.keywords if kw.arg)
+                return tgt
+        return None
+
+    @staticmethod
+    def _static_arg_names(call: ast.Call, fn: ast.AST) -> set[str]:
+        """Param names pinned static by a jit call's static_argnames/
+        static_argnums keywords."""
+        names: set[str] = set()
+        params = []
+        if isinstance(fn, _FUNC_NODES):
+            a = fn.args
+            params = [p.arg for p in a.posonlyargs + a.args]
+        for kw in call.keywords:
+            val = kw.value
+            items = val.elts if isinstance(val, (ast.Tuple, ast.List)) \
+                else [val]
+            if kw.arg == "static_argnames":
+                names |= {i.value for i in items
+                          if isinstance(i, ast.Constant)
+                          and isinstance(i.value, str)}
+            elif kw.arg == "static_argnums":
+                for i in items:
+                    if isinstance(i, ast.Constant) \
+                            and isinstance(i.value, int) \
+                            and i.value < len(params):
+                        names.add(params[i.value])
+        return names
+
+    def _mark_traced(self):
+        roots: set[ast.AST] = set()
+        for node in ast.walk(self.tree):
+            if isinstance(node, ast.Call):
+                for arg in self._callable_args(node):
+                    tgt = self._as_traced_target(arg)
+                    if tgt is not None:
+                        roots.add(tgt)
+                        self.static_params.setdefault(tgt, set()).update(
+                            self._static_arg_names(node, tgt))
+            elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                for dec in node.decorator_list:
+                    dname = _dotted(dec, self.aliases)
+                    if dname in ("jax.jit", "jit"):
+                        roots.add(node)
+                    elif isinstance(dec, ast.Call):
+                        cname = _dotted(dec.func, self.aliases)
+                        if cname in ("jax.jit", "jit"):
+                            roots.add(node)
+                        elif cname in ("functools.partial", "partial") \
+                                and dec.args:
+                            inner = _dotted(dec.args[0], self.aliases)
+                            if inner in ("jax.jit", "jit"):
+                                roots.add(node)
+        traced = set(roots)
+        # fixpoint: defs nested in traced scopes are traced; defs called
+        # by bare name from a traced body are traced
+        changed = True
+        while changed:
+            changed = False
+            for fn in list(traced):
+                for node in ast.walk(fn):
+                    if node is fn:
+                        continue
+                    if isinstance(node, _FUNC_NODES) \
+                            and node not in traced:
+                        traced.add(node)
+                        changed = True
+                    if isinstance(node, ast.Call) \
+                            and isinstance(node.func, ast.Name):
+                        tgt = self.lookup_def(node.func.id, node)
+                        if tgt is not None and tgt not in traced:
+                            traced.add(tgt)
+                            changed = True
+        self.traced = traced
+
+    def in_traced_scope(self, node: ast.AST) -> bool:
+        cur: ast.AST | None = node
+        while cur is not None:
+            if cur in self.traced:
+                return True
+            cur = self.parent.get(cur)
+        return False
+
+
+def _is_device_call(node: ast.AST, aliases: dict[str, str]) -> bool:
+    if not isinstance(node, ast.Call):
+        return False
+    name = _dotted(node.func, aliases)
+    return name is not None and name.startswith(_DEVICE_PREFIXES)
+
+
+# attribute reads that yield static Python values even on tracers
+_STATIC_ATTRS = {"shape", "ndim", "dtype", "size", "sharding",
+                 "weak_type", "aval"}
+
+
+def _walk_value(node: ast.AST):
+    """ast.walk, but stop at attribute reads that are static under trace
+    (``x.shape`` of a tracer is a Python tuple, not a tracer)."""
+    stack = [node]
+    while stack:
+        cur = stack.pop()
+        if isinstance(cur, ast.Attribute) and cur.attr in _STATIC_ATTRS:
+            continue
+        yield cur
+        stack.extend(ast.iter_child_nodes(cur))
+
+
+def _taint_function(fn: ast.AST, aliases: dict[str, str],
+                    seed: set[str] | None = None) -> set[str]:
+    """Names in ``fn``'s body bound (directly or transitively) to
+    device-array-producing expressions.  Single-pass-to-fixpoint over
+    assignments; precise enough because device code is straight-line."""
+    tainted: set[str] = set(seed or ())
+
+    def expr_tainted(node: ast.AST) -> bool:
+        return any(
+            (isinstance(sub, ast.Name) and sub.id in tainted)
+            or _is_device_call(sub, aliases)
+            for sub in _walk_value(node))
+
+    def bind(target: ast.AST):
+        # `x = ...` and `x, y = ...` taint x/y; `obj.attr = ...` and
+        # `obj[i] = ...` do NOT taint obj — attribute granularity is
+        # coarser than name granularity and drowns __init__ in noise
+        if isinstance(target, ast.Name):
+            tainted.add(target.id)
+        elif isinstance(target, (ast.Tuple, ast.List)):
+            for elt in target.elts:
+                bind(elt)
+        elif isinstance(target, ast.Starred):
+            bind(target.value)
+
+    body = fn.body if isinstance(fn.body, list) else [fn.body]
+    changed = True
+    while changed:
+        changed = False
+        before = len(tainted)
+        for node in ast.walk(ast.Module(body=body, type_ignores=[])):
+            if isinstance(node, _FUNC_NODES):
+                continue
+            if isinstance(node, ast.Assign) and expr_tainted(node.value):
+                for t in node.targets:
+                    bind(t)
+            elif isinstance(node, (ast.AugAssign, ast.AnnAssign)) \
+                    and node.value is not None \
+                    and expr_tainted(node.value):
+                bind(node.target)
+            elif isinstance(node, ast.For) and expr_tainted(node.iter):
+                bind(node.target)
+        changed = len(tainted) > before
+    return tainted
+
+
+def _first_line(source_lines: list[str], node: ast.AST) -> str:
+    try:
+        return source_lines[node.lineno - 1].strip()
+    except (IndexError, AttributeError):
+        return ""
+
+
+def _in_device_package(relpath: str) -> bool:
+    return any(f"/{pkg}/" in f"/{relpath}" or relpath.startswith(f"{pkg}/")
+               for pkg in (f"repro/{p}" for p in DEVICE_PACKAGES))
+
+
+def _in_lock_module(relpath: str) -> bool:
+    return any(relpath.endswith(m) or (m.endswith("/") and f"/{m}" in
+               f"/{relpath}") for m in LOCK_MODULES)
+
+
+# ---------------------------------------------------------------- VIEM001
+
+
+def _traced_seed(idx: _ModuleIndex, fn: ast.AST) -> set[str]:
+    """Parameters of a traced function that arrive as tracers:
+    positional params minus static_argnames/argnums and partial-bound
+    keywords; keyword-only params are static config by convention."""
+    args = fn.args
+    seed = {a.arg for a in args.posonlyargs + args.args}
+    return seed - idx.static_params.get(fn, set())
+
+
+def _boundary_nodes(idx: _ModuleIndex) -> set[ast.AST]:
+    """Nodes lexically inside a ``with host_boundary(...)`` block — the
+    documented-transfer marker VIEM001 honors."""
+    guarded: set[ast.AST] = set()
+    for node in ast.walk(idx.tree):
+        if not isinstance(node, ast.With):
+            continue
+        for item in node.items:
+            expr = item.context_expr
+            if isinstance(expr, ast.Call):
+                name = _dotted(expr.func, idx.aliases)
+                if name is not None and (
+                        name == "host_boundary"
+                        or name.endswith(".host_boundary")):
+                    guarded.update(ast.walk(node))
+                    break
+    return guarded
+
+
+def _check_host_sync(idx: _ModuleIndex, relpath: str,
+                     lines: list[str]) -> list[Finding]:
+    if not _in_device_package(relpath):
+        return []
+    out = []
+    aliases = idx.aliases
+    boundary = _boundary_nodes(idx)
+    # per-function taint cache
+    taint_cache: dict[ast.AST, set[str]] = {}
+
+    def taint_for(node: ast.AST) -> set[str]:
+        fn = idx.enclosing_function(node)
+        if fn is None:
+            return set()
+        if fn not in taint_cache:
+            seed = _traced_seed(idx, fn) if fn in idx.traced else set()
+            taint_cache[fn] = _taint_function(fn, aliases, seed)
+        return taint_cache[fn]
+
+    def arg_tainted(call: ast.Call) -> bool:
+        names = taint_for(call)
+        return any(
+            (isinstance(sub, ast.Name) and sub.id in names)
+            or _is_device_call(sub, aliases)
+            for a in call.args for sub in _walk_value(a))
+
+    for node in ast.walk(idx.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        name = _dotted(node.func, aliases)
+        traced = idx.in_traced_scope(node)
+        if not traced and node in boundary \
+                and name not in _HOST_TIMING:
+            continue            # documented, transfer-guard-scoped site
+        if name in _HOST_TIMING:
+            out.append(Finding(
+                "VIEM001", relpath, node.lineno, node.col_offset,
+                f"host timing ({name}) in a device module — wall-clock "
+                "belongs to tracer spans at the session layer",
+                _first_line(lines, node)))
+        elif isinstance(node.func, ast.Attribute) \
+                and node.func.attr == "item" and not node.args:
+            out.append(Finding(
+                "VIEM001", relpath, node.lineno, node.col_offset,
+                ".item() forces a device->host sync" +
+                (" inside a traced function" if traced else
+                 " on the hot path"),
+                _first_line(lines, node)))
+        elif name in ("float", "int", "bool") and len(node.args) == 1 \
+                and not isinstance(node.args[0], ast.Constant):
+            # in traced scopes the taint seed is the parameter list, so
+            # arg_tainted() covers both hazards
+            if arg_tainted(node):
+                out.append(Finding(
+                    "VIEM001", relpath, node.lineno, node.col_offset,
+                    f"{name}() on a device value blocks on the transfer "
+                    "stream — keep it a jnp scalar or read back at a "
+                    "documented host boundary",
+                    _first_line(lines, node)))
+        elif name is not None and name.startswith("numpy."):
+            if traced:
+                out.append(Finding(
+                    "VIEM001", relpath, node.lineno, node.col_offset,
+                    f"host numpy ({name}) inside a traced function — "
+                    "the tracer will constant-fold or sync; use jnp",
+                    _first_line(lines, node)))
+            elif arg_tainted(node):
+                out.append(Finding(
+                    "VIEM001", relpath, node.lineno, node.col_offset,
+                    f"{name} on a device value is an implicit "
+                    "device->host transfer — wrap the documented "
+                    "boundary in host_boundary() or keep it on device",
+                    _first_line(lines, node)))
+    return out
+
+
+# ---------------------------------------------------------------- VIEM002
+
+
+def _free_locals_of_callable(target: ast.AST, enclosing: ast.AST,
+                             idx: _ModuleIndex) -> set[str]:
+    """Names the callable reads that are bound in ``enclosing``'s scope
+    (params or locals) — the closure that forces a retrace per call."""
+    if isinstance(enclosing, ast.Module):
+        return set()
+    args = enclosing.args
+    bound = {a.arg for a in
+             args.posonlyargs + args.args + args.kwonlyargs}
+    if args.vararg:
+        bound.add(args.vararg.arg)
+    if args.kwarg:
+        bound.add(args.kwarg.arg)
+    body = enclosing.body if isinstance(enclosing.body, list) \
+        else [enclosing.body]
+    for node in ast.walk(ast.Module(body=body, type_ignores=[])):
+        if isinstance(node, ast.Assign):
+            for t in node.targets:
+                for sub in ast.walk(t):
+                    if isinstance(sub, ast.Name):
+                        bound.add(sub.id)
+        elif isinstance(node, (ast.AugAssign, ast.AnnAssign, ast.For)):
+            tgt = getattr(node, "target", None)
+            if tgt is not None:
+                for sub in ast.walk(tgt):
+                    if isinstance(sub, ast.Name):
+                        bound.add(sub.id)
+    if isinstance(target, ast.Lambda):
+        own = {a.arg for a in target.args.posonlyargs + target.args.args
+               + target.args.kwonlyargs}
+        reads = {n.id for n in ast.walk(target.body)
+                 if isinstance(n, ast.Name)
+                 and isinstance(n.ctx, ast.Load)}
+    elif isinstance(target, (ast.FunctionDef, ast.AsyncFunctionDef)):
+        own = {a.arg for a in target.args.posonlyargs + target.args.args
+               + target.args.kwonlyargs}
+        reads = set()
+        for stmt in target.body:
+            reads |= {n.id for n in ast.walk(stmt)
+                      if isinstance(n, ast.Name)
+                      and isinstance(n.ctx, ast.Load)}
+    else:
+        return set()
+    return (reads - own) & bound
+
+
+def _check_retrace(idx: _ModuleIndex, relpath: str,
+                   lines: list[str]) -> list[Finding]:
+    out = []
+    for node in ast.walk(idx.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        # vmap alone is conventional eager style; only jit pays a full
+        # trace+compile per call
+        name = _dotted(node.func, idx.aliases)
+        if name not in ("jax.jit", "jit"):
+            continue
+        enclosing = idx.enclosing_function(node)
+        if enclosing is None or isinstance(enclosing, ast.Lambda):
+            continue
+        fname = enclosing.name
+        if fname in _BUILDER_EXACT or fname.startswith("_lower") \
+                or any(f in fname for f in _BUILDER_FRAGMENTS):
+            continue
+        if not node.args:
+            continue
+        target = node.args[0]
+        if isinstance(target, ast.Name):
+            target = idx.lookup_def(target.id, node) or target
+        free = _free_locals_of_callable(target, enclosing, idx)
+        if free:
+            out.append(Finding(
+                "VIEM002", relpath, node.lineno, node.col_offset,
+                f"{name}() inside {fname}() closes over per-call locals "
+                f"({', '.join(sorted(free))}) — every call retraces; "
+                "hoist to a cached builder or pass them as "
+                "jnp.int32/jnp.bool_ runtime operands (the "
+                "tabu/telemetry toggle convention)",
+                _first_line(lines, node)))
+    return out
+
+
+# ---------------------------------------------------------------- VIEM003
+
+
+def _check_traced_control_flow(idx: _ModuleIndex, relpath: str,
+                               lines: list[str]) -> list[Finding]:
+    out = []
+    device_mod = _in_device_package(relpath)
+    for fn in ast.walk(idx.tree):
+        if not isinstance(fn, _FUNC_NODES) or isinstance(fn, ast.Lambda):
+            continue
+        traced = fn in idx.traced
+        if not traced and not device_mod:
+            continue
+        seed = _traced_seed(idx, fn) if traced else set()
+        tainted = _taint_function(fn, idx.aliases, seed)
+        if not tainted:
+            continue
+        for node in ast.walk(ast.Module(
+                body=list(fn.body) if isinstance(fn.body, list)
+                else [fn.body], type_ignores=[])):
+            if isinstance(node, _FUNC_NODES):
+                continue
+            if not isinstance(node, (ast.If, ast.While)):
+                continue
+            test = node.test
+            # `x is None` / `x is not None` is a trace-time shape
+            # dispatch, not a value branch — the idiomatic static gate;
+            # so is comparison against a string constant (tracers are
+            # never strings)
+            if isinstance(test, ast.Compare):
+                if len(test.ops) == 1 \
+                        and isinstance(test.ops[0], (ast.Is, ast.IsNot)):
+                    continue
+                operands = [test.left, *test.comparators]
+                if any(isinstance(o, ast.Constant)
+                       and isinstance(o.value, str) for o in operands):
+                    continue
+            hit = None
+            for sub in _walk_value(test):
+                if isinstance(sub, ast.Name) and sub.id in tainted:
+                    hit = sub.id
+                    break
+                if _is_device_call(sub, idx.aliases):
+                    hit = _dotted(sub.func, idx.aliases)
+                    break
+            if hit is not None:
+                kind = "while" if isinstance(node, ast.While) else "if"
+                where = "a traced function" if traced \
+                    else "a device module"
+                out.append(Finding(
+                    "VIEM003", relpath, node.lineno, node.col_offset,
+                    f"Python `{kind}` on traced value `{hit}` in "
+                    f"{where} — concretizes the tracer (or syncs); use "
+                    "lax.cond/jnp.where or hoist to a static argument",
+                    _first_line(lines, node)))
+    return out
+
+
+# ---------------------------------------------------------------- VIEM004
+
+
+@dataclass
+class _AttrAccess:
+    node: ast.Attribute
+    method: str
+    guarded: bool
+    is_store: bool
+
+
+def _check_lock_discipline(idx: _ModuleIndex, relpath: str,
+                           lines: list[str]) -> list[Finding]:
+    if not _in_lock_module(relpath):
+        return []
+    out = []
+    for cls in ast.walk(idx.tree):
+        if not isinstance(cls, ast.ClassDef):
+            continue
+        lock_attrs: set[str] = set()
+        for node in ast.walk(cls):
+            if isinstance(node, ast.Assign) and len(node.targets) == 1:
+                t = node.targets[0]
+                if isinstance(t, ast.Attribute) \
+                        and isinstance(t.value, ast.Name) \
+                        and t.value.id == "self":
+                    vname = _dotted(node.value.func, idx.aliases) \
+                        if isinstance(node.value, ast.Call) else None
+                    if vname in _LOCK_FACTORIES or \
+                            ("lock" in t.attr.lower()
+                             and not isinstance(node.value,
+                                                ast.Constant)):
+                        lock_attrs.add(t.attr)
+        if not lock_attrs:
+            continue
+
+        # every `self.X` access in every method, tagged by whether an
+        # enclosing `with self.<lock>` guards it
+        accesses: dict[str, list[_AttrAccess]] = {}
+        data_attrs: set[str] = set()
+
+        def _is_lock_ctx(expr: ast.AST) -> bool:
+            return (isinstance(expr, ast.Attribute)
+                    and isinstance(expr.value, ast.Name)
+                    and expr.value.id == "self"
+                    and expr.attr in lock_attrs)
+
+        for method in cls.body:
+            if not isinstance(method, (ast.FunctionDef,
+                                       ast.AsyncFunctionDef)):
+                continue
+            guarded_nodes: set[ast.AST] = set()
+            for node in ast.walk(method):
+                if isinstance(node, ast.With) and any(
+                        _is_lock_ctx(item.context_expr)
+                        for item in node.items):
+                    for sub in ast.walk(node):
+                        guarded_nodes.add(sub)
+            for node in ast.walk(method):
+                if isinstance(node, ast.Attribute) \
+                        and isinstance(node.value, ast.Name) \
+                        and node.value.id == "self" \
+                        and node.attr not in lock_attrs:
+                    is_store = isinstance(node.ctx,
+                                          (ast.Store, ast.Del))
+                    parent = idx.parent.get(node)
+                    if isinstance(parent, ast.Call) \
+                            and parent.func is node:
+                        continue        # method call, not a data access
+                    if is_store:
+                        data_attrs.add(node.attr)
+                    accesses.setdefault(node.attr, []).append(
+                        _AttrAccess(node, method.name,
+                                    node in guarded_nodes, is_store))
+
+        for attr, accs in accesses.items():
+            if attr not in data_attrs:
+                continue                # never assigned in this class
+            outside_init = [a for a in accs
+                            if a.method not in ("__init__",)
+                            and not a.method.endswith("_locked")]
+            # lock-managed = touched under the lock AND rebound after
+            # __init__; attributes only ever *called* through (Queue,
+            # deque) synchronize themselves and stay exempt
+            if not any(a.guarded for a in outside_init) \
+                    or not any(a.is_store for a in outside_init):
+                continue
+            for a in outside_init:
+                if not a.guarded:
+                    what = "write" if a.is_store else "read"
+                    out.append(Finding(
+                        "VIEM004", relpath, a.node.lineno,
+                        a.node.col_offset,
+                        f"self.{attr} is lock-managed elsewhere in "
+                        f"{cls.name} but this {what} in {a.method}() "
+                        "runs outside the lock — take the lock (RLock "
+                        "re-enters) or rename the method *_locked",
+                        _first_line(lines, a.node)))
+    return out
+
+
+# ----------------------------------------------------------------- driver
+
+
+RULE_IDS = ("VIEM001", "VIEM002", "VIEM003", "VIEM004")
+
+_CHECKS = (
+    _check_host_sync,
+    _check_retrace,
+    _check_traced_control_flow,
+    _check_lock_discipline,
+)
+
+
+def analyze_source(source: str, relpath: str,
+                   rules: tuple[str, ...] = RULE_IDS) -> list[Finding]:
+    """Run every enabled rule over one module's source text."""
+    try:
+        tree = ast.parse(source)
+    except SyntaxError as exc:
+        return [Finding("VIEM000", relpath, exc.lineno or 1, 0,
+                        f"syntax error: {exc.msg}")]
+    aliases = _collect_aliases(tree)
+    idx = _ModuleIndex(tree, aliases)
+    lines = source.splitlines()
+    findings: list[Finding] = []
+    for check, rule in zip(_CHECKS, RULE_IDS):
+        if rule in rules:
+            findings.extend(check(idx, relpath, lines))
+    findings.sort(key=lambda f: (f.line, f.col, f.rule))
+    return findings

@@ -1,3 +1,5 @@
+import os
+
 import jax
 import numpy as np
 import pytest
@@ -5,6 +7,24 @@ import pytest
 # Tests run on the single CPU device; the 512-device forcing happens ONLY
 # in launch/dryrun.py (and the dedicated subprocess tests), never here.
 jax.config.update("jax_platforms", "cpu")
+
+# Sanitizer lane (CI `sanitizers` job): the suite runs with
+# JAX_TRANSFER_GUARD=disallow and JAX_NUMPY_RANK_PROMOTION=raise.
+# Test bodies themselves transfer freely by design (np fixtures,
+# float() asserts), so an autouse fixture scopes an allow around each
+# test; the *library* discipline is enforced by tests/test_sanitizers.py,
+# which re-arms disallow around the plan execute paths so only
+# host_boundary() scopes may transfer.
+_SANITIZE = (os.environ.get("VIEM_SANITIZE") == "1"
+             or os.environ.get("JAX_TRANSFER_GUARD") == "disallow")
+
+if _SANITIZE:
+    jax.config.update("jax_numpy_rank_promotion", "raise")
+    # Collection-time module constants (PRNGKeys, smoke tensors) and
+    # worker threads transfer by design, so the process default reverts
+    # to allow; test_sanitizers.py re-arms disallow as a *context*
+    # around the library paths whose discipline is under test.
+    jax.config.update("jax_transfer_guard", "allow")
 
 
 @pytest.fixture(scope="session")

@@ -1,0 +1,73 @@
+"""Transfer-guard discipline of the core execute paths.
+
+Under ``jax.transfer_guard("disallow")`` every *implicit* host<->device
+transfer raises; the library's deliberate crossings are scoped with
+:func:`repro.runtime.boundary.host_boundary`, so the device engine's
+lower/execute/execute_warm/execute_batch paths must run clean with the
+guard armed.  A new implicit transfer anywhere on these paths (a stray
+``np.asarray`` readback, a Python-scalar promotion in eager jnp code)
+fails these tests — the runtime counterpart of the VIEM001 lint rule.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import (Hierarchy, Mapper, MappingSpec, MultilevelSpec,
+                        grid3d)
+
+H64 = Hierarchy((4, 4, 4), (1.0, 10.0, 100.0))
+
+
+def _dev_spec(**kw):
+    base = dict(construction="random", neighborhood="communication",
+                neighborhood_dist=2, preconfiguration="fast",
+                engine="device", seed=1)
+    base.update(kw)
+    return MappingSpec(**base)
+
+
+@pytest.fixture()
+def plan():
+    g = grid3d(4, 4, 4)
+    # lower (compiles) outside the guard: XLA constant staging is not
+    # the discipline under test, the steady-state execute path is
+    mapper = Mapper(H64, _dev_spec())
+    return g, mapper.lower_for(g)
+
+
+def test_execute_transfer_clean(plan):
+    g, p = plan
+    p.execute(g)                                  # warm the executable
+    with jax.transfer_guard("disallow"):
+        r = p.execute(g)
+    assert r.final_objective <= r.initial_objective
+
+
+def test_execute_warm_transfer_clean(plan):
+    g, p = plan
+    r0 = p.execute(g)
+    with jax.transfer_guard("disallow"):
+        r = p.execute_warm(g, r0.perm.copy())
+    assert r.final_objective <= r0.final_objective
+
+
+def test_execute_batch_transfer_clean(plan):
+    g, p = plan
+    graphs = [g, grid3d(4, 4, 4)]
+    p.execute_batch(graphs)                       # warm
+    with jax.transfer_guard("disallow"):
+        rs = p.execute_batch(graphs)
+    assert len(rs) == 2
+    for r in rs:
+        assert r.final_objective <= r.initial_objective
+
+
+def test_multilevel_execute_transfer_clean():
+    g = grid3d(4, 4, 4)
+    spec = _dev_spec(multilevel=MultilevelSpec(levels=3, coarsen_min=8))
+    p = Mapper(H64, spec).lower_for(g)
+    p.execute(g)                                  # warm
+    with jax.transfer_guard("disallow"):
+        r = p.execute(g)
+    assert np.array_equal(np.sort(r.perm), np.arange(g.n))

@@ -1,0 +1,310 @@
+"""The invariant lint engine (`viem lint`) and the jaxpr audit.
+
+Per-rule fixtures run the analyzer over small source snippets — one
+triggering, one clean, one suppressed — so a rule regression fails here
+before it floods a real module with findings.  The audit tests lower the
+registered construction x topology grid (the same sweep the CI
+staticcheck job runs) and prove the engine jaxprs carry no host
+callbacks or dtype drift.  A threaded stress test locks in the VIEM004
+fix in ``obs.metrics.Histogram``.
+"""
+
+import threading
+
+import pytest
+
+from repro.staticcheck import analyze_source, lint_paths, LintConfig
+from repro.staticcheck.engine import lint_source
+from repro.staticcheck.jaxpr_audit import check_jaxpr, run_audit
+from repro.staticcheck.rules import RULE_IDS
+
+DEV = "src/repro/engine/snippet.py"      # device-package relpath
+HOST = "src/repro/cli/snippet.py"        # non-device relpath
+LOCKED = "src/repro/obs/metrics.py"      # lock-discipline module
+
+
+def _rules(source, relpath=DEV, rules=RULE_IDS):
+    return [f.rule for f in analyze_source(source, relpath, rules)]
+
+
+# ------------------------------------------------------------- VIEM001
+SYNC_TRIGGER = """\
+import numpy as np
+
+def readback(x):
+    import jax.numpy as jnp
+    y = jnp.abs(x)
+    return np.asarray(y)
+"""
+
+SYNC_CLEAN = """\
+import numpy as np
+from repro.runtime.boundary import host_boundary
+
+def readback(x):
+    import jax.numpy as jnp
+    y = jnp.abs(x)
+    with host_boundary("engine.readback"):
+        return np.asarray(y)
+"""
+
+SYNC_ITEM = """\
+def readback(x):
+    import jax.numpy as jnp
+    return jnp.abs(x).item()
+"""
+
+SYNC_TIMING = """\
+import time
+
+def profile(x):
+    import jax.numpy as jnp
+    def body(v):
+        t0 = time.perf_counter()
+        return jnp.abs(v)
+    return jax.jit(body)(x)
+"""
+
+
+def test_viem001_flags_np_readback():
+    assert "VIEM001" in _rules(SYNC_TRIGGER)
+
+
+def test_viem001_exempts_host_boundary():
+    assert "VIEM001" not in _rules(SYNC_CLEAN)
+
+
+def test_viem001_flags_item():
+    assert "VIEM001" in _rules(SYNC_ITEM)
+
+
+def test_viem001_flags_timing_in_traced_scope():
+    assert "VIEM001" in _rules(SYNC_TIMING)
+
+
+def test_viem001_only_in_device_packages():
+    assert "VIEM001" not in _rules(SYNC_TRIGGER, relpath=HOST)
+
+
+def test_viem001_static_attrs_do_not_taint():
+    src = ("def f(x):\n"
+           "    import jax.numpy as jnp\n"
+           "    n = jnp.abs(x).shape[0]\n"
+           "    return float(n)\n")
+    assert "VIEM001" not in _rules(src)
+
+
+# ------------------------------------------------------------- VIEM002
+RETRACE_TRIGGER = """\
+import jax
+
+def serve(params, tokens, cfg):
+    step = jax.jit(lambda p, t: p[0] * t * cfg.scale)
+    return step(params, tokens)
+"""
+
+RETRACE_CLEAN = """\
+import functools
+import jax
+
+@functools.lru_cache(maxsize=8)
+def _compiled_step(cfg):
+    return jax.jit(functools.partial(_step, cfg=cfg))
+
+def serve(params, tokens, cfg):
+    return _compiled_step(cfg)(params, tokens)
+"""
+
+
+def test_viem002_flags_jit_closure_in_function():
+    assert "VIEM002" in _rules(RETRACE_TRIGGER, relpath=HOST)
+
+
+def test_viem002_accepts_cached_builder():
+    assert "VIEM002" not in _rules(RETRACE_CLEAN, relpath=HOST)
+
+
+# ------------------------------------------------------------- VIEM003
+CONTROL_TRIGGER = """\
+def refine(x):
+    import jax.numpy as jnp
+    g = jnp.sum(x)
+    if g > 0:
+        return g
+    return -g
+"""
+
+CONTROL_CLEAN = """\
+def refine(x):
+    import jax.numpy as jnp
+    g = jnp.sum(x)
+    return jnp.where(g > 0, g, -g)
+"""
+
+
+def test_viem003_flags_python_branch_on_traced():
+    assert "VIEM003" in _rules(CONTROL_TRIGGER)
+
+
+def test_viem003_accepts_where():
+    assert "VIEM003" not in _rules(CONTROL_CLEAN)
+
+
+def test_viem003_allows_string_dispatch():
+    src = ("def f(kind, x):\n"
+           "    import jax.numpy as jnp\n"
+           "    y = jnp.abs(x)\n"
+           "    if kind == 'matrix':\n"
+           "        return y\n"
+           "    return -y\n")
+    assert "VIEM003" not in _rules(src)
+
+
+# ------------------------------------------------------------- VIEM004
+LOCK_TRIGGER = """\
+import threading
+
+class Counter:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.total = 0
+
+    def inc(self):
+        with self._lock:
+            self.total += 1
+
+    def read(self):
+        return self.total
+"""
+
+LOCK_CLEAN = """\
+import threading
+
+class Counter:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.total = 0
+
+    def inc(self):
+        with self._lock:
+            self.total += 1
+
+    def read(self):
+        with self._lock:
+            return self.total
+"""
+
+
+def test_viem004_flags_unguarded_read():
+    assert "VIEM004" in _rules(LOCK_TRIGGER, relpath=LOCKED)
+
+
+def test_viem004_accepts_guarded_read():
+    assert "VIEM004" not in _rules(LOCK_CLEAN, relpath=LOCKED)
+
+
+def test_viem004_scoped_to_lock_modules():
+    assert "VIEM004" not in _rules(LOCK_TRIGGER, relpath=HOST)
+
+
+# ------------------------------------------------------- suppressions
+def test_noqa_suppresses_with_justification():
+    src = SYNC_TRIGGER.replace(
+        "return np.asarray(y)",
+        "return np.asarray(y)  "
+        "# viem: noqa[VIEM001] tested allclose sweep, host on purpose")
+    findings = lint_source(src, DEV)
+    assert all(f.suppressed for f in findings if f.rule == "VIEM001")
+    sup = [f for f in findings if f.suppressed]
+    assert sup and all(f.justification for f in sup)
+
+
+def test_noqa_other_rule_does_not_suppress():
+    src = SYNC_TRIGGER.replace(
+        "return np.asarray(y)",
+        "return np.asarray(y)  # viem: noqa[VIEM003] wrong rule")
+    findings = lint_source(src, DEV)
+    assert any(f.rule == "VIEM001" and not f.suppressed for f in findings)
+
+
+def test_baseline_fingerprint_suppresses():
+    clean = lint_source(SYNC_TRIGGER, DEV)
+    fps = {f.fingerprint() for f in clean}
+    based = lint_source(SYNC_TRIGGER, DEV, baseline=fps)
+    assert based and all(f.suppressed for f in based)
+
+
+def test_repo_is_lint_clean():
+    """The shipping tree has zero unsuppressed findings (the CI
+    staticcheck job's blocking condition)."""
+    import pathlib
+    root = pathlib.Path(__file__).resolve().parents[1]
+    result = lint_paths(LintConfig(paths=("src",)), root=root)
+    assert result.active == [], [f.fingerprint() for f in result.active]
+    assert result.unjustified == []
+
+
+# ------------------------------------------------------------ jaxpr audit
+def test_check_jaxpr_flags_callbacks_and_dtype():
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    def cb(x):
+        result_shape = jax.ShapeDtypeStruct(x.shape, x.dtype)
+        return jax.pure_callback(lambda v: np.asarray(v), result_shape, x)
+
+    bad = jax.make_jaxpr(cb)(jnp.zeros((4,), jnp.float32))
+    assert any("pure_callback" in p for p in check_jaxpr(bad))
+
+    good = jax.make_jaxpr(lambda x: jnp.sum(x * 2))(
+        jnp.zeros((4,), jnp.float32))
+    assert check_jaxpr(good) == []
+    assert check_jaxpr(good, acc_dtype="float64")   # f32 ops vs f64 plan
+
+
+@pytest.mark.parametrize("topology", ["tree", "torus", "fattree",
+                                      "dragonfly", "matrix"])
+def test_jaxpr_audit_topology_lane(topology):
+    report = run_audit(topologies=[topology])
+    assert report["ok"], report["entries"]
+    ok = [e for e in report["entries"] if e["status"] == "ok"]
+    assert ok, report["entries"]    # at least one construction lowered
+
+
+# ------------------------------------------------- VIEM004 regression
+def test_histogram_snapshot_thread_safe():
+    """obs.metrics.Histogram: snapshot() sorts the recent-window deque;
+    pre-fix that ran unlocked against observe() appends and raised
+    'deque mutated during iteration' under contention."""
+    from repro.obs.metrics import Histogram
+
+    h = Histogram(threading.RLock(), window=4096)
+    stop = threading.Event()
+    errors: list[Exception] = []
+
+    def writer():
+        i = 0
+        while not stop.is_set():
+            h.observe(i * 0.001)
+            i += 1
+
+    def reader():
+        while not stop.is_set():
+            try:
+                h.snapshot()
+            except Exception as exc:            # pragma: no cover
+                errors.append(exc)
+                stop.set()
+
+    threads = [threading.Thread(target=writer) for _ in range(2)] + \
+              [threading.Thread(target=reader) for _ in range(2)]
+    for t in threads:
+        t.start()
+    stop.wait(1.0)
+    stop.set()
+    for t in threads:
+        t.join()
+    assert errors == []
+    snap = h.snapshot()
+    assert snap["count"] > 0
